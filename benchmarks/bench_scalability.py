@@ -1,0 +1,31 @@
+"""Fig 22/23 — scalability: query time vs dataset size and dimensions."""
+import numpy as np
+
+from benchmarks.common import Csv, gaussmix, timeit, us
+from repro.core.index import HostExecutor, build_index
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    # ------- Fig 22: size scaling
+    for n in (2000, 8000, 32000):
+        x, _ = gaussmix(n=n, d=8, k=8)
+        tree, perm, _ = build_index(x, min_leaf=32, max_leaf=1024,
+                                    dpc_max_clusters=8)
+        ex = HostExecutor(tree, x[perm])
+        qrows = rng.integers(0, n, 10)
+        tq, _ = timeit(lambda: [ex.knn(x[perm][qi], 10)[0]
+                                for qi in qrows], repeat=2)
+        csv.add(f"fig22/knn_size_n{n}/MQRLD", us(tq / 10),
+                f"leaves={len(tree.leaf_ids)};depth={tree.max_depth()}")
+    # ------- Fig 23: dimension scaling
+    for d in (3, 8, 16):
+        x, _ = gaussmix(n=8000, d=d, k=8)
+        tree, perm, _ = build_index(x, min_leaf=32, max_leaf=1024,
+                                    dpc_max_clusters=8)
+        ex = HostExecutor(tree, x[perm])
+        qrows = rng.integers(0, len(x), 10)
+        tq, _ = timeit(lambda: [ex.knn(x[perm][qi], 10)[0]
+                                for qi in qrows], repeat=2)
+        csv.add(f"fig23/knn_dim_d{d}/MQRLD", us(tq / 10),
+                f"leaves={len(tree.leaf_ids)}")

@@ -1,0 +1,59 @@
+"""Fig 10/11 — hyperspace transformation: construction cost scaling and
+query-time/recall uplift (Initialized_T vs Optimized_T via MORBO)."""
+import numpy as np
+
+from benchmarks.common import Csv, gaussmix, timeit, us
+from repro.core import query as Q
+from repro.core.lake import MMOTable
+from repro.core.morbo import morbo_minimize
+from repro.core.platform import MQRLD
+from repro.core.transform import init_transform
+
+
+def run(csv: Csv):
+    # ---- Fig 10: T construction cost vs dataset size
+    for n in (2000, 8000, 32000):
+        x, _ = gaussmix(n=n, d=16, k=8)
+        tc, _ = timeit(init_transform, x, repeat=1)
+        tt, t = timeit(lambda: init_transform(x).apply(x), repeat=1)
+        csv.add(f"fig10/T_construct_n{n}", us(tc), "")
+        csv.add(f"fig10/DxT_apply_n{n}", us(tt), "")
+
+    # ---- Fig 11: query uplift raw vs Init_T vs Opt_T (small MORBO budget)
+    rng = np.random.default_rng(0)
+    n = 3000
+    x, _ = gaussmix(n=n, d=8, k=8, spread=4.0, seed=2)
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    table = MMOTable("tfm").add_vector("v", x).add_numeric("price", price)
+    workload = [Q.VK.of("v", x[i], 10) for i in rng.integers(0, n, 6)]
+
+    def measure(p):
+        cbrs, times = [], []
+        for q in workload:
+            _, st = p.execute(q, record=False)
+            cbrs.append(st.cbr)
+            times.append(st.time_s)
+        return float(np.mean(times)), float(np.mean(cbrs))
+
+    p = MQRLD(table, seed=0)
+    p.prepare(use_transform=False, use_lpgf=False, min_leaf=16,
+              max_leaf=512)
+    t_raw, cbr_raw = measure(p)
+    csv.add("fig11/query/raw", us(t_raw), f"cbr={cbr_raw:.3f}")
+
+    p.prepare(use_transform=True, use_lpgf=False, min_leaf=16, max_leaf=512)
+    t_init, cbr_init = measure(p)
+    csv.add("fig11/query/Initialized_T", us(t_init), f"cbr={cbr_init:.3f}")
+
+    # Optimized_T: MORBO over (theta[2], delta[2]) with the QBS objectives
+    f = p.objectives_for_morbo(workload)
+    res = morbo_minimize(f, (np.array([-0.5, -0.5, -0.5, -0.5]),
+                             np.array([0.5, 0.5, 0.5, 0.5])),
+                         n_objectives=3, n_init=4, iters=2, n_tr=1,
+                         batch=2, n_cand=32, seed=0)
+    best = res.best_scalarized([0.2, 0.6, 0.2])
+    p.prepare(use_transform=True, use_lpgf=False, min_leaf=16,
+              max_leaf=512, theta=best[:2], delta_scales=best[2:])
+    t_opt, cbr_opt = measure(p)
+    csv.add("fig11/query/Optimized_T", us(t_opt),
+            f"cbr={cbr_opt:.3f};pareto={int(res.pareto.sum())}")

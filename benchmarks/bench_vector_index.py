@@ -1,0 +1,33 @@
+"""Fig 16 — vector-similarity-index uplift from the optimized layout
+(Evaluation 3): IVF and LSH query time + recall on original vs T+LPGF."""
+import numpy as np
+
+from benchmarks.baselines import IVFIndex, LSHIndex
+from benchmarks.common import Csv, gaussmix, recall, timeit, us
+from repro.core.lpgf import lpgf
+from repro.core.transform import init_transform
+
+
+def run(csv: Csv):
+    x, _ = gaussmix(n=6000, d=16, k=8, spread=5.0)
+    t = init_transform(x)
+    datasets = {"Original": x,
+                "T+LPGF": np.asarray(lpgf(t.apply(x), iters=1), np.float32)}
+    rng = np.random.default_rng(0)
+    qidx = rng.integers(0, len(x), 25)
+    for dname, data in datasets.items():
+        truth = {}
+        for qi in qidx:
+            d2 = ((data - data[qi]) ** 2).sum(1)
+            truth[qi] = np.argsort(d2)[:10]
+        for iname, idx in (("IVF", IVFIndex(data, nlist=32, nprobe=4)),
+                           ("LSH", LSHIndex(data, n_tables=8, n_bits=10))):
+            def qall():
+                recs = []
+                for qi in qidx:
+                    found = idx.knn(data[qi], 10)
+                    recs.append(recall(found, truth[qi]))
+                return float(np.mean(recs))
+            tq, rec = timeit(qall, repeat=2)
+            csv.add(f"fig16/{iname}/{dname}", us(tq / len(qidx)),
+                    f"recall@10={rec:.3f}")

@@ -1,0 +1,108 @@
+"""Shared benchmark utilities: datasets (paper §7.1 scaled to CPU),
+timing, and metrics.
+
+Scale adaptation: the paper runs 0.3M-210M records on a Spark cluster; the
+CPU container uses 4-50k records with identical protocols (selectivities,
+K values, query generation) — the comparisons are relative, matching the
+paper's claims rather than its absolute wall-times.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+
+# ------------------------------------------------------------------ datasets
+def gaussmix(n: int = 8000, d: int = 8, k: int = 8, seed: int = 0,
+             spread: float = 6.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)).astype(np.float32) * spread
+    lab = rng.integers(0, k, n)
+    x = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    return x, lab
+
+
+def uniform(n: int = 8000, d: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-10, 10, (n, d)).astype(np.float32), None
+
+
+def skewed(n: int = 8000, d: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.lognormal(0.0, 1.0, (n, d)).astype(np.float32)
+    return x * np.sign(rng.normal(size=(n, d))), None
+
+
+DATASETS = {"GaussMix": gaussmix, "Uniform": uniform, "Skewed": skewed}
+
+
+# ------------------------------------------------------------------ timing
+def timeit(fn: Callable, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
+    out = None
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def us(seconds: float) -> float:
+    return seconds * 1e6
+
+
+# ------------------------------------------------------------------ metrics
+def calinski_harabasz(x: np.ndarray, labels: np.ndarray) -> float:
+    n = len(x)
+    uniq = np.unique(labels)
+    k = len(uniq)
+    if k < 2:
+        return 0.0
+    mean = x.mean(0)
+    b = sum((labels == u).sum() * np.sum((x[labels == u].mean(0) - mean) ** 2)
+            for u in uniq)
+    w = sum(np.sum((x[labels == u] - x[labels == u].mean(0)) ** 2)
+            for u in uniq)
+    return float((b / max(k - 1, 1)) / max(w / max(n - k, 1), 1e-12))
+
+
+def nmi(a: np.ndarray, b: np.ndarray) -> float:
+    """Normalized mutual information between two labelings."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    ua, ia = np.unique(a, return_inverse=True)
+    ub, ib = np.unique(b, return_inverse=True)
+    n = len(a)
+    cm = np.zeros((len(ua), len(ub)))
+    np.add.at(cm, (ia, ib), 1)
+    pij = cm / n
+    pi = pij.sum(1, keepdims=True)
+    pj = pij.sum(0, keepdims=True)
+    nz = pij > 0
+    mi = float(np.sum(pij[nz] * np.log(pij[nz] / (pi @ pj)[nz])))
+    ha = -float(np.sum(pi[pi > 0] * np.log(pi[pi > 0])))
+    hb = -float(np.sum(pj[pj > 0] * np.log(pj[pj > 0])))
+    return mi / max(np.sqrt(ha * hb), 1e-12)
+
+
+def recall(found: np.ndarray, truth: np.ndarray) -> float:
+    t = set(np.asarray(truth).tolist())
+    if not t:
+        return 1.0
+    return len(set(np.asarray(found).tolist()) & t) / len(t)
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, t, d in self.rows:
+            print(f"{name},{t:.1f},{d}")

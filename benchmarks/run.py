@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (paper-protocol benchmarks at CPU
+scale; see benchmarks/common.py for the scale adaptation note).
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.common import Csv
+    from benchmarks import (bench_ablation, bench_cbr, bench_cdf,
+                            bench_clustering, bench_highdim, bench_hybrid,
+                            bench_learned_index, bench_measurement,
+                            bench_range_knn, bench_scalability,
+                            bench_transform, bench_vector_index)
+    modules = [
+        ("table6", bench_clustering),
+        ("fig7", bench_measurement),
+        ("fig10_11", bench_transform),
+        ("fig14", bench_cdf),
+        ("fig15", bench_learned_index),
+        ("fig16", bench_vector_index),
+        ("fig19_20", bench_range_knn),
+        ("fig21", bench_cbr),
+        ("fig22_23", bench_scalability),
+        ("fig24", bench_hybrid),
+        ("fig25_26", bench_highdim),
+        ("fig27", bench_ablation),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        mod.run(csv)
+        csv.add(f"_meta/{name}/wall_s", (time.time() - t0) * 1e6, "")
+        csv.emit()
+        csv.rows.clear()
+
+
+if __name__ == "__main__":
+    main()

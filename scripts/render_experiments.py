@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/*.json."""
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | GiB/dev | compile s | collectives (counts) |",
+           "|---|---|---|---:|---:|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        cc = r.get("hlo", {}).get("collective_counts", {})
+        ccs = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in
+                       sorted(cc.items()))
+        out.append(f"| {a} | {s} | {m} | "
+                   f"{fmt_bytes(r['memory']['peak_per_device_bytes'])} | "
+                   f"{r['compile_s']} | {ccs} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_comp s | t_mem s | t_coll s | bneck | "
+           "frac | useful | MODEL_FLOPS | HLO_FLOPs/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|---:|"]
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {a} | {s} | {rl['t_compute']:.3f} | {rl['t_memory']:.3f} | "
+            f"{rl['t_collective']:.3f} | {rl['bottleneck']} | "
+            f"{rl['roofline_fraction']:.3f} | {rl['useful_ratio']:.3f} | "
+            f"{rl['model_flops']:.2e} | {rl['flops_per_dev']:.2e} |")
+    return "\n".join(out)
+
+
+def compare(base, opt):
+    out = ["| cell | metric | baseline | optimized | change |",
+           "|---|---|---:|---:|---:|"]
+    for key, ro in sorted(opt.items()):
+        a, s, m = key
+        rb = base.get(key)
+        if rb is None or "roofline" not in ro:
+            continue
+        for metric, fmt in (("t_compute", "{:.3f}"), ("t_memory", "{:.3f}"),
+                            ("t_collective", "{:.3f}"),
+                            ("roofline_fraction", "{:.4f}")):
+            b = rb["roofline"][metric]
+            o = ro["roofline"][metric]
+            chg = (f"{b/o:.1f}x better" if metric != "roofline_fraction"
+                   and o < b and o > 0 else
+                   f"{o/b:.1f}x better" if metric == "roofline_fraction"
+                   and b > 0 and o > b else f"{o/b:.2f}x" if b else "-")
+            out.append(f"| {a}/{s} | {metric} | {fmt.format(b)} | "
+                       f"{fmt.format(o)} | {chg} |")
+        bmem = rb["memory"]["peak_per_device_bytes"] / 2**30
+        omem = ro["memory"]["peak_per_device_bytes"] / 2**30
+        out.append(f"| {a}/{s} | mem GiB/dev | {bmem:.2f} | {omem:.2f} | "
+                   f"{bmem/omem:.1f}x better |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "all"
+    base = load("results/dryrun_v3")
+    if mode in ("all", "dryrun"):
+        print("## single-pod + multi-pod dry-run\n")
+        print(dryrun_table(base))
+    if mode in ("all", "roofline"):
+        print("\n## roofline (single-pod)\n")
+        print(roofline_table(base))
+    if mode in ("all", "compare") and os.path.isdir("results/dryrun_opt_v3"):
+        print("\n## baseline vs optimized\n")
+        print(compare(base, load("results/dryrun_opt_v3")))

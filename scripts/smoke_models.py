@@ -1,0 +1,42 @@
+"""Quick dev smoke: every arch reduced config, fwd + loss grad + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_configs, ShapeConfig
+from repro.models import build_model
+
+SMALL_TRAIN = ShapeConfig("t", 32, 2, "train")
+SMALL_DECODE = ShapeConfig("d", 32, 2, "decode")
+
+ok = True
+for name, cfg in sorted(all_configs().items()):
+    r = cfg.reduced()
+    m = build_model(r)
+    key = jax.random.PRNGKey(0)
+    try:
+        params = m.init(key)
+        batch = m.make_batch(SMALL_TRAIN, key)
+        loss, grads = jax.value_and_grad(m.loss)(params, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        assert jnp.isfinite(loss), f"{name} loss not finite"
+        assert jnp.isfinite(gnorm), f"{name} grad not finite"
+        # decode one token
+        cache = m.init_cache(2, 32)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        lg, cache2 = m.decode(params, cache, tok)
+        assert jnp.all(jnp.isfinite(lg.astype(jnp.float32))), f"{name} decode"
+        # prefill
+        pb = m.make_batch(ShapeConfig("p", 16, 2, "prefill"), key)
+        lgp, cachep = m.prefill(params, pb, 32)
+        assert jnp.all(jnp.isfinite(lgp.astype(jnp.float32))), f"{name} prefill"
+        print(f"OK   {name:28s} loss={float(loss):.3f} gnorm={float(gnorm):.3f}"
+              f" nparams={m.n_params():,}")
+    except Exception as e:  # noqa: BLE001
+        ok = False
+        import traceback
+        print(f"FAIL {name}: {e}")
+        traceback.print_exc()
+sys.exit(0 if ok else 1)

@@ -1,0 +1,190 @@
+"""Transparent multimodal storage — the platform's "data lake" layer.
+
+An ``MMOTable`` is the TPU-native analogue of the paper's Hudi DataFrame:
+one row per multimodal object (MMO), columns are either numeric attributes
+(scalars) or vector attributes (embeddings), plus bookkeeping that keeps the
+storage *transparent*: every row records the raw-data URI and the embedding
+model that produced each vector column, so query results trace back to the
+original multimodal payload (paper §4.1).
+
+Physical layout adaptation (Spark/Hudi -> TPU):
+  * columnar SoA numpy arrays (host) mirrored to jnp for compute
+  * rows are re-orderable: the learned index assigns each row to a leaf
+    "bucket"; ``apply_permutation`` physically clusters bucket members so a
+    bucket is a contiguous, padded slab (static shapes for TPU scans)
+  * persistence = npz shards + a JSON manifest (the lake directory)
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class MMOTable:
+    name: str
+    numeric: Dict[str, np.ndarray] = field(default_factory=dict)   # (N,)
+    vector: Dict[str, np.ndarray] = field(default_factory=dict)    # (N, d)
+    raw_uri: Optional[np.ndarray] = None                            # (N,) str
+    embed_model: Dict[str, str] = field(default_factory=dict)      # col->model
+    # physical bucket layout (filled by the learned index build)
+    bucket_id: Optional[np.ndarray] = None       # (N,) int32, physical order
+    bucket_starts: Optional[np.ndarray] = None   # (B+1,) int32 prefix offsets
+    row_ids: Optional[np.ndarray] = None         # (N,) original row id
+
+    # ------------------------------------------------------------------ build
+    @property
+    def n_rows(self) -> int:
+        for a in self.numeric.values():
+            return len(a)
+        for a in self.vector.values():
+            return len(a)
+        return 0
+
+    @property
+    def n_buckets(self) -> int:
+        return 0 if self.bucket_starts is None else len(self.bucket_starts) - 1
+
+    def add_numeric(self, name: str, values) -> "MMOTable":
+        self.numeric[name] = np.asarray(values, np.float32)
+        return self
+
+    def add_vector(self, name: str, values, model: str = "") -> "MMOTable":
+        self.vector[name] = np.asarray(values, np.float32)
+        if model:
+            self.embed_model[name] = model
+        return self
+
+    def with_raw(self, uris: Sequence[str]) -> "MMOTable":
+        self.raw_uri = np.asarray(list(uris), dtype=object)
+        return self
+
+    def validate(self):
+        n = self.n_rows
+        for k, a in self.numeric.items():
+            assert a.shape == (n,), (k, a.shape)
+        for k, a in self.vector.items():
+            assert a.ndim == 2 and a.shape[0] == n, (k, a.shape)
+        if self.raw_uri is not None:
+            assert len(self.raw_uri) == n
+        return self
+
+    # --------------------------------------------------------- concatenation
+    def concat_features(self, columns: Optional[List[str]] = None):
+        """Matrix D (paper §5.2.2 Step 1): selected columns, vectors first.
+
+        Returns (D, layout) where layout maps column -> (start, end) slice.
+        """
+        cols = columns or (list(self.vector) + list(self.numeric))
+        parts, layout, off = [], {}, 0
+        for c in cols:
+            if c in self.vector:
+                a = self.vector[c]
+            else:
+                a = self.numeric[c][:, None]
+            parts.append(a.astype(np.float32))
+            layout[c] = (off, off + a.shape[1] if a.ndim == 2 else off + 1)
+            off += a.shape[1]
+        return np.concatenate(parts, axis=1), layout
+
+    # ----------------------------------------------------------- permutation
+    def apply_permutation(self, perm: np.ndarray, bucket_id: np.ndarray,
+                          bucket_starts: np.ndarray) -> "MMOTable":
+        """Physically reorder rows into bucket-contiguous layout."""
+        out = MMOTable(
+            name=self.name,
+            numeric={k: v[perm] for k, v in self.numeric.items()},
+            vector={k: v[perm] for k, v in self.vector.items()},
+            raw_uri=None if self.raw_uri is None else self.raw_uri[perm],
+            embed_model=dict(self.embed_model),
+            bucket_id=np.asarray(bucket_id, np.int32),
+            bucket_starts=np.asarray(bucket_starts, np.int32),
+            row_ids=(self.row_ids[perm] if self.row_ids is not None
+                     else np.asarray(perm, np.int32)),
+        )
+        return out
+
+    # -------------------------------------------------------------- tracing
+    def get_mmos(self, rows: Sequence[int]) -> List[Dict]:
+        """Transparent retrieval: full MMO records incl. raw pointers."""
+        out = []
+        for r in rows:
+            r = int(r)
+            rec = {"row": r,
+                   "id": int(self.row_ids[r]) if self.row_ids is not None
+                   else r}
+            rec.update({k: float(v[r]) for k, v in self.numeric.items()})
+            rec.update({k: v[r] for k, v in self.vector.items()})
+            if self.raw_uri is not None:
+                rec["raw_uri"] = str(self.raw_uri[r])
+            rec["embed_model"] = dict(self.embed_model)
+            out.append(rec)
+        return out
+
+    # ---------------------------------------------------------- persistence
+    def save(self, directory: str):
+        os.makedirs(directory, exist_ok=True)
+        manifest = {
+            "name": self.name,
+            "numeric": list(self.numeric),
+            "vector": list(self.vector),
+            "embed_model": self.embed_model,
+            "has_raw": self.raw_uri is not None,
+            "has_buckets": self.bucket_starts is not None,
+            "n_rows": self.n_rows,
+        }
+        with open(os.path.join(directory, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        arrays = {}
+        for k, v in self.numeric.items():
+            arrays[f"num__{k}"] = v
+        for k, v in self.vector.items():
+            arrays[f"vec__{k}"] = v
+        if self.raw_uri is not None:
+            arrays["raw_uri"] = np.asarray(self.raw_uri, dtype=np.str_)
+        if self.bucket_starts is not None:
+            arrays["bucket_id"] = self.bucket_id
+            arrays["bucket_starts"] = self.bucket_starts
+            arrays["row_ids"] = self.row_ids
+        np.savez_compressed(os.path.join(directory, "columns.npz"), **arrays)
+
+    @classmethod
+    def load(cls, directory: str) -> "MMOTable":
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+        z = np.load(os.path.join(directory, "columns.npz"), allow_pickle=False)
+        t = cls(name=manifest["name"],
+                embed_model=manifest.get("embed_model", {}))
+        for k in manifest["numeric"]:
+            t.numeric[k] = z[f"num__{k}"]
+        for k in manifest["vector"]:
+            t.vector[k] = z[f"vec__{k}"]
+        if manifest.get("has_raw"):
+            t.raw_uri = z["raw_uri"].astype(object)
+        if manifest.get("has_buckets"):
+            t.bucket_id = z["bucket_id"]
+            t.bucket_starts = z["bucket_starts"]
+            t.row_ids = z["row_ids"]
+        return t
+
+
+class DataLake:
+    """Directory of MMO tables (the lake root)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def list_tables(self) -> List[str]:
+        return sorted(d for d in os.listdir(self.root)
+                      if os.path.isdir(os.path.join(self.root, d)))
+
+    def write(self, table: MMOTable):
+        table.save(os.path.join(self.root, table.name))
+
+    def read(self, name: str) -> MMOTable:
+        return MMOTable.load(os.path.join(self.root, name))

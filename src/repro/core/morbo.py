@@ -1,0 +1,167 @@
+"""MORBO-style multi-objective Bayesian optimization (paper Algorithm 1).
+
+Trust-region collaborative BO over a box-bounded parameter space:
+  * n_tr trust regions, each with a local GP surrogate (RBF, exact Cholesky)
+  * candidate selection by Thompson sampling on a random-weight Chebyshev
+    scalarization of the (minimized) objectives within each region
+  * success/failure counters expand/shrink the region; regions below L_min
+    are terminated and re-initialized (Algorithm 1 lines 9-13)
+  * returns the evaluated set and the approximate Pareto front
+
+This is the JAX/numpy-native stand-in for BoTorch's MORBO: same control
+flow, smaller surrogate machinery (documented deviation in DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Tiny exact GP
+# ---------------------------------------------------------------------------
+class GP:
+    def __init__(self, x: np.ndarray, y: np.ndarray, noise: float = 1e-4):
+        self.x = np.asarray(x, np.float64)
+        self.y = np.asarray(y, np.float64)
+        self.mu = self.y.mean() if len(y) else 0.0
+        self.sd = self.y.std() + 1e-9
+        yn = (self.y - self.mu) / self.sd
+        d2 = self._d2(self.x, self.x)
+        med = np.median(d2[d2 > 0]) if (d2 > 0).any() else 1.0
+        self.ls2 = max(med, 1e-9)
+        k = np.exp(-0.5 * d2 / self.ls2) + noise * np.eye(len(x))
+        self.chol = np.linalg.cholesky(k)
+        self.alpha = np.linalg.solve(
+            self.chol.T, np.linalg.solve(self.chol, yn))
+
+    @staticmethod
+    def _d2(a, b):
+        return ((a[:, None, :] - b[None]) ** 2).sum(-1)
+
+    def posterior(self, xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        ks = np.exp(-0.5 * self._d2(np.asarray(xq, np.float64), self.x)
+                    / self.ls2)
+        mean = ks @ self.alpha
+        v = np.linalg.solve(self.chol, ks.T)
+        var = np.maximum(1.0 - (v ** 2).sum(0), 1e-12)
+        return mean * self.sd + self.mu, np.sqrt(var) * self.sd
+
+    def sample(self, xq: np.ndarray, rng) -> np.ndarray:
+        m, s = self.posterior(xq)
+        return m + s * rng.standard_normal(len(m))
+
+
+# ---------------------------------------------------------------------------
+# Pareto helpers
+# ---------------------------------------------------------------------------
+def pareto_mask(y: np.ndarray) -> np.ndarray:
+    """y: (N, M) objectives, all MINIMIZED. True = non-dominated."""
+    n = len(y)
+    mask = np.ones(n, bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominates = np.all(y <= y[i], axis=1) & np.any(y < y[i], axis=1)
+        if dominates.any():
+            mask[i] = False
+    return mask
+
+
+@dataclass
+class TrustRegion:
+    center: np.ndarray
+    length: float
+    success: int = 0
+    failure: int = 0
+
+
+@dataclass
+class MorboResult:
+    x: np.ndarray          # (N, D) evaluated points
+    y: np.ndarray          # (N, M) objective values (minimized)
+    pareto: np.ndarray     # bool mask over rows
+    n_restarts: int = 0
+
+    def best_scalarized(self, weights: Sequence[float]) -> np.ndarray:
+        w = np.asarray(weights, np.float64)
+        scores = (self.y * w).sum(1)
+        return self.x[int(np.argmin(scores))]
+
+
+def morbo_minimize(f: Callable[[np.ndarray], np.ndarray],
+                   bounds: Tuple[np.ndarray, np.ndarray],
+                   *, n_objectives: int, n_init: int = 8, iters: int = 10,
+                   n_tr: int = 2, batch: int = 4, n_cand: int = 256,
+                   l_init: float = 0.4, l_min: float = 0.05,
+                   l_max: float = 1.0, seed: int = 0) -> MorboResult:
+    """Minimize the vector objective f over the box [lo, hi]."""
+    rng = np.random.default_rng(seed)
+    lo, hi = (np.asarray(b, np.float64) for b in bounds)
+    dim = len(lo)
+
+    def unit_to_box(u):
+        return lo + u * (hi - lo)
+
+    def evaluate(u_batch):
+        return np.stack([np.asarray(f(unit_to_box(u)), np.float64)
+                         for u in u_batch])
+
+    x_all = rng.random((n_init, dim))
+    y_all = evaluate(x_all)
+
+    trs = [TrustRegion(center=x_all[rng.integers(len(x_all))].copy(),
+                       length=l_init) for _ in range(n_tr)]
+    restarts = 0
+
+    for _ in range(iters):
+        # fit one local GP per objective per trust region, on points inside
+        for tr in trs:
+            inside = np.all(np.abs(x_all - tr.center) <= tr.length / 2 + 1e-9,
+                            axis=1)
+            xs = x_all[inside] if inside.sum() >= 2 else x_all
+            ys = y_all[inside] if inside.sum() >= 2 else y_all
+            gps = [GP(xs, ys[:, j]) for j in range(n_objectives)]
+            # Thompson-sampled Chebyshev scalarization
+            cand = tr.center + (rng.random((n_cand, dim)) - 0.5) * tr.length
+            cand = np.clip(cand, 0.0, 1.0)
+            w = rng.dirichlet(np.ones(n_objectives))
+            samples = np.stack([g.sample(cand, rng) for g in gps], axis=1)
+            ref_pt = y_all.min(0)
+            cheb = np.max(w * (samples - ref_pt), axis=1)
+            picks = np.argsort(cheb)[:batch]
+            xb = cand[picks]
+            yb = evaluate(xb)
+            # success = any new point is Pareto-improving
+            before = pareto_mask(y_all).sum()
+            x_all = np.concatenate([x_all, xb])
+            y_all = np.concatenate([y_all, yb])
+            after = pareto_mask(y_all).sum()
+            improved = after > before or (
+                yb.min(0) < y_all[:-len(yb)].min(0)).any()
+            if improved:
+                tr.success += 1
+                tr.failure = 0
+            else:
+                tr.failure += 1
+                tr.success = 0
+            if tr.success >= 2:
+                tr.length = min(tr.length * 1.6, l_max)
+                tr.success = 0
+            elif tr.failure >= 2:
+                tr.length *= 0.5
+                tr.failure = 0
+            # recenter on the best scalarized point inside
+            scores = np.max(w * (y_all - ref_pt), axis=1)
+            tr.center = x_all[int(np.argmin(scores))].copy()
+            if tr.length < l_min:  # terminate + reinitialize (line 9-11)
+                restarts += 1
+                tr.center = rng.random(dim)
+                tr.length = l_init
+                tr.success = tr.failure = 0
+
+    x_box = lo + x_all * (hi - lo)
+    return MorboResult(x=x_box, y=y_all, pareto=pareto_mask(y_all),
+                       n_restarts=restarts)

@@ -1,0 +1,88 @@
+"""Index persistence: the cluster tree + enhanced features + transform live
+next to the MMO table in the lake, so a platform restarts without a rebuild
+(the paper's offline-build / online-serve split)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.core.index import ClusterTree
+from repro.core.lake import MMOTable
+from repro.core.transform import HyperspaceTransform
+
+
+def save_index(directory: str, tree: ClusterTree,
+               enhanced: np.ndarray,
+               transform: Optional[HyperspaceTransform] = None):
+    os.makedirs(directory, exist_ok=True)
+    flat_children = []
+    child_offsets = [0]
+    for c in tree.children:
+        flat_children.extend(c)
+        child_offsets.append(len(flat_children))
+    arrays = dict(
+        centroid=tree.centroid, radius=tree.radius, parent=tree.parent,
+        is_leaf=tree.is_leaf, bucket_start=tree.bucket_start,
+        bucket_end=tree.bucket_end, lm_a=tree.lm_a, lm_b=tree.lm_b,
+        depth=tree.depth, access_count=tree.access_count,
+        children_flat=np.asarray(flat_children, np.int32),
+        children_off=np.asarray(child_offsets, np.int64),
+        enhanced=np.asarray(enhanced, np.float32),
+    )
+    if transform is not None:
+        arrays.update(t_r=transform.r, t_s=transform.s, t_mean=transform.mean)
+    np.savez_compressed(os.path.join(directory, "index.npz"), **arrays)
+    with open(os.path.join(directory, "index.json"), "w") as f:
+        json.dump({"n_nodes": tree.n_nodes,
+                   "has_transform": transform is not None}, f)
+
+
+def load_index(directory: str):
+    """Returns (tree, enhanced, transform-or-None)."""
+    with open(os.path.join(directory, "index.json")) as f:
+        meta = json.load(f)
+    z = np.load(os.path.join(directory, "index.npz"))
+    off = z["children_off"]
+    flat = z["children_flat"]
+    children = [flat[off[i]:off[i + 1]].tolist()
+                for i in range(len(off) - 1)]
+    tree = ClusterTree(
+        centroid=z["centroid"], radius=z["radius"], parent=z["parent"],
+        children=children, is_leaf=z["is_leaf"],
+        bucket_start=z["bucket_start"], bucket_end=z["bucket_end"],
+        lm_a=z["lm_a"], lm_b=z["lm_b"], depth=z["depth"],
+        access_count=z["access_count"])
+    transform = None
+    if meta.get("has_transform"):
+        transform = HyperspaceTransform(r=z["t_r"], s=z["t_s"],
+                                        mean=z["t_mean"])
+    return tree, z["enhanced"], transform
+
+
+def save_platform(platform, directory: str):
+    """Lake table + index + transform in one place."""
+    platform.table.save(os.path.join(directory, "table"))
+    save_index(os.path.join(directory, "index"), platform.tree,
+               platform.enhanced, platform.transform)
+    platform.qbs.save(os.path.join(directory, "qbs.json"))
+
+
+def load_platform(directory: str):
+    """Reconstruct a ready-to-query MQRLD without rebuilding the index."""
+    from repro.core.platform import MQRLD
+    from repro.core.qbs import QBSTable
+    table = MMOTable.load(os.path.join(directory, "table"))
+    tree, enhanced, transform = load_index(os.path.join(directory, "index"))
+    p = MQRLD(table)
+    p.table = table
+    p.tree = tree
+    p.enhanced = enhanced
+    p.transform = transform
+    qbs_path = os.path.join(directory, "qbs.json")
+    if os.path.exists(qbs_path):
+        p.qbs = QBSTable.load(qbs_path)
+    p._build_meta()
+    return p

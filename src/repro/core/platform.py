@@ -1,0 +1,309 @@
+"""MQRLD platform facade (paper Fig 2/3).
+
+Pipeline: ingest -> (measure/choose embedding) -> hyperspace transformation
+-> LPGF movement -> learned-index build -> physical re-layout -> MOAPI
+queries with QBS recording -> query-aware optimization (transform refresh +
+Algorithm 3 sibling reorder).
+
+Query-space design (exactness; DESIGN.md §2): the *enhanced* space decides
+the physical layout (which rows co-locate in a bucket) and the tree
+geometry; every per-attribute query is answered EXACTLY in the original
+attribute space using per-leaf (centroid, radius) metadata per vector
+attribute and per-leaf [min, max] boxes per numeric attribute. The paper's
+performance claim — better layout => fewer buckets touched => faster —
+shows up as lower CBR, not as approximation error.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.index import (BuildReport, ClusterTree, QueryStats,
+                              build_index)
+from repro.core.lake import MMOTable
+from repro.core.lpgf import lpgf
+from repro.core.qbs import QBSTable, accuracy, recall_at_k
+from repro.core.reorder import reorder_siblings
+from repro.core.transform import HyperspaceTransform, init_transform, perturb
+from repro.kernels import ops
+
+
+@dataclass
+class LeafMeta:
+    """Per-leaf exact-space pruning metadata."""
+    vec_centroid: Dict[str, np.ndarray]   # attr -> (L, d_attr)
+    vec_radius: Dict[str, np.ndarray]     # attr -> (L,)
+    num_lo: Dict[str, np.ndarray]         # attr -> (L,)
+    num_hi: Dict[str, np.ndarray]
+
+
+class MQRLD:
+    """The platform. One instance per MMO table."""
+
+    def __init__(self, table: MMOTable, *, qbs_sample: float = 1.0,
+                 seed: int = 0):
+        self.raw_table = table.validate()
+        self.table: Optional[MMOTable] = None
+        self.qbs = QBSTable(sample_rate=qbs_sample, seed=seed)
+        self.tree: Optional[ClusterTree] = None
+        self.report: Optional[BuildReport] = None
+        self.transform: Optional[HyperspaceTransform] = None
+        self.meta: Optional[LeafMeta] = None
+        self.enhanced: Optional[np.ndarray] = None
+        self.seed = seed
+        self._oracle_cache: Dict = {}
+
+    # ------------------------------------------------------------ build
+    def prepare(self, columns: Optional[List[str]] = None, *,
+                use_transform: bool = True, use_lpgf: bool = True,
+                lpgf_iters: int = 1, delta: float = 0.951,
+                min_leaf: int = 32, max_leaf: int = 4096,
+                max_depth: int = 12, dpc_max_clusters: int = 8,
+                theta: Optional[Sequence[float]] = None,
+                dpc_sample: int = 4096,
+                delta_scales: Optional[Sequence[float]] = None) -> BuildReport:
+        """Feature representation + index build + physical re-layout."""
+        d, self.layout = self.raw_table.concat_features(columns)
+        feats = d
+        if use_transform:
+            self.transform = init_transform(d)
+            if theta is not None or delta_scales is not None:
+                self.transform = perturb(
+                    self.transform,
+                    theta if theta is not None else [],
+                    delta_scales if delta_scales is not None else [])
+            feats = self.transform.apply(d)
+        if use_lpgf:
+            feats = lpgf(feats, iters=lpgf_iters, seed=self.seed)
+        self.enhanced_unpermuted = feats
+        tree, perm, report = build_index(
+            feats, delta=delta, min_leaf=min_leaf, max_leaf=max_leaf,
+            max_depth=max_depth, dpc_max_clusters=dpc_max_clusters,
+            dpc_sample=dpc_sample, seed=self.seed)
+        self.tree, self.report = tree, report
+        # physical re-layout of the MMO table (bucket-contiguous)
+        leaves = tree.leaf_ids
+        starts = tree.bucket_start[leaves]
+        bucket_id = np.zeros(len(perm), np.int32)
+        for b, lid in enumerate(leaves):
+            s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+            bucket_id[s:e] = b
+        bucket_starts = np.concatenate(
+            [tree.bucket_start[leaves], [len(perm)]]).astype(np.int32)
+        self.table = self.raw_table.apply_permutation(
+            perm, bucket_id, bucket_starts)
+        self.enhanced = feats[perm]
+        self._build_meta()
+        self._oracle_cache.clear()
+        return report
+
+    def _build_meta(self):
+        tree, table = self.tree, self.table
+        leaves = tree.leaf_ids
+        vc, vr, nlo, nhi = {}, {}, {}, {}
+        for attr, col in table.vector.items():
+            cs, rs = [], []
+            for lid in leaves:
+                s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+                pts = col[s:e]
+                c = pts.mean(axis=0) if e > s else np.zeros(col.shape[1])
+                cs.append(c)
+                rs.append(float(np.sqrt(
+                    np.max(((pts - c) ** 2).sum(1), initial=0.0))))
+            vc[attr] = np.stack(cs).astype(np.float32)
+            vr[attr] = np.asarray(rs, np.float32)
+        for attr, col in table.numeric.items():
+            los, his = [], []
+            for lid in leaves:
+                s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+                los.append(float(col[s:e].min(initial=np.inf)))
+                his.append(float(col[s:e].max(initial=-np.inf)))
+            nlo[attr] = np.asarray(los, np.float32)
+            nhi[attr] = np.asarray(his, np.float32)
+        self.meta = LeafMeta(vec_centroid=vc, vec_radius=vr,
+                             num_lo=nlo, num_hi=nhi)
+
+    # ------------------------------------------------------------ leaves
+    def _leaf_rows(self, leaf_pos: int) -> np.ndarray:
+        lid = self.tree.leaf_ids[leaf_pos]
+        return np.arange(int(self.tree.bucket_start[lid]),
+                         int(self.tree.bucket_end[lid]))
+
+    def _count_leaf(self, lid: int):
+        # Algorithm 3 statistics: node + ancestors were scanned to reach it
+        node = int(self.tree.leaf_ids[lid])
+        while node >= 0:
+            self.tree.access_count[node] += 1
+            node = int(self.tree.parent[node])
+
+    # ------------------------------------------------------- basic queries
+    def _predicate_leaves(self, q) -> np.ndarray:
+        """Positions (into leaf_ids) of leaves that may contain matches."""
+        m = self.meta
+        if isinstance(q, Q.NE):
+            return np.nonzero((m.num_lo[q.attr] <= q.value + q.tol)
+                              & (m.num_hi[q.attr] >= q.value - q.tol))[0]
+        if isinstance(q, Q.NR):
+            return np.nonzero((m.num_lo[q.attr] <= q.hi)
+                              & (m.num_hi[q.attr] >= q.lo))[0]
+        if isinstance(q, Q.VR):
+            qv = q.vec()
+            d = np.sqrt(np.maximum(((m.vec_centroid[q.attr] - qv) ** 2)
+                                   .sum(1), 0))
+            return np.nonzero(d - m.vec_radius[q.attr] <= q.radius)[0]
+        raise TypeError(q)
+
+    def _mask_from_predicate(self, q, stats: QueryStats) -> np.ndarray:
+        """Exact boolean mask over physical rows for NE/NR/VR."""
+        n = self.table.n_rows
+        mask = np.zeros(n, bool)
+        for lp in self._predicate_leaves(q):
+            stats.touch(lp)
+            self._count_leaf(lp)
+            rows = self._leaf_rows(lp)
+            stats.rows_scanned += len(rows)
+            if isinstance(q, Q.NE):
+                col = self.table.numeric[q.attr][rows]
+                mask[rows] = np.abs(col - q.value) <= q.tol
+            elif isinstance(q, Q.NR):
+                col = self.table.numeric[q.attr][rows]
+                mask[rows] = (col >= q.lo) & (col <= q.hi)
+            else:  # VR
+                col = self.table.vector[q.attr][rows]
+                d2 = ((col - q.vec()) ** 2).sum(1)
+                mask[rows] = d2 <= q.radius ** 2
+        return mask
+
+    def _knn(self, q: Q.VK, stats: QueryStats,
+             row_mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Exact per-attribute KNN via leaf lower-bound ranking."""
+        m = self.meta
+        qv = q.vec()
+        col = self.table.vector[q.attr]
+        dc = np.sqrt(np.maximum(((m.vec_centroid[q.attr] - qv) ** 2)
+                                .sum(1), 0))
+        lb = np.maximum(dc - m.vec_radius[q.attr], 0.0)
+        order = np.argsort(lb, kind="stable")
+        best_d = np.full(q.k, np.inf)
+        best_i = np.full(q.k, -1, np.int64)
+        for pos in order:
+            if lb[pos] > best_d[-1]:
+                break
+            stats.touch(pos)
+            self._count_leaf(pos)
+            rows = self._leaf_rows(pos)
+            stats.rows_scanned += len(rows)
+            d2 = ((col[rows] - qv) ** 2).sum(1)
+            if row_mask is not None:
+                d2 = np.where(row_mask[rows], d2, np.inf)
+            d = np.sqrt(np.maximum(d2, 0))
+            alld = np.concatenate([best_d, d])
+            alli = np.concatenate([best_i, rows])
+            sel = np.argsort(alld, kind="stable")[:q.k]
+            best_d, best_i = alld[sel], alli[sel]
+        return best_i[best_i >= 0]
+
+    # ------------------------------------------------------------- execute
+    def execute(self, query: Q.Query, *, task: str = "",
+                record: bool = True) -> Tuple[np.ndarray, QueryStats]:
+        """Execute a rich hybrid query through the learned index."""
+        assert self.tree is not None, "call prepare() first"
+        t0 = time.time()
+        stats = QueryStats()
+        rows = self._exec(query, stats, row_mask=None)
+        stats.time_s = time.time() - t0
+        stats.cbr = stats.buckets_touched / max(1, len(self.tree.leaf_ids))
+        if record:
+            truth = self.oracle(query)
+            self.qbs.maybe_record(
+                statement=repr(query), object_set=self.table.name,
+                attributes=Q.query_attrs(query), types=Q.query_types(query),
+                recall_at_k=recall_at_k(rows, truth),
+                cbr=stats.cbr, query_time_s=stats.time_s,
+                accuracy=accuracy(rows, truth), task=task)
+        return rows, stats
+
+    def _exec(self, q, stats: QueryStats,
+              row_mask: Optional[np.ndarray]) -> np.ndarray:
+        n = self.table.n_rows
+        if isinstance(q, (Q.NE, Q.NR, Q.VR)):
+            mask = self._mask_from_predicate(q, stats)
+            if row_mask is not None:
+                mask &= row_mask
+            return np.nonzero(mask)[0]
+        if isinstance(q, Q.VK):
+            return self._knn(q, stats, row_mask)
+        if isinstance(q, Q.And):
+            preds = [p for p in q.parts if not isinstance(p, Q.VK)]
+            vks = [p for p in q.parts if isinstance(p, Q.VK)]
+            mask = row_mask if row_mask is not None else None
+            for p in preds:
+                rows = self._exec(p, stats, mask)
+                pm = np.zeros(n, bool)
+                pm[rows] = True
+                mask = pm if mask is None else (mask & pm)
+            if not vks:
+                return np.nonzero(mask)[0] if mask is not None else \
+                    np.arange(n)
+            result = None
+            for vk in vks:
+                rows = self._knn(vk, stats, mask)
+                rm = np.zeros(n, bool)
+                rm[rows] = True
+                result = rm if result is None else (result & rm)
+            return np.nonzero(result)[0]
+        if isinstance(q, Q.Or):
+            out = np.zeros(n, bool)
+            for p in q.parts:
+                out[self._exec(p, stats, row_mask)] = True
+            return np.nonzero(out)[0]
+        raise TypeError(q)
+
+    # ------------------------------------------------------------- oracle
+    def oracle(self, query: Q.Query) -> np.ndarray:
+        key = repr(query)
+        if key not in self._oracle_cache:
+            self._oracle_cache[key] = Q.execute_bruteforce(self.table, query)
+        return self._oracle_cache[key]
+
+    # -------------------------------------------------- query-aware tuning
+    def optimize_index(self, workload: Sequence[Q.Query],
+                       tie_break: bool = False) -> int:
+        """Algorithm 3: run the workload to collect access counts, then
+        reorder sibling lists."""
+        self.tree.access_count[:] = 0
+        for q in workload:
+            self.execute(q, record=False)
+
+        cost_fn = None
+        if tie_break:
+            def cost_fn():
+                total = 0
+                for q in workload:
+                    _, st = self.execute(q, record=False)
+                    total += st.nodes_scanned
+                return total
+        return reorder_siblings(self.tree, cost_fn)
+
+    def objectives_for_morbo(self, workload: Sequence[Q.Query]):
+        """(time, CBR, -accuracy) evaluator over (theta, delta_scales) for
+        the MORBO transform optimization (paper Algorithm 1)."""
+        def f(params: np.ndarray) -> np.ndarray:
+            k = len(params) // 2
+            theta, dscale = params[:k], params[k:]
+            self.prepare(use_transform=True, use_lpgf=False,
+                         theta=theta, delta_scales=dscale)
+            times, cbrs, accs = [], [], []
+            for q in workload:
+                rows, st = self.execute(q, record=False)
+                truth = self.oracle(q)
+                times.append(st.time_s)
+                cbrs.append(st.cbr)
+                accs.append(accuracy(rows, truth))
+            return np.array([np.mean(times), np.mean(cbrs),
+                             -np.mean(accs)])
+        return f

@@ -1,0 +1,121 @@
+"""Query Behavior Statistic (QBS) table — the query-aware mechanism
+(paper §4.3, Table 3).
+
+Every executed query appends a row:
+  statement | object set | attributes | types | Recall@K | CBR | time | acc
+
+The table feeds three consumers:
+  1. feature measurement (extrinsic S1 score, §5.1.2)
+  2. hyperspace-transformation optimization objectives (§5.2.2 Step 4)
+  3. index sibling-reordering (§6.2)
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class QBSRow:
+    statement: str
+    object_set: str            # table name
+    attributes: List[str]
+    types: List[str]           # e.g. ["NR", "VK"]
+    recall_at_k: float
+    cbr: float                 # cross-bucket rate: buckets touched / total
+    query_time_s: float
+    accuracy: float
+    task: str = ""
+    ts: float = 0.0
+
+
+class QBSTable:
+    def __init__(self, sample_rate: float = 1.0, seed: int = 0):
+        self.rows: List[QBSRow] = []
+        self.sample_rate = sample_rate
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self):
+        return len(self.rows)
+
+    def maybe_record(self, **kw) -> Optional[QBSRow]:
+        """Sampled recording (paper §7.9: statistics are sampled because
+        Recall@K / accuracy need ground truth and are expensive)."""
+        if self._rng.random() > self.sample_rate:
+            return None
+        return self.record(**kw)
+
+    def record(self, *, statement: str, object_set: str,
+               attributes: Sequence[str], types: Sequence[str],
+               recall_at_k: float, cbr: float, query_time_s: float,
+               accuracy: float, task: str = "") -> QBSRow:
+        row = QBSRow(statement=statement, object_set=object_set,
+                     attributes=list(attributes), types=list(types),
+                     recall_at_k=float(recall_at_k), cbr=float(cbr),
+                     query_time_s=float(query_time_s),
+                     accuracy=float(accuracy), task=task, ts=time.time())
+        self.rows.append(row)
+        return row
+
+    # ------------------------------------------------------------ consumers
+    def extrinsic_score(self, task: Optional[str] = None,
+                        time_scale: float = 0.1) -> float:
+        """S1 (paper eq. 1): recall/accuracy up, time down, in [0, 1]."""
+        rows = [r for r in self.rows if task is None or r.task == task]
+        if not rows:
+            return 0.0
+        rec = float(np.mean([r.recall_at_k for r in rows]))
+        acc = float(np.mean([r.accuracy for r in rows]))
+        t = float(np.mean([r.query_time_s for r in rows]))
+        t_pen = 1.0 / (1.0 + t / time_scale)
+        return (rec + acc + t_pen) / 3.0
+
+    def objectives(self, task: Optional[str] = None) -> Dict[str, float]:
+        """(time, CBR, accuracy) triple for the MORBO optimizer."""
+        rows = [r for r in self.rows if task is None or r.task == task]
+        if not rows:
+            return {"time": float("inf"), "cbr": 1.0, "accuracy": 0.0}
+        return {
+            "time": float(np.mean([r.query_time_s for r in rows])),
+            "cbr": float(np.mean([r.cbr for r in rows])),
+            "accuracy": float(np.mean([r.accuracy for r in rows])),
+        }
+
+    def per_task(self) -> Dict[str, Dict[str, float]]:
+        tasks = sorted({r.task for r in self.rows})
+        return {t: self.objectives(t) for t in tasks}
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump([asdict(r) for r in self.rows], f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "QBSTable":
+        t = cls()
+        with open(path) as f:
+            for r in json.load(f):
+                t.rows.append(QBSRow(**r))
+        return t
+
+
+def recall_at_k(result_rows, truth_rows, k: Optional[int] = None) -> float:
+    """Recall@K: |result ∩ truth| / |truth| (truncated to K)."""
+    truth = list(truth_rows)[:k] if k else list(truth_rows)
+    if not truth:
+        return 1.0
+    rset = set(int(r) for r in result_rows)
+    return sum(1 for t in truth if int(t) in rset) / len(truth)
+
+
+def accuracy(result_rows, truth_rows) -> float:
+    """Jaccard-style query accuracy: |res ∩ truth| / |res ∪ truth|."""
+    rset = set(int(r) for r in result_rows)
+    tset = set(int(t) for t in truth_rows)
+    if not rset and not tset:
+        return 1.0
+    return len(rset & tset) / max(1, len(rset | tset))

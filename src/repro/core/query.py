@@ -1,0 +1,189 @@
+"""MOAPI — the rich-hybrid query interface (paper §4.2).
+
+Four basic query types over an MMOTable:
+  N.E  — numeric equal            N.R — numeric range
+  V.K  — vector k-nearest          V.R — vector range (radius)
+
+A *rich hybrid query* is any ∩/∪ combination tree of basic queries.
+Semantics (result = set of row indices):
+  * N.E / N.R / V.R are predicates (exact sets).
+  * V.K returns the k nearest rows *among the candidate set implied by the
+    sibling predicates under an intersection* (post-filter semantics — this
+    is what "top-k products under $20" means); under a union it is the
+    global top-k.
+
+``execute_bruteforce`` is the exact oracle used by tests/benchmarks;
+``Platform.execute`` (core/platform.py) routes through the learned index.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.lake import MMOTable
+
+
+# ---------------------------------------------------------------------------
+# Query AST
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class NE:
+    attr: str
+    value: float
+    tol: float = 1e-6
+
+
+@dataclass(frozen=True)
+class NR:
+    attr: str
+    lo: float
+    hi: float
+
+
+@dataclass(frozen=True)
+class VK:
+    attr: str
+    query: tuple   # query vector (hashable: tuple of floats)
+    k: int
+
+    @staticmethod
+    def of(attr, vec, k):
+        return VK(attr, tuple(np.asarray(vec, np.float32).tolist()), int(k))
+
+    def vec(self):
+        return np.asarray(self.query, np.float32)
+
+
+@dataclass(frozen=True)
+class VR:
+    attr: str
+    query: tuple
+    radius: float
+
+    @staticmethod
+    def of(attr, vec, r):
+        return VR(attr, tuple(np.asarray(vec, np.float32).tolist()), float(r))
+
+    def vec(self):
+        return np.asarray(self.query, np.float32)
+
+
+@dataclass(frozen=True)
+class And:
+    parts: tuple  # of query nodes
+
+    @staticmethod
+    def of(*parts):
+        return And(tuple(parts))
+
+
+@dataclass(frozen=True)
+class Or:
+    parts: tuple
+
+    @staticmethod
+    def of(*parts):
+        return Or(tuple(parts))
+
+
+Query = Union[NE, NR, VK, VR, And, Or]
+
+
+def basic_queries(q: Query) -> List[Query]:
+    if isinstance(q, (And, Or)):
+        out = []
+        for p in q.parts:
+            out.extend(basic_queries(p))
+        return out
+    return [q]
+
+
+def query_types(q: Query) -> List[str]:
+    return [type(b).__name__ for b in basic_queries(q)]
+
+
+def query_attrs(q: Query) -> List[str]:
+    return sorted({b.attr for b in basic_queries(q)})
+
+
+# ---------------------------------------------------------------------------
+# Exact oracle execution
+# ---------------------------------------------------------------------------
+def _predicate_mask(table: MMOTable, q: Query) -> Optional[np.ndarray]:
+    """Boolean mask for predicate nodes; None when subtree contains V.K."""
+    n = table.n_rows
+    if isinstance(q, NE):
+        return np.abs(table.numeric[q.attr] - q.value) <= q.tol
+    if isinstance(q, NR):
+        a = table.numeric[q.attr]
+        return (a >= q.lo) & (a <= q.hi)
+    if isinstance(q, VR):
+        x = table.vector[q.attr]
+        d2 = np.sum((x - q.vec()[None, :]) ** 2, axis=1)
+        return d2 <= q.radius ** 2
+    if isinstance(q, VK):
+        return None
+    masks = [_predicate_mask(table, p) for p in q.parts]
+    if any(m is None for m in masks):
+        return None
+    if isinstance(q, And):
+        out = np.ones(n, bool)
+        for m in masks:
+            out &= m
+        return out
+    out = np.zeros(n, bool)
+    for m in masks:
+        out |= m
+    return out
+
+
+def _knn_rows(table: MMOTable, q: VK, candidates: np.ndarray) -> np.ndarray:
+    x = table.vector[q.attr]
+    if candidates.dtype == bool:
+        cand_idx = np.nonzero(candidates)[0]
+    else:
+        cand_idx = candidates
+    if len(cand_idx) == 0:
+        return cand_idx
+    d2 = np.sum((x[cand_idx] - q.vec()[None, :]) ** 2, axis=1)
+    k = min(q.k, len(cand_idx))
+    sel = np.argpartition(d2, k - 1)[:k]
+    sel = sel[np.argsort(d2[sel], kind="stable")]
+    return cand_idx[sel]
+
+
+def execute_bruteforce(table: MMOTable, q: Query) -> np.ndarray:
+    """Exact result rows (sorted unless a VK imposes distance order)."""
+    n = table.n_rows
+    if isinstance(q, (NE, NR, VR)):
+        return np.nonzero(_predicate_mask(table, q))[0]
+    if isinstance(q, VK):
+        return _knn_rows(table, q, np.ones(n, bool))
+    if isinstance(q, And):
+        vks = [p for p in q.parts if isinstance(p, VK)]
+        preds = [p for p in q.parts if not isinstance(p, VK)]
+        mask = np.ones(n, bool)
+        for p in preds:
+            m = _predicate_mask(table, p)
+            if m is None:  # nested combiner containing VK
+                rows = execute_bruteforce(table, p)
+                m = np.zeros(n, bool)
+                m[rows] = True
+            mask &= m
+        if not vks:
+            return np.nonzero(mask)[0]
+        result = None
+        for vk in vks:  # top-k among surviving candidates
+            rows = _knn_rows(table, vk, mask)
+            rmask = np.zeros(n, bool)
+            rmask[rows] = True
+            result = rmask if result is None else (result & rmask)
+        return np.nonzero(result)[0]
+    if isinstance(q, Or):
+        out = np.zeros(n, bool)
+        for p in q.parts:
+            out[execute_bruteforce(table, p)] = True
+        return np.nonzero(out)[0]
+    raise TypeError(q)

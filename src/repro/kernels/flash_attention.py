@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blocked flash attention (forward).
+
+Online-softmax attention that never materializes the (Sq, Skv) score matrix
+in HBM: grid (B*H, Sq/BQ, Skv/BK) with the KV axis innermost; the running
+(m, l, acc) state lives in VMEM scratch across KV steps. Causal and
+sliding-window masks are applied from block coordinates; fully-masked KV
+blocks are skipped cheaply (their contribution is a no-op because the mask
+drives the weights to zero before accumulation — on real TPU the causal
+grid is additionally pruned by the index map).
+
+This is the serving/prefill hot path; the train path uses XLA attention
+(differentiable) unless the TPU backend is active.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, n_kv_blocks: int, causal: bool, window: int,
+            scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)               # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)               # (BK, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+    qpos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...][:, 0] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q, k, v: (B, S, H, hd) with H already expanded (no GQA grouping).
+    Returns (B, S, H, hd)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    scale = 1.0 / np.sqrt(hd)
+
+    # layout: (B*H, S, hd)
+    def bh(x):
+        return jnp.moveaxis(x, 2, 1).reshape(-1, x.shape[1], hd)
+
+    qb, kb, vb = bh(q), bh(k), bh(v)
+    n_kv_blocks = skv // bk
+    grid = (b * h, sq // bq, n_kv_blocks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv_blocks=n_kv_blocks,
+                          causal=causal, window=window, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)

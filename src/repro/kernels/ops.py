@@ -1,0 +1,101 @@
+"""Jitted op wrappers over the Pallas kernels with CPU fallbacks.
+
+Dispatch: on TPU the Pallas kernels run natively; on CPU we run either the
+pure-jnp oracle (fast XLA path, default) or the Pallas kernel in
+``interpret=True`` mode (used by the correctness tests). All three share one
+signature per op, so the platform code never branches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_BACKEND = None
+
+
+def backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        _BACKEND = jax.default_backend()
+    return _BACKEND
+
+
+def use_pallas() -> bool:
+    return backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# pairwise squared-L2
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_sq_l2(q, p, interpret: bool = False):
+    if use_pallas() or interpret:
+        from repro.kernels.pairwise_l2 import pairwise_sq_l2_pallas
+        return pairwise_sq_l2_pallas(q, p, interpret=not use_pallas())
+    return ref.pairwise_sq_l2(q, p)
+
+
+def pairwise_sq_l2_blocked(q, p, row_block: int = 4096):
+    """Host-driven row blocking for big M (bounds device memory)."""
+    outs = []
+    for i in range(0, q.shape[0], row_block):
+        outs.append(np_asarray(pairwise_sq_l2(q[i:i + row_block], p)))
+    import numpy as np
+    return np.concatenate(outs, axis=0)
+
+
+def np_asarray(x):
+    import numpy as np
+    return np.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# top-k nearest
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_l2(q, p, k: int, interpret: bool = False):
+    if use_pallas() or interpret:
+        from repro.kernels.fused_topk import topk_l2_pallas
+        return topk_l2_pallas(q, p, k, interpret=not use_pallas())
+    return ref.topk_l2(q, p, k)
+
+
+def topk_l2_blocked(q, p, k: int, row_block: int = 2048):
+    import numpy as np
+    ds, is_ = [], []
+    for i in range(0, q.shape[0], row_block):
+        d, ix = topk_l2(q[i:i + row_block], p, k)
+        ds.append(np.asarray(d))
+        is_.append(np.asarray(ix))
+    return np.concatenate(ds), np.concatenate(is_)
+
+
+# ---------------------------------------------------------------------------
+# LPGF force field
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("radius", "g_mean", "interpret"))
+def lpgf_force(points, radius: float, g_mean: float,
+               interpret: bool = False):
+    if use_pallas() or interpret:
+        from repro.kernels.lpgf_force import lpgf_force_pallas
+        return lpgf_force_pallas(points, radius, g_mean,
+                                 interpret=not use_pallas())
+    return ref.lpgf_force(points, radius, g_mean)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (model hot path; models call through here on TPU)
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool = False):
+    if use_pallas() or interpret:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=not use_pallas())
+    return ref.flash_attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the *semantics*; the Pallas kernels must match them to
+``assert_allclose`` tolerance across the shape/dtype sweeps in
+``tests/test_kernels_*.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_sq_l2(q, p):
+    """Squared L2 distances. q: (M, D), p: (N, D) -> (M, N) fp32."""
+    q = q.astype(jnp.float32)
+    p = p.astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=1, keepdims=True)
+    pp = jnp.sum(p * p, axis=1, keepdims=True).T
+    d = qq + pp - 2.0 * (q @ p.T)
+    return jnp.maximum(d, 0.0)
+
+
+def topk_l2(q, p, k: int):
+    """k nearest points of p for each q row. Returns (sq_dists, indices)."""
+    d = pairwise_sq_l2(q, p)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+def lpgf_force(points, radius, g_mean, c: float = 1.1):
+    """LPGF resultant force per point (paper Fig 13), exact all-pairs.
+
+    points: (N, D). radius: scalar R. g_mean: scalar G (mean NN distance).
+    For each point i with nearest-neighbor distance d1_i:
+      far ring  (G*d1 <= d <= R):  F_ij = (d1^2 / d^2) * (p_j - p_i)
+      near ring (d^2 <= G*d1):     F_ij = (p_j - p_i) / C
+      outside R or j == i:         0
+    Returns (N, D) fp32 forces.
+    """
+    x = points.astype(jnp.float32)
+    d2 = pairwise_sq_l2(x, x)
+    big = jnp.max(d2) + 1.0
+    d2_off = d2 + big * jnp.eye(x.shape[0], dtype=jnp.float32)
+    d1sq = jnp.min(d2_off, axis=1)                       # (N,) nearest^2
+    diff = x[None, :, :] - x[:, None, :]                  # (N, N, D) j - i
+    thresh_near = g_mean * jnp.sqrt(d1sq)                 # G * d1_i
+    in_r = (d2_off <= radius * radius)
+    near = d2_off <= thresh_near[:, None]
+    far = (~near) & in_r
+    w_far = jnp.where(far, d1sq[:, None] / jnp.maximum(d2_off, 1e-12), 0.0)
+    w_near = jnp.where(near & in_r, 1.0 / c, 0.0)
+    w = w_far + w_near
+    # returns (raw resultant force, total weight) — the mover normalizes by
+    # the weight so the displacement is a bounded weighted-mean pull
+    return jnp.einsum("ij,ijd->id", w, diff), jnp.sum(w, axis=1)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Reference attention. q,k,v: (B, S, H, hd) (same H; GQA is expanded
+    by the caller). Returns (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def transform_matmul(d, t):
+    """Hyperspace transform D @ T. d: (M, N), t: (N, N) -> (M, N) fp32."""
+    return (d.astype(jnp.float32) @ t.astype(jnp.float32))

@@ -1,0 +1,288 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Must be the FIRST import side effect: 512 placeholder host devices so
+``jax.make_mesh`` can build the production mesh (jax locks the device count
+on first backend init).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    TrainConfig, all_configs, get_config, SHAPES_BY_NAME)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.sharding.partitioning import rules_for_mesh  # noqa: E402
+from repro.train.optimizer import adam_abstract, adam_specs  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+from repro.utils import hlo as hlo_mod  # noqa: E402
+from repro.utils.roofline import Roofline, model_flops_for  # noqa: E402
+
+
+# Per-arch dry-run overrides: microbatch counts sized so activations fit,
+# and optimizer/FSDP settings sized so arctic fits a pod.
+TRAIN_OVERRIDES = {
+    "arctic-480b": dict(microbatches=16, state_dtype="int8",
+                        fsdp_over_pods=True),
+    "phi3.5-moe-42b-a6.6b": dict(microbatches=8, state_dtype="bfloat16"),
+    "llama3-8b": dict(microbatches=4, state_dtype="float32"),
+    "yi-9b": dict(microbatches=4, state_dtype="float32"),
+    "deepseek-7b": dict(microbatches=4, state_dtype="float32"),
+}
+DEFAULT_TRAIN = dict(microbatches=2, state_dtype="float32",
+                     fsdp_over_pods=False, tensor_parallel=True, cfg={})
+
+# §Perf hillclimb variants (--opt): hypothesis-driven changes per arch —
+# see EXPERIMENTS.md §Perf for the napkin math and measured deltas.
+# NOTE: the tensor_parallel=False variants are sized for the SINGLE-POD
+# mesh (global batch 256 = 256-way DP); on the 2x16x16 mesh the TP-free
+# mapping would need batch 512 or pod-replicated DP — §Perf numbers are
+# single-pod, as stated in EXPERIMENTS.md.
+OPT_OVERRIDES = {
+    # 1B params: TP all-reduces cost more than they save -> pure 256-way
+    # FSDP/DP (model axis becomes extra data parallelism)
+    "olmo-1b": dict(microbatches=1, tensor_parallel=False),
+    # 480B MoE: weight-stationary experts in reduce-scatter form — the
+    # expert hidden dim shards over fsdp, token-sized partials move instead
+    # of 960 GB of bf16 weights re-gathered per (layer x microbatch x pass).
+    # mb=4 and remat_group=5 were tried and REFUTED (EXPERIMENTS.md §Perf).
+    "arctic-480b": dict(microbatches=16, state_dtype="int8",
+                        fsdp_over_pods=True,
+                        cfg=dict(moe_shard="ff2")),
+    # mLSTM chunk sizing: state (C) read/write traffic scales 1/Q; the
+    # intra-chunk (Q,Q) matmuls grow ~Q — Q=256 ~ balances at hd=512
+    "xlstm-1.3b": dict(cfg=dict(mlstm_chunk=256)),
+    # weight-stationary experts REFUTED for phi3.5 (t_coll 15.2->29.5 s):
+    # its experts are ~30x smaller than arctic's, so moving tokens costs
+    # more than re-gathering weights — the dmodel/ff crossover is
+    # params-per-layer vs tokens-per-microbatch (EXPERIMENTS.md §Perf)
+    # "phi3.5-moe-42b-a6.6b": dict(cfg=dict(moe_shard="ff2")),  # refuted
+    # 7B dense: same TP-vs-FSDP trade as olmo (mb MUST be 1: 256-way DP
+    # needs the full 256-row global batch per microbatch)
+    "deepseek-7b": dict(microbatches=1, tensor_parallel=False),
+    # 8B dense, 128k vocab: flash projection showed collectives bind after
+    # the memory term falls -> same TP-free trade
+    "llama3-8b": dict(microbatches=1, tensor_parallel=False),
+    # 9B dense: crossover probe for the TP-free trade
+    "yi-9b": dict(microbatches=1, tensor_parallel=False),
+    # seamless / hymba train cells exceeded HBM at mb=2: remat was
+    # missing on the encoder; microbatches sized to fit
+    "seamless-m4t-medium": dict(microbatches=8),
+    "hymba-1.5b": dict(microbatches=8),
+    "xlstm-1.3b__train": dict(microbatches=4, cfg=dict(mlstm_chunk=256)),
+}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               collect_hlo: bool = True, opt: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    over = {**DEFAULT_TRAIN, **TRAIN_OVERRIDES.get(arch, {})}
+    if opt:
+        over.update(OPT_OVERRIDES.get(arch, {}))
+        key = f"{arch}__{shape.kind}"
+        over.update(OPT_OVERRIDES.get(key, {}))
+    if over.get("cfg"):
+        cfg = dataclasses.replace(cfg, **over["cfg"])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh, fsdp=cfg.fsdp,
+                           fsdp_over_pods=over["fsdp_over_pods"],
+                           tensor_parallel=over.get("tensor_parallel", True))
+    model = build_model(cfg, rules, mesh)
+    params_abs = model.abstract()
+    params_specs = model.specs()
+    batch_abs = model.input_specs(shape)
+    batch_specs = model.input_shardings(shape)
+
+    if shape.kind == "train":
+        tc = TrainConfig(microbatches=over["microbatches"])
+        step = make_train_step(model, tc, state_dtype=over["state_dtype"])
+        opt_abs = adam_abstract(params_abs, over["state_dtype"])
+        opt_specs = adam_specs(params_abs, params_specs, rules,
+                               over["state_dtype"])
+        metrics_specs = {"loss": P(), "grad_norm": P(), "step": P()}
+        jf = jax.jit(
+            step,
+            in_shardings=(_named(mesh, params_specs), _named(mesh, opt_specs),
+                          _named(mesh, batch_specs)),
+            out_shardings=(_named(mesh, params_specs),
+                           _named(mesh, opt_specs),
+                           _named(mesh, metrics_specs)),
+            donate_argnums=(0, 1))
+        lowered = jf.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+        cache_abs, cache_specs = model.cache_abstract(
+            shape.global_batch, shape.seq_len)
+        logits_spec = rules.spec_for(
+            (shape.global_batch, 1, cfg.padded_vocab()),
+            ("batch", None, "vocab"))
+        jf = jax.jit(
+            prefill,
+            in_shardings=(_named(mesh, params_specs),
+                          _named(mesh, batch_specs)),
+            out_shardings=(NamedSharding(mesh, logits_spec),
+                           _named(mesh, cache_specs)))
+        lowered = jf.lower(params_abs, batch_abs)
+    else:  # decode
+        def decode(params, cache, tokens):
+            return model.decode(params, cache, tokens)
+        cache_abs, cache_specs = model.cache_abstract(
+            shape.global_batch, shape.seq_len)
+        tok_abs = batch_abs["tokens"]
+        tok_spec = rules.spec_for(tok_abs.shape, ("batch", None))
+        logits_spec = rules.spec_for(
+            (shape.global_batch, 1, cfg.padded_vocab()),
+            ("batch", None, "vocab"))
+        jf = jax.jit(
+            decode,
+            in_shardings=(_named(mesh, params_specs),
+                          _named(mesh, cache_specs),
+                          NamedSharding(mesh, tok_spec)),
+            out_shardings=(NamedSharding(mesh, logits_spec),
+                           _named(mesh, cache_specs)),
+            donate_argnums=(1,))
+        lowered = jf.lower(params_abs, cache_abs, tok_abs)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost_raw": {k: cost.get(k, 0.0) for k in ("flops", "bytes accessed")},
+    }
+
+    if collect_hlo:
+        txt = compiled.as_text()
+        stats = hlo_mod.analyze(txt, n_dev)
+        corr = (stats.inst_weight / stats.inst_raw) if stats.inst_raw else 1.0
+        raw_flops = cost.get("flops", 0.0)
+        raw_bytes = cost.get("bytes accessed", 0.0)
+        rf = Roofline(
+            arch=arch, shape=shape_name, mesh=result["mesh"],
+            n_devices=int(n_dev),
+            raw_flops_per_dev=raw_flops,
+            raw_bytes_per_dev=raw_bytes,
+            flops_per_dev=stats.flops,
+            bytes_per_dev=stats.hbm_bytes,
+            collective_bytes_per_dev=stats.total_collective_bytes(),
+            collective_breakdown=dict(stats.collective_bytes),
+            model_flops=model_flops_for(cfg, shape),
+            memory_per_dev_bytes=result["memory"]["peak_per_device_bytes"],
+        ).finalize()
+        result["roofline"] = rf.to_dict()
+        result["hlo"] = {
+            "n_while": stats.n_while, "max_trip": stats.max_trip,
+            "collective_counts": stats.collective_counts,
+            "inst_weight_factor": round(corr, 2),
+        }
+    return result
+
+
+def run_cells(cells, out_dir: str, collect_hlo: bool = True,
+              opt: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    ok = True
+    for arch, shape_name, multi in cells:
+        tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+        path = os.path.join(out_dir, tag + ".json")
+        if os.path.exists(path):
+            print(f"SKIP {tag} (cached)")
+            continue
+        print(f"RUN  {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape_name, multi, collect_hlo, opt=opt)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            rl = res.get("roofline", {})
+            print(f"  ok compile={res['compile_s']}s "
+                  f"mem/dev={res['memory']['peak_per_device_bytes']/2**30:.2f}GiB "
+                  f"bottleneck={rl.get('bottleneck', '?')}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+            print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+    return ok
+
+
+def all_cells(mesh_mode: str):
+    cells = []
+    multis = {"single": [False], "multi": [True], "both": [False, True]}[mesh_mode]
+    for name, cfg in sorted(all_configs().items()):
+        if name == "mqrld-embedder-100m":
+            continue  # paper workload exercised by examples, not the grid
+        for sh in cfg.shape_cells():
+            for m in multis:
+                cells.append((name, sh.name, m))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip HLO text analysis (faster)")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply §Perf optimization overrides")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells(args.mesh)
+    else:
+        assert args.arch and args.shape
+        multis = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        cells = [(args.arch, args.shape, m) for m in multis]
+    ok = run_cells(cells, args.out, collect_hlo=not args.no_hlo,
+                   opt=args.opt)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 100 \
+      --seq-len 256 --reduced --ckpt /tmp/ckpt
+
+On a real TPU cluster this process runs per host (jax.distributed
+initializes from the TPU environment); on CPU it runs single-process. The
+data pipeline is a pure function of (seed, step, host), so any host can be
+replaced mid-run and the checkpointer restores elastically (see
+repro/checkpoint).
+"""
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mqrld-embedder-100m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="width-reduced config (CPU-friendly)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import TrainConfig, get_config
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tc = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
+                     warmup_steps=max(1, args.steps // 20),
+                     microbatches=args.microbatches,
+                     checkpoint_every=args.ckpt_every,
+                     checkpoint_dir=args.ckpt, seed=args.seed)
+    res = train(cfg, tc, seq_len=args.seq_len,
+                state_dtype=args.state_dtype)
+    print(f"done: {res.steps_run} steps, loss "
+          f"{res.losses[0] if res.losses else float('nan'):.4f} -> "
+          f"{res.final_loss:.4f}, skipped {res.skipped_steps}")
+
+
+if __name__ == "__main__":
+    main()

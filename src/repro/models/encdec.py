@@ -1,0 +1,213 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, F, d_model). The decoder is a text LM with
+causal self-attention + cross-attention to the encoder output. Decode caches
+both the self-attention KV (grows) and the cross-attention KV (computed once
+from the encoder output).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.spec import ParamDef
+from repro.models.transformer import stack_defs
+
+
+def _enc_block_defs(cfg) -> Dict[str, Any]:
+    return {
+        "norm1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attn_defs(cfg),
+        "norm2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def _dec_block_defs(cfg) -> Dict[str, Any]:
+    d = _enc_block_defs(cfg)
+    d["norm_x"] = ParamDef((cfg.d_model,), ("embed",), init="ones")
+    d["xattn"] = L.attn_defs(cfg)
+    return d
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    return {
+        "embed": L.embed_defs(cfg),
+        "enc": stack_defs(_enc_block_defs(cfg), cfg.enc_layers),
+        "dec": stack_defs(_dec_block_defs(cfg), cfg.num_layers),
+        "norm_enc_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "norm_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+def encode(cfg, params, frames, *, shard=L.no_shard, remat=False):
+    """frames: (B, F, d) stub frontend embeddings -> encoder states."""
+    x = shard(frames.astype(jnp.dtype(cfg.dtype)), "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, bp):
+        h = L.rmsnorm(x, bp["norm1"])
+        q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+        attn = L.attention_dense(q, L.expand_kv(cfg, k), L.expand_kv(cfg, v),
+                                 causal=False)
+        x = x + L.out_proj(cfg, bp["attn"], attn, shard)
+        x = x + L.mlp(bp["mlp"], L.rmsnorm(x, bp["norm2"]), shard)
+        return x, None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return L.rmsnorm(x, params["norm_enc_f"])
+
+
+def _cross(cfg, bp, x, enc_kv, shard):
+    """Cross-attention with precomputed encoder K/V."""
+    h = L.rmsnorm(x, bp["norm_x"])
+    q = jnp.einsum("bsd,dhk->bshk", h, bp["xattn"]["wq"].astype(h.dtype))
+    q = shard(q, "batch", "seq", "heads", None)
+    ek, ev = enc_kv
+    attn = L.attention_dense(q, L.expand_kv(cfg, ek), L.expand_kv(cfg, ev),
+                             causal=False)
+    return x + L.out_proj(cfg, bp["xattn"], attn, shard)
+
+
+def _enc_kv(cfg, bp, enc_out, shard):
+    ek = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    bp["xattn"]["wk"].astype(enc_out.dtype))
+    ev = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    bp["xattn"]["wv"].astype(enc_out.dtype))
+    return (shard(ek, "batch", "seq", "kv_heads", None),
+            shard(ev, "batch", "seq", "kv_heads", None))
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+def forward(cfg, params, tokens, frames, *, shard=L.no_shard, mode="train",
+            last_only=False, return_hidden=False):
+    enc_out = encode(cfg, params, frames, shard=shard,
+                     remat=(cfg.remat == "block" and mode == "train"))
+    if return_hidden:
+        # the platform's embedding for enc-dec archs: pooled encoder states
+        return jnp.mean(enc_out.astype(jnp.float32), axis=1)
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, bp):
+        h = L.rmsnorm(x, bp["norm1"])
+        q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+        ke, ve = L.expand_kv(cfg, k), L.expand_kv(cfg, v)
+        if mode == "stream":
+            attn = L.attention_stream(q, ke, ve, causal=True)
+        else:
+            attn = L.attention_dense(q, ke, ve, causal=True)
+        x = x + L.out_proj(cfg, bp["attn"], attn, shard)
+        x = _cross(cfg, bp, x, _enc_kv(cfg, bp, enc_out, shard), shard)
+        x = x + L.mlp(bp["mlp"], L.rmsnorm(x, bp["norm2"]), shard)
+        return x, None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) \
+        if (cfg.remat == "block" and mode == "train") else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    x = L.rmsnorm(x, params["norm_f"])
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], x, shard), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+@dataclass
+class EncDecCache:
+    k: jax.Array       # (L, B, max_len, Kv, hd) self-attn
+    v: jax.Array
+    xk: jax.Array      # (L, B, F, Kv, hd) cross-attn (static)
+    xv: jax.Array
+    length: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    EncDecCache, data_fields=["k", "v", "xk", "xv", "length"], meta_fields=[])
+
+
+def _cache_shapes(cfg, batch, max_len):
+    kv, hd = cfg.kvp(), cfg.hd()
+    dt = jnp.dtype(cfg.dtype)
+    f = cfg.frontend_tokens
+    lyr = cfg.num_layers
+    return dict(k=((lyr, batch, max_len, kv, hd), dt),
+                v=((lyr, batch, max_len, kv, hd), dt),
+                xk=((lyr, batch, f, kv, hd), dt),
+                xv=((lyr, batch, f, kv, hd), dt),
+                length=((), jnp.int32))
+
+
+def init_cache(cfg, batch: int, max_len: int) -> EncDecCache:
+    shp = _cache_shapes(cfg, batch, max_len)
+    return EncDecCache(**{k: jnp.zeros(s, d) for k, (s, d) in shp.items()})
+
+
+def cache_spec(cfg, batch: int, max_len: int, rules):
+    shp = _cache_shapes(cfg, batch, max_len)
+    abstract = EncDecCache(**{k: jax.ShapeDtypeStruct(s, d)
+                              for k, (s, d) in shp.items()})
+    lg = (None, "batch", None, "kv_heads", None)
+    spec = EncDecCache(
+        k=rules.kv_spec(shp["k"][0], lg, batch_dim=1, seq_dim=2),
+        v=rules.kv_spec(shp["v"][0], lg, batch_dim=1, seq_dim=2),
+        xk=rules.kv_spec(shp["xk"][0], lg, batch_dim=1, seq_dim=2),
+        xv=rules.kv_spec(shp["xv"][0], lg, batch_dim=1, seq_dim=2),
+        length=jax.sharding.PartitionSpec())
+    return abstract, spec
+
+
+def build_cross_cache(cfg, params, frames, cache: EncDecCache, *,
+                      shard=L.no_shard) -> EncDecCache:
+    """Encode the frames once and fill the cross-attention KV."""
+    enc_out = encode(cfg, params, frames, shard=shard)
+
+    def body(_, bp):
+        ek, ev = _enc_kv(cfg, bp, enc_out, shard)
+        return None, (ek.astype(cache.xk.dtype), ev.astype(cache.xv.dtype))
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec"])
+    return EncDecCache(k=cache.k, v=cache.v, xk=xk, xv=xv,
+                       length=cache.length)
+
+
+def decode_step(cfg, params, cache: EncDecCache, tokens, *,
+                shard=L.no_shard):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    idx = cache.length
+    positions = jnp.full(tokens.shape, idx, jnp.int32)
+
+    def body(x, xs):
+        bp, ck, cv, xk, xv = xs
+        h = L.rmsnorm(x, bp["norm1"])
+        q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), idx, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), idx, 1)
+        attn = L.attention_dense(q, L.expand_kv(cfg, ck), L.expand_kv(cfg, cv),
+                                 causal=False, q_offset=idx,
+                                 kv_valid_len=idx + 1)
+        x = x + L.out_proj(cfg, bp["attn"], attn, shard)
+        x = _cross(cfg, bp, x, (xk, xv), shard)
+        x = x + L.mlp(bp["mlp"], L.rmsnorm(x, bp["norm2"]), shard)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], cache.k, cache.v, cache.xk, cache.xv))
+    x = L.rmsnorm(x, params["norm_f"])
+    lg = L.logits(params["embed"], x, shard)
+    return lg, EncDecCache(k=nk, v=nv, xk=cache.xk, xv=cache.xv,
+                           length=cache.length + 1)

@@ -1,0 +1,369 @@
+"""Hymba: per-block *parallel* attention heads + Mamba (selective-SSM) heads.
+
+Each block normalizes the input once, runs an attention branch and a
+selective-SSM branch on the same hidden state, and fuses the two by averaging
+their re-normalized outputs (the Hymba fusion rule), then a SwiGLU MLP.
+
+Layer pattern: within each group of ``global_every`` layers, the last uses
+full (global) attention and the rest sliding-window attention (``cfg.window``)
+— this is what makes the 512k decode cell sub-quadratic: windowed layers keep
+a ring-buffer KV of size `window`, the SSM branch carries O(1) state, and only
+``num_layers/global_every`` layers keep a full cache.
+
+SSM executed in a chunked associative-scan form (TPU adaptation of the CUDA
+selective-scan kernel): within-chunk ``lax.associative_scan`` over materialized
+(decay, drive) pairs, across chunks a ``lax.scan`` recurrence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.spec import ParamDef
+from repro.models.transformer import stack_defs
+
+CONV_K = 4  # depthwise causal conv kernel width
+
+
+def _dm(cfg) -> int:
+    return cfg.ssm_heads * cfg.hd()
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+def mamba_defs(cfg) -> Dict[str, ParamDef]:
+    d, dm, n, r = cfg.d_model, _dm(cfg), cfg.ssm_state, _dt_rank(cfg)
+    return {
+        "in_proj": ParamDef((d, 2, dm), ("embed", None, "heads")),
+        "conv_w": ParamDef((CONV_K, dm), (None, "heads"), scale=1.0),
+        "conv_b": ParamDef((dm,), ("heads",), init="zeros"),
+        "x_proj": ParamDef((dm, r + 2 * n), ("heads", None)),
+        "dt_proj": ParamDef((r, dm), (None, "heads")),
+        "dt_bias": ParamDef((dm,), ("heads",), init="zeros"),
+        "a_log": ParamDef((dm, n), ("heads", None), init="ones"),
+        "d_skip": ParamDef((dm,), ("heads",), init="ones"),
+        "out_proj": ParamDef((dm, d), ("heads", "embed")),
+    }
+
+
+def block_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "norm1": ParamDef((d,), ("embed",), init="ones"),
+        "attn": L.attn_defs(cfg),
+        "mamba": mamba_defs(cfg),
+        "norm_attn": ParamDef((d,), ("embed",), init="ones"),
+        "norm_ssm": ParamDef((d,), ("embed",), init="ones"),
+        "norm2": ParamDef((d,), ("embed",), init="ones"),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def group_shape(cfg) -> Tuple[int, int]:
+    g = cfg.num_layers // cfg.global_every
+    return g, cfg.global_every - 1  # (groups, windowed per group)
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    g, w = group_shape(cfg)
+    return {
+        "embed": L.embed_defs(cfg),
+        "win": stack_defs(stack_defs(block_defs(cfg), w), g),
+        "glob": stack_defs(block_defs(cfg), g),
+        "norm_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba branch
+# ---------------------------------------------------------------------------
+def _ssm_inputs(cfg, p, x):
+    """Projections shared by scan/step. x: (B, S, d)."""
+    n, r = cfg.ssm_state, _dt_rank(cfg)
+    xz = jnp.einsum("bsd,dqm->bsqm", x, p["in_proj"].astype(x.dtype))
+    xs, z = xz[:, :, 0], xz[:, :, 1]  # (B, S, dm)
+    return xs, z, n, r
+
+
+def _conv(p, xs, conv_state=None):
+    """Causal depthwise conv. xs: (B, S, dm); conv_state: (B, K-1, dm)."""
+    b, s, dm = xs.shape
+    pad = conv_state if conv_state is not None else \
+        jnp.zeros((b, CONV_K - 1, dm), xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)
+    w = p["conv_w"].astype(xs.dtype)  # (K, dm)
+    out = sum(xp[:, j:j + s] * w[j] for j in range(CONV_K))
+    out = out + p["conv_b"].astype(xs.dtype)
+    new_state = xp[:, -(CONV_K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_coeffs(cfg, p, xc, xs):
+    """a (decay), bu (drive), C from conv output. All (B, S, dm, N) / (B,S,N)."""
+    n, r = cfg.ssm_state, _dt_rank(cfg)
+    xdb = jnp.einsum("bsm,mq->bsq", xc, p["x_proj"].astype(xc.dtype))
+    dt_low, bmat, cmat = xdb[..., :r], xdb[..., r:r + n], xdb[..., r + n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rm->bsm", dt_low, p["dt_proj"].astype(xc.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))          # (dm, N)
+    a = jnp.exp(dt[..., None] * a_mat)                         # (B,S,dm,N)
+    bu = (dt * xc.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]                # (B,S,dm,N)
+    return a, bu, cmat.astype(jnp.float32)
+
+
+def mamba_scan(cfg, p, x, shard=L.no_shard, state=None, chunk: int = 128):
+    """Full-sequence selective SSM. Returns (y, (h, conv_state))."""
+    b, s, d = x.shape
+    xs, z, n, _ = _ssm_inputs(cfg, p, x)
+    h0, conv0 = state if state is not None else (None, None)
+    xc, conv_state = _conv(p, xs, conv0)
+    a, bu, cmat = _ssm_coeffs(cfg, p, xc, xs)
+    dm = xs.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, dm, n), jnp.float32)
+
+    qc = int(min(chunk, s))
+    assert s % qc == 0
+    nc = s // qc
+    ar = a.reshape(b, nc, qc, dm, n)
+    br = bu.reshape(b, nc, qc, dm, n)
+
+    def binop(lhs, rhs):
+        al, bl = lhs
+        ar_, br_ = rhs
+        return al * ar_, bl * ar_ + br_
+
+    def body(h, xs_):
+        ac, bc = xs_  # (b, qc, dm, n)
+        cum_a, cum_b = jax.lax.associative_scan(binop, (ac, bc), axis=1)
+        hs = cum_a * h[:, None] + cum_b      # (b, qc, dm, n)
+        return hs[:, -1], hs
+
+    h, hs = jax.lax.scan(body, h0, (jnp.moveaxis(ar, 1, 0),
+                                    jnp.moveaxis(br, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, dm, n)
+    y = jnp.einsum("bsmn,bsn->bsm", hs, cmat.reshape(b, s, n))
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsm,md->bsd", y, p["out_proj"].astype(x.dtype))
+    return shard(out, "batch", "seq", None), (h, conv_state)
+
+
+def mamba_step(cfg, p, x, state, shard=L.no_shard):
+    """One-token SSM step. x: (B, 1, d); state = (h, conv_state)."""
+    h0, conv0 = state
+    xs, z, n, _ = _ssm_inputs(cfg, p, x)
+    xc, conv_state = _conv(p, xs, conv0)
+    a, bu, cmat = _ssm_coeffs(cfg, p, xc, xs)
+    h = a[:, 0] * h0 + bu[:, 0]
+    y = jnp.einsum("bmn,bn->bm", h, cmat[:, 0])
+    y = y + p["d_skip"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bm,md->bd", y, p["out_proj"].astype(x.dtype))[:, None]
+    return out, (h, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+def _fuse(bp, attn_out, ssm_out):
+    return 0.5 * (L.rmsnorm(attn_out, bp["norm_attn"])
+                  + L.rmsnorm(ssm_out, bp["norm_ssm"]))
+
+
+def block_seq(cfg, bp, x, positions, shard, *, window: int, mode: str,
+              ssm_state=None):
+    """Full-sequence block (train / prefill). Returns (x, new_ssm_state)."""
+    h = L.rmsnorm(x, bp["norm1"])
+    q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+    ke, ve = L.expand_kv(cfg, k), L.expand_kv(cfg, v)
+    if mode == "stream":
+        attn = L.attention_stream(q, ke, ve, causal=True, window=window)
+    else:
+        attn = L.attention_dense(q, ke, ve, causal=True, window=window)
+    attn_out = L.out_proj(cfg, bp["attn"], attn, shard)
+    ssm_out, new_state = mamba_scan(cfg, bp["mamba"], h, shard, ssm_state)
+    x = x + _fuse(bp, attn_out, ssm_out)
+    x = x + L.mlp(bp["mlp"], L.rmsnorm(x, bp["norm2"]), shard)
+    return x, new_state
+
+
+def block_decode(cfg, bp, x, idx, shard, *, kv, kv_positions, ssm_state,
+                 window_ring: bool):
+    """One-token block. kv=(ck, cv); returns (x, (ck, cv), kpos, ssm_state)."""
+    h = L.rmsnorm(x, bp["norm1"])
+    positions = jnp.full(x.shape[:2], idx, jnp.int32)
+    q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+    ck, cv = kv
+    if window_ring:
+        slot = idx % ck.shape[1]
+        kpos = kv_positions.at[slot].set(idx)
+    else:
+        slot = idx
+        kpos = None
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, 1)
+    cke, cve = L.expand_kv(cfg, ck), L.expand_kv(cfg, cv)
+    if window_ring:
+        attn = L.attention_dense(q, cke, cve, causal=True, q_offset=idx,
+                                 kv_positions=kpos)
+    else:
+        attn = L.attention_dense(q, cke, cve, causal=False, q_offset=idx,
+                                 kv_valid_len=idx + 1)
+        kpos = kv_positions
+    attn_out = L.out_proj(cfg, bp["attn"], attn, shard)
+    ssm_out, new_state = mamba_step(cfg, bp["mamba"], h, ssm_state, shard)
+    x = x + _fuse(bp, attn_out, ssm_out)
+    x = x + L.mlp(bp["mlp"], L.rmsnorm(x, bp["norm2"]), shard)
+    return x, (ck, cv), kpos, new_state
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+@dataclass
+class HymbaCache:
+    wk: jax.Array     # (G, W, B, window, Kv, hd) ring buffers
+    wv: jax.Array
+    wpos: jax.Array   # (G, W, window) absolute positions (init -1)
+    gk: jax.Array     # (G, B, max_len, Kv, hd) global layers
+    gv: jax.Array
+    w_ssm: jax.Array  # (G, W, B, dm, N)
+    w_conv: jax.Array  # (G, W, B, K-1, dm)
+    g_ssm: jax.Array  # (G, B, dm, N)
+    g_conv: jax.Array  # (G, B, K-1, dm)
+    length: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    HymbaCache,
+    data_fields=["wk", "wv", "wpos", "gk", "gv", "w_ssm", "w_conv",
+                 "g_ssm", "g_conv", "length"],
+    meta_fields=[])
+
+
+def _cache_shapes(cfg, batch: int, max_len: int):
+    g, w = group_shape(cfg)
+    kv, hd, dm, n = cfg.kvp(), cfg.hd(), _dm(cfg), cfg.ssm_state
+    win = min(cfg.window, max_len)
+    dt = jnp.dtype(cfg.dtype)
+    return dict(
+        wk=((g, w, batch, win, kv, hd), dt),
+        wv=((g, w, batch, win, kv, hd), dt),
+        wpos=((g, w, win), jnp.int32),
+        gk=((g, batch, max_len, kv, hd), dt),
+        gv=((g, batch, max_len, kv, hd), dt),
+        w_ssm=((g, w, batch, dm, n), jnp.float32),
+        w_conv=((g, w, batch, CONV_K - 1, dm), dt),
+        g_ssm=((g, batch, dm, n), jnp.float32),
+        g_conv=((g, batch, CONV_K - 1, dm), dt),
+        length=((), jnp.int32))
+
+
+def init_cache(cfg, batch: int, max_len: int) -> HymbaCache:
+    shp = _cache_shapes(cfg, batch, max_len)
+    arrs = {k: jnp.zeros(s, d) for k, (s, d) in shp.items()}
+    arrs["wpos"] = arrs["wpos"] - 1
+    return HymbaCache(**arrs)
+
+
+def cache_spec(cfg, batch: int, max_len: int, rules):
+    shp = _cache_shapes(cfg, batch, max_len)
+    abstract = HymbaCache(**{k: jax.ShapeDtypeStruct(s, d)
+                             for k, (s, d) in shp.items()})
+    logical = dict(
+        wk=(None, None, "batch", None, "kv_heads", None),
+        wv=(None, None, "batch", None, "kv_heads", None),
+        wpos=(None, None, None),
+        gk=(None, "batch", None, "kv_heads", None),
+        gv=(None, "batch", None, "kv_heads", None),
+        w_ssm=(None, None, "batch", "heads", None),
+        w_conv=(None, None, "batch", None, "heads"),
+        g_ssm=(None, "batch", "heads", None),
+        g_conv=(None, "batch", None, "heads"),
+        length=())
+    spec = {k: rules.spec_for(shp[k][0], lg) for k, lg in logical.items()}
+    # global-attention caches: SP fallback when batch cannot shard
+    for k in ("gk", "gv"):
+        spec[k] = rules.kv_spec(shp[k][0], logical[k], batch_dim=1, seq_dim=2)
+    for k in ("wk", "wv"):
+        spec[k] = rules.kv_spec(shp[k][0], logical[k], batch_dim=2, seq_dim=3)
+    return abstract, HymbaCache(**spec)
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+def forward(cfg, params, tokens, *, shard=L.no_shard, mode="train",
+            last_only=False, return_hidden=False):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def group_body(x, gp):
+        def win_body(x, bp):
+            x, _ = block_seq(cfg, bp, x, positions, shard,
+                             window=cfg.window, mode=mode)
+            return x, None
+        win_fn = jax.checkpoint(win_body, prevent_cse=False) \
+            if (cfg.remat == "block" and mode == "train") else win_body
+        x, _ = jax.lax.scan(win_fn, x, gp["win"])
+        x, _ = block_seq(cfg, gp["glob"], x, positions, shard,
+                         window=0, mode=mode)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x,
+                        {"win": params["win"], "glob": params["glob"]})
+    x = L.rmsnorm(x, params["norm_f"])
+    if return_hidden:
+        return jnp.mean(x.astype(jnp.float32), axis=1)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], x, shard), jnp.zeros((), jnp.float32)
+
+
+def decode_step(cfg, params, cache: HymbaCache, tokens, *, shard=L.no_shard):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    idx = cache.length
+
+    def group_body(x, xs):
+        gp, wk, wv, wpos, gk, gv, wssm, wconv, gssm, gconv = xs
+
+        def win_body(x, bxs):
+            bp, ck, cv, kpos, ssm, conv = bxs
+            x, (ck, cv), kpos, (ssm, conv) = block_decode(
+                cfg, bp, x, idx, shard, kv=(ck, cv), kv_positions=kpos,
+                ssm_state=(ssm, conv), window_ring=True)
+            return x, (ck, cv, kpos, ssm, conv)
+        x, wys = jax.lax.scan(win_body, x,
+                              (gp["win"], wk, wv, wpos, wssm, wconv))
+        x, (gk, gv), _, (gssm, gconv) = block_decode(
+            cfg, gp["glob"], x, idx, shard, kv=(gk, gv), kv_positions=None,
+            ssm_state=(gssm, gconv), window_ring=False)
+        return x, (wys, gk, gv, gssm, gconv)
+
+    st = cache
+    x, (wys, gk, gv, gssm, gconv) = jax.lax.scan(
+        group_body, x,
+        ({"win": params["win"], "glob": params["glob"]},
+         st.wk, st.wv, st.wpos, st.gk, st.gv,
+         st.w_ssm, st.w_conv, st.g_ssm, st.g_conv))
+    wk, wv, wpos, wssm, wconv = wys
+    x = L.rmsnorm(x, params["norm_f"])
+    lg = L.logits(params["embed"], x, shard)
+    new = HymbaCache(wk=wk, wv=wv, wpos=wpos, gk=gk, gv=gv,
+                     w_ssm=wssm, w_conv=wconv, g_ssm=gssm, g_conv=gconv,
+                     length=cache.length + 1)
+    return lg, new

@@ -1,0 +1,257 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, SwiGLU MLP.
+
+Attention comes in three executions sharing one math definition:
+  * ``dense``  — einsum + mask softmax (differentiable; train_4k scale)
+  * ``stream`` — online-softmax scan over KV chunks (forward-only; 32k prefill)
+  * ``decode`` — single-query attention against a cache
+On TPU the dense/stream paths are swapped for the Pallas flash kernel
+(`repro.kernels.flash_attention`) behind the same signature.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.spec import ParamDef
+
+Shard = Callable[..., jax.Array]  # shard(x, *logical_axes) -> x
+
+
+def no_shard(x, *logical):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def nonparam_ln(x):
+    """OLMo-style non-parametric LayerNorm (no scale, no bias)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + 1e-6)).astype(dt)
+
+
+def norm_def(cfg):
+    if cfg.norm == "nonparam_ln":
+        return None
+    return ParamDef((cfg.d_model,), ("embed",), init="ones")
+
+
+def apply_norm(cfg, scale, x):
+    return nonparam_ln(x) if scale is None else rmsnorm(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # ang: (..., seq, 1, half), broadcast over the heads axis
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+#
+# Heads are padded to a TP multiple (cfg.hp()/cfg.kvp()); padded heads are
+# masked in the output projection so the math equals the unpadded arch.
+# GQA expansion uses a static GATHER (k[:, :, head_map]) rather than a
+# (kv, group) reshape: merged-dim reshapes of TP-sharded tensors trigger
+# GSPMD full-rematerialization copies, gathers do not.
+# ---------------------------------------------------------------------------
+def attn_defs(cfg) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.hd()
+    return {
+        "wq": ParamDef((d, cfg.hp(), hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, cfg.kvp(), hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, cfg.kvp(), hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((cfg.hp(), hd, d), ("heads", None, "embed")),
+    }
+
+
+def head_mask(cfg):
+    """(hp,) 1.0 for real heads, 0.0 for padding heads."""
+    return (jnp.arange(cfg.hp()) < cfg.num_heads).astype(jnp.float32)
+
+
+def head_map(cfg):
+    """(hp,) index of the kv head serving each q head. Real heads keep the
+    UNPADDED arch's grouping (i // (H/Kv)); padding heads clamp to the last
+    kv head (their output is masked anyway)."""
+    g = max(1, cfg.num_heads // cfg.num_kv_heads)
+    return jnp.minimum(jnp.arange(cfg.hp()) // g, cfg.kvp() - 1)
+
+
+def expand_kv(cfg, k):
+    """(B, S, kvp, hd) -> (B, S, hp, hd) by static gather."""
+    return k[:, :, head_map(cfg), :]
+
+
+def qkv(cfg, p, x, positions, shard: Shard = no_shard):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_dense(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_valid_len=None,
+                    kv_positions=None) -> jax.Array:
+    """Einsum attention, full-width heads. q/k/v: (B, S, hp, hd) — the
+    caller expands GQA kv heads with ``expand_kv`` first. Differentiable.
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_valid_len``: mask out cache positions >= this (decode into a
+    pre-allocated cache).
+    ``kv_positions``: (Skv,) absolute positions of cache slots (ring-buffer
+    decode); entries < 0 are invalid.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores *= 1.0 / np.sqrt(hd)
+    qpos = jnp.arange(sq) + q_offset            # (sq,)
+    if kv_positions is None:
+        kpos = jnp.arange(skv)                  # (skv,)
+        mask = jnp.ones((sq, skv), dtype=bool)
+    else:
+        kpos = kv_positions
+        mask = (kpos >= 0)[None, :] & jnp.ones((sq, 1), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid_len is not None:
+        mask &= kpos[None, :] < kv_valid_len
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)
+
+
+def attention_stream(q, k, v, *, causal: bool = True, window: int = 0,
+                     chunk: int = 1024) -> jax.Array:
+    """Online-softmax over KV chunks; forward-only (used for 32k+ prefill).
+
+    Never materializes the (Sq, Skv) score matrix: live memory is one
+    (Sq, chunk) tile of scores per head. q/k/v: (B, S, hp, hd), kv
+    pre-expanded. On TPU this dispatches to the Pallas flash kernel
+    (same signature, oracle-validated).
+    """
+    if jax.default_backend() == "tpu" and q.shape[1] == k.shape[1]:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window)
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    n_chunks = skv // chunk
+    qf = q.astype(jnp.float32)
+    kc = k.reshape(b, n_chunks, chunk, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).astype(jnp.float32)
+    qpos = jnp.arange(sq)
+    scale = 1.0 / np.sqrt(hd)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, start = xs
+        scores = jnp.einsum("bqhd,bshd->bhqs", qf, kb) * scale
+        kpos = start + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqs,bshd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 2, 1).astype(q.dtype)  # (b, sq, h, hd)
+
+
+def out_proj(cfg, p, attn_out, shard: Shard = no_shard):
+    """Masks padding heads, then projects back to d_model."""
+    if cfg.hp() != cfg.num_heads:
+        attn_out = attn_out * head_mask(cfg)[None, None, :, None].astype(
+            attn_out.dtype)
+    o = jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(attn_out.dtype))
+    return shard(o, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "ff")),
+        "w_up": ParamDef((d, f), ("embed", "ff")),
+        "w_down": ParamDef((f, d), ("ff", "embed")),
+    }
+
+
+def mlp(p, x, shard: Shard = no_shard):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = shard(jax.nn.silu(g) * u, "batch", "seq", "ff")
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype)),
+                 "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_defs(cfg) -> Dict[str, ParamDef]:
+    v = cfg.padded_vocab()
+    return {
+        "tok": ParamDef((v, cfg.d_model), ("vocab", "fsdp")),
+        "unembed": ParamDef((cfg.d_model, v), ("fsdp", "vocab")),
+    }
+
+
+def embed(p, tokens, shard: Shard = no_shard, dtype=jnp.bfloat16):
+    x = p["tok"].astype(dtype)[tokens]
+    return shard(x, "batch", "seq", None)
+
+
+def logits(p, x, shard: Shard = no_shard):
+    out = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(x.dtype))
+    return shard(out, "batch", "seq", "vocab")

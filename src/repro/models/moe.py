@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: top-k routing, capacity, EP sharding.
+
+GShard-style one-hot dispatch (einsum form) — robust under GSPMD: experts are
+sharded over the ``model`` axis (EP) and XLA inserts the all-to-alls. Arctic's
+parallel dense-residual branch is a plain SwiGLU added to the MoE output.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamDef
+from repro.models.layers import Shard, no_shard, mlp_defs, mlp
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    d, f, e = cfg.d_model, cfg.expert_ff(), cfg.num_experts
+    if cfg.moe_shard == "ff":
+        # weight-stationary experts: shard the HIDDEN dim over the fsdp
+        # axis. The d-contraction of the up-projection is then local (no
+        # weight gather); only the down-projection's token-sized partial
+        # sums cross the fsdp axis — tokens move, 480B of weights don't.
+        gate_lg = ("experts", None, "fsdp")
+        down_lg = ("experts", "fsdp", None)
+    else:
+        gate_lg = ("experts", "fsdp", None)
+        down_lg = ("experts", None, "fsdp")
+    defs = {
+        "router": ParamDef((d, e), ("embed", "experts")),
+        "w_gate": ParamDef((e, d, f), gate_lg),
+        "w_up": ParamDef((e, d, f), gate_lg),
+        "w_down": ParamDef((e, f, d), down_lg),
+    }
+    if cfg.dense_residual_ff:
+        defs["dense"] = mlp_defs(cfg, cfg.dense_residual_ff)
+    return defs
+
+
+def moe(cfg, p, x, shard: Shard = no_shard, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balance loss."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = int(max(k, capacity_factor * k * s / e))
+
+    gate_logits = jnp.einsum(
+        "bsd,de->bse", x, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, k)             # (b, s, k)
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(topk_i, e, dtype=jnp.int32)   # (b, s, k, e)
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # (b, s*k, e)
+    pos = pos.reshape(b, s, k, e)
+    in_cap = (pos < cap)
+    slot = jnp.sum(pos * onehot, axis=-1)                  # (b, s, k)
+    keep = jnp.sum(in_cap & (onehot > 0), axis=-1) > 0     # (b, s, k)
+
+    # dispatch/combine tensors: (b, s, e, cap)
+    disp = (jax.nn.one_hot(topk_i, e, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(slot, cap, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))       # (b, s, k, e, cap)
+    combine = (disp * topk_p.astype(x.dtype)[..., None, None]).sum(axis=2)
+    disp = disp.sum(axis=2)
+    disp = shard(disp, "batch", None, "experts", None)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", disp, x)            # (e, b, cap, d)
+    if cfg.moe_shard.startswith("ff"):
+        # weight-stationary: tokens replicated over the fsdp axis, expert
+        # hidden dim sharded over it — the up-proj contraction is local
+        xin = shard(xin, "experts", None, None, None)
+        g = jnp.einsum("ebcd,edf->ebcf", xin, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"].astype(x.dtype))
+        h = shard(jax.nn.silu(g) * u, "experts", None, None, "fsdp")
+        xout = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"].astype(x.dtype))
+        if cfg.moe_shard == "ff2":
+            # reduce-scatter form: keep the down-proj partial sums d-sharded
+            # (RS wire = half the all-reduce); the residual add re-gathers
+            xout = shard(xout, "experts", None, None, "fsdp")
+        else:
+            xout = shard(xout, "experts", None, None, None)
+    else:
+        xin = shard(xin, "experts", "batch", None, None)
+        g = jnp.einsum("ebcd,edf->ebcf", xin, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+        xout = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"].astype(x.dtype))
+        xout = shard(xout, "experts", "batch", None, None)
+    out = jnp.einsum("bsec,ebcd->bsd", combine, xout)
+    out = shard(out, "batch", "seq", None)
+
+    # Switch-style load-balance auxiliary loss
+    density = jnp.mean(
+        jax.nn.one_hot(topk_i[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_prob)
+
+    if cfg.dense_residual_ff:
+        out = out + mlp(p["dense"], x, shard)
+    return out, aux

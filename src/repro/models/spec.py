@@ -1,0 +1,69 @@
+"""Parameter declaration DSL.
+
+Each model declares its parameters once as a nested tree of ``ParamDef``
+(shape + logical axes + init scale). From that single declaration we derive:
+  * initialized arrays (``init_params``)
+  * ``jax.ShapeDtypeStruct`` stand-ins for ``.lower()`` (no allocation)
+  * ``PartitionSpec`` trees (via ``MeshRules``)
+keeping init / dry-run / sharding structurally identical by construction.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partitioning import MeshRules
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"       # "normal" | "zeros" | "ones"
+    scale: float = 1.0          # stddev multiplier for "normal"
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=is_def)
+
+
+def abstract_params(defs):
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def param_specs(defs, rules: MeshRules):
+    return tree_map_defs(lambda d: rules.spec_for(d.shape, d.logical), defs)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, d.shape) * std).astype(d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(math.prod(d.shape)) for d in leaves)

@@ -1,0 +1,251 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone) with:
+
+  * scan-over-layers (stacked params, small HLO, per-layer FSDP gathers)
+  * optional remat per block
+  * three entry points: ``forward`` (train/prefill), ``decode_step`` (one token
+    against a KV cache), ``init_cache``
+  * GQA attention, sliding-window option, MoE blocks, frontend-stub inputs
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import moe, moe_defs
+from repro.models.spec import ParamDef, tree_map_defs
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+def _block_defs(cfg) -> Dict[str, Any]:
+    d: Dict[str, Any] = {"attn": L.attn_defs(cfg)}
+    n1, n2 = L.norm_def(cfg), L.norm_def(cfg)
+    if n1 is not None:
+        d["norm1"], d["norm2"] = n1, n2
+    if cfg.is_moe:
+        d["moe"] = moe_defs(cfg)
+    elif cfg.d_ff:
+        d["mlp"] = L.mlp_defs(cfg)
+    return d
+
+
+def stack_defs(defs, n: int):
+    return tree_map_defs(
+        lambda p: ParamDef((n,) + p.shape, ("layers",) + p.logical,
+                           init=p.init, scale=p.scale, dtype=p.dtype), defs)
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    d: Dict[str, Any] = {"embed": L.embed_defs(cfg)}
+    d["blocks"] = stack_defs(_block_defs(cfg), cfg.num_layers)
+    nf = L.norm_def(cfg)
+    if nf is not None:
+        d["norm_f"] = nf
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _block(cfg, bp, x, positions, shard, *, mode: str,
+           window: int, kv_cache=None, kv_index=None):
+    """One transformer block. Returns (x, aux, new_kv)."""
+    h = L.apply_norm(cfg, bp.get("norm1"), x)
+    q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+    new_kv = None
+    if mode == "decode":
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), kv_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), kv_index, axis=1)
+        new_kv = (ck, cv)
+        attn = L.attention_dense(q, L.expand_kv(cfg, ck), L.expand_kv(cfg, cv),
+                                 causal=False, window=window,
+                                 q_offset=kv_index, kv_valid_len=kv_index + 1)
+    elif mode == "stream":
+        attn = L.attention_stream(q, L.expand_kv(cfg, k), L.expand_kv(cfg, v),
+                                  causal=True, window=window)
+    else:  # train / dense prefill
+        attn = L.attention_dense(q, L.expand_kv(cfg, k), L.expand_kv(cfg, v),
+                                 causal=True, window=window)
+    x = x + L.out_proj(cfg, bp["attn"], attn, shard)
+
+    h = L.apply_norm(cfg, bp.get("norm2"), x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        out, aux = moe(cfg, bp["moe"], h, shard)
+        x = x + out
+    elif cfg.d_ff:
+        x = x + L.mlp(bp["mlp"], h, shard)
+    if mode == "stream":
+        x = shard(x, "batch", "seq", None)
+    return x, aux, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg, params, tokens, frontend_embeds, shard, dtype):
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    if frontend_embeds is not None:
+        fe = shard(frontend_embeds.astype(dtype), "batch", "seq", None)
+        x = jnp.concatenate([fe, x], axis=1)
+    return shard(x, "batch", "seq", None)
+
+
+def forward(cfg, params, tokens, *, frontend_embeds=None, mode: str = "train",
+            shard: L.Shard = L.no_shard, last_only: bool = False):
+    """Returns (logits, aux_loss). mode: "train" (dense attn) | "stream"."""
+    assert not cfg.window, "windowed archs use their own module (hymba)"
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(cfg, params, tokens, frontend_embeds, shard, dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a, _ = _block(cfg, bp, x, positions, shard, mode=mode, window=0)
+        return (x, aux + a), None
+
+    body_fn = body
+    if cfg.remat == "block" and mode == "train":
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+
+    g = cfg.remat_group
+    if (g > 1 and mode == "train" and cfg.scan_layers
+            and cfg.num_layers % g == 0):
+        # grouped remat: checkpoint an inner scan of g layers; carries are
+        # saved once per GROUP (microbatch-heavy configs: arctic 33 GiB of
+        # per-layer carries -> ~7 GiB)
+        grouped = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers // g, g) + a.shape[1:]),
+            params["blocks"])
+
+        def group_body(carry, gp):
+            out, _ = jax.lax.scan(body, carry, gp)
+            return out, None
+
+        group_fn = jax.checkpoint(group_body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(
+            group_fn, (x, jnp.zeros((), jnp.float32)), grouped)
+    elif cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x, aux), _ = body_fn((x, aux), bp)
+
+    x = L.apply_norm(cfg, params.get("norm_f"), x)
+    if last_only:
+        x = x[:, -1:]
+    lg = L.logits(params["embed"], x, shard)
+    return lg, aux
+
+
+def pooled_embedding(cfg, params, tokens, *, frontend_embeds=None,
+                     shard: L.Shard = L.no_shard):
+    """Mean-pooled final hidden state — the platform's embedding vector."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(cfg, params, tokens, frontend_embeds, shard, dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, bp):
+        x, _, _ = _block(cfg, bp, x, positions, shard, mode="train",
+                         window=cfg.window)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.apply_norm(cfg, params.get("norm_f"), x)
+    return jnp.mean(x.astype(jnp.float32), axis=1)
+
+
+def prefill(cfg, params, tokens, max_len: int, *, frontend_embeds=None,
+            shard: L.Shard = L.no_shard):
+    """Run the prompt in stream mode AND harvest per-layer K/V into a
+    decode cache. Returns (last-token logits, filled KVCache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(cfg, params, tokens, frontend_embeds, shard, dtype)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, bp):
+        h = L.apply_norm(cfg, bp.get("norm1"), x)
+        q, k, v = L.qkv(cfg, bp["attn"], h, positions, shard)
+        attn = L.attention_stream(q, L.expand_kv(cfg, k),
+                                  L.expand_kv(cfg, v), causal=True)
+        x = x + L.out_proj(cfg, bp["attn"], attn, shard)
+        h2 = L.apply_norm(cfg, bp.get("norm2"), x)
+        if cfg.is_moe:
+            out, _ = moe(cfg, bp["moe"], h2, shard)
+            x = x + out
+        elif cfg.d_ff:
+            x = x + L.mlp(bp["mlp"], h2, shard)
+        return x, (k.astype(dtype), v.astype(dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = L.apply_norm(cfg, params.get("norm_f"), x)
+    lg = L.logits(params["embed"], x[:, -1:], shard)
+    pad = max_len - s
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return lg, KVCache(k=ks, v=vs, length=jnp.int32(s))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+@dataclass
+class KVCache:
+    k: jax.Array      # (L, B, max_len, Kv, hd)
+    v: jax.Array
+    length: jax.Array  # scalar int32: tokens already in cache
+
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v", "length"],
+                                 meta_fields=[])
+
+
+def cache_spec(cfg, batch: int, max_len: int, rules):
+    shp = (cfg.num_layers, batch, max_len, cfg.kvp(), cfg.hd())
+    dt = jnp.dtype(cfg.dtype)
+    spec = rules.kv_spec(shp, ("layers", "batch", None, "kv_heads", None),
+                         batch_dim=1, seq_dim=2)
+    return (KVCache(k=jax.ShapeDtypeStruct(shp, dt),
+                    v=jax.ShapeDtypeStruct(shp, dt),
+                    length=jax.ShapeDtypeStruct((), jnp.int32)),
+            KVCache(k=spec, v=spec,
+                    length=jax.sharding.PartitionSpec()))
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    shp = (cfg.num_layers, batch, max_len, cfg.kvp(), cfg.hd())
+    dt = jnp.dtype(cfg.dtype)
+    return KVCache(k=jnp.zeros(shp, dt), v=jnp.zeros(shp, dt),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg, params, cache: KVCache, tokens, *,
+                shard: L.Shard = L.no_shard):
+    """One decode step. tokens: (B, 1). Returns (logits, new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    idx = cache.length
+    positions = jnp.full(tokens.shape, idx, jnp.int32)
+
+    def body(x, xs):
+        bp, ck, cv = xs
+        x, _, (nk, nv) = _block(cfg, bp, x, positions, shard,
+                                mode="decode", window=0,
+                                kv_cache=(ck, cv), kv_index=idx)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["blocks"], cache.k, cache.v))
+    x = L.apply_norm(cfg, params.get("norm_f"), x)
+    lg = L.logits(params["embed"], x, shard)
+    return lg, KVCache(k=nk, v=nv, length=cache.length + 1)

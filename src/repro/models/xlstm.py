@@ -1,0 +1,409 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+mLSTM trains/prefills in a *chunked-parallel* form (intra-chunk attention-like
+matmuls + inter-chunk recurrence in log-space with a running stabilizer m) and
+decodes recurrently in O(1) per token — this is the TPU-native adaptation of
+the paper's linear-attention-with-gates formulation (MXU-friendly chunks
+instead of a length-T sequential loop).
+
+sLSTM has true recurrent mixing (R·h_{t-1}) and is inherently sequential: we
+precompute the input projections for the whole sequence (one big matmul) and
+scan only the cheap recurrent part.
+
+Block pattern: every ``cfg.slstm_every``-th block is sLSTM, the rest mLSTM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.spec import ParamDef
+from repro.models.transformer import stack_defs
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+def mlstm_defs(cfg) -> Dict[str, ParamDef]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.hd()
+    return {
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wv": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wi": ParamDef((d, h), ("embed", "heads")),
+        "wf": ParamDef((d, h), ("embed", "heads")),
+        "bf": ParamDef((h,), ("heads",), init="ones", scale=3.0),
+        "wog": ParamDef((d, d), ("embed", "model")),
+        "wo": ParamDef((d, d), ("model", "embed")),
+    }
+
+
+def slstm_defs(cfg) -> Dict[str, ParamDef]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.hd()
+    return {
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+        "wx": ParamDef((d, 4, h, hd), ("embed", None, "heads", None)),
+        "r": ParamDef((4, h, hd, hd), (None, "heads", None, None), scale=0.5),
+        "b": ParamDef((4, h, hd), (None, "heads", None), init="zeros"),
+        "wo": ParamDef((d, d), ("model", "embed")),
+    }
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    n_s = cfg.num_layers // cfg.slstm_every if cfg.slstm_every else 0
+    groups = n_s if n_s else 1
+    per_group_m = (cfg.num_layers // groups) - (1 if n_s else 0)
+    d = {
+        "embed": L.embed_defs(cfg),
+        "norm_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mlstm": stack_defs(stack_defs(mlstm_defs(cfg), per_group_m), groups),
+    }
+    if n_s:
+        d["slstm"] = stack_defs(slstm_defs(cfg), groups)
+    return d
+
+
+def group_shape(cfg) -> Tuple[int, int]:
+    """(groups, mlstm-per-group)."""
+    n_s = cfg.num_layers // cfg.slstm_every if cfg.slstm_every else 0
+    groups = n_s if n_s else 1
+    return groups, (cfg.num_layers // groups) - (1 if n_s else 0)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM — chunked parallel (train / prefill)
+# ---------------------------------------------------------------------------
+def _mlstm_qkvif(cfg, p, x, shard):
+    dt = x.dtype
+    scale = 1.0 / np.sqrt(cfg.hd())
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt)) * scale
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    logi = jnp.einsum("bsd,dh->bsh", x, p["wi"].astype(dt)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["wf"].astype(dt)).astype(jnp.float32)
+        + p["bf"].astype(jnp.float32))
+    return q, k, v, logi, logf
+
+
+def mlstm_parallel(cfg, p, x, shard=L.no_shard, state=None):
+    """Chunked-parallel mLSTM over full sequences.
+
+    x: (B, S, d). Returns (y, final_state). state = (C, n, m) with
+    C: (B, H, hd, hd), n: (B, H, hd), m: (B, H).
+    """
+    b, s, d = x.shape
+    h_, hd = cfg.num_heads, cfg.hd()
+    q_, k_, v_, logi, logf = _mlstm_qkvif(cfg, p, x, shard)
+    qc = int(min(cfg.mlstm_chunk, s))
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+
+    def resh(t, tail):
+        return t.reshape((b, nc, qc) + tail)
+
+    qs = resh(q_, (h_, hd)).astype(jnp.float32)
+    ks = resh(k_, (h_, hd)).astype(jnp.float32)
+    vs = resh(v_, (h_, hd)).astype(jnp.float32)
+    lis = resh(logi, (h_,))
+    lfs = resh(logf, (h_,))
+
+    if state is None:
+        c0 = jnp.zeros((b, h_, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h_, hd), jnp.float32)
+        m0 = jnp.full((b, h_), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    causal = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def body(carry, xs):
+        c, n, m = carry
+        q, k, v, li, lf = xs  # (b, qc, h, ...)
+        fcum = jnp.cumsum(lf, axis=1)                 # (b, qc, h) F_t
+        # intra-chunk log weights  A[t, s] = F_t - F_s + log i_s  (s <= t)
+        a = fcum[:, :, None] - fcum[:, None, :] + li[:, None, :]  # (b,t,s,h)
+        a = jnp.where(causal[None, :, :, None], a, -1e30)
+        bvec = m[:, None] + fcum                       # (b, qc, h) carry-in
+        m_t = jnp.maximum(bvec, a.max(axis=2))         # (b, qc, h)
+        w = jnp.exp(a - m_t[:, :, None])               # intra weights
+        w_in = jnp.exp(bvec - m_t)                     # carry-in weight
+        qk = jnp.einsum("bthk,bshk->btsh", q, k)
+        num = (jnp.einsum("btsh,btsh,bshk->bthk", qk, w, v)
+               + jnp.einsum("bth,bhkv,bthk->bthv", w_in, c, q))
+        den = (jnp.einsum("btsh,btsh->bth", qk, w)
+               + jnp.einsum("bth,bhk,bthk->bth", w_in, n, q))
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # --- state update to end of chunk ---
+        f_total = fcum[:, -1]                          # (b, h)
+        m_new = jnp.maximum(m + f_total, (f_total[:, None] - fcum + li).max(1))
+        wk_s = jnp.exp(f_total[:, None] - fcum + li - m_new[:, None])
+        c_new = (jnp.exp(m + f_total - m_new)[..., None, None] * c
+                 + jnp.einsum("bsh,bshk,bshv->bhkv", wk_s, k, v))
+        n_new = (jnp.exp(m + f_total - m_new)[..., None] * n
+                 + jnp.einsum("bsh,bshk->bhk", wk_s, k))
+        return (c_new, n_new, m_new), y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qs, ks, vs, lis, lfs))
+    (c, n, m), ys = jax.lax.scan(body, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h_ * hd)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wog"].astype(x.dtype)))
+    y = (y.astype(x.dtype) * og)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", None), (c, n, m)
+
+
+def mlstm_step(cfg, p, x, state, shard=L.no_shard):
+    """One-token recurrent mLSTM. x: (B, 1, d)."""
+    b = x.shape[0]
+    h_, hd = cfg.num_heads, cfg.hd()
+    q, k, v, logi, logf = _mlstm_qkvif(cfg, p, x, shard)
+    q = q[:, 0].astype(jnp.float32)
+    k = k[:, 0].astype(jnp.float32)
+    v = v[:, 0].astype(jnp.float32)
+    li, lf = logi[:, 0], logf[:, 0]
+    c, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp[..., None, None] * c + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.einsum("bhk,bhk->bh", n, q)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, h_ * hd).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wog"].astype(x.dtype)))
+    out = jnp.einsum("bse,ed->bsd", y * og, p["wo"].astype(x.dtype))
+    return out, (c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential
+# ---------------------------------------------------------------------------
+def slstm_scan(cfg, p, x, shard=L.no_shard, state=None):
+    """Full-sequence sLSTM: big input matmul outside, cheap scan inside."""
+    b, s, d = x.shape
+    h_, hd = cfg.num_heads, cfg.hd()
+    wx = jnp.einsum("bsd,dghk->bsghk", x, p["wx"].astype(x.dtype))  # g=4 gates
+    wx = wx.astype(jnp.float32) + p["b"].astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((b, h_, hd), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros - 1e30, zeros)  # c, n, m, h
+
+    def step(carry, wx_t):
+        c, n, m, hprev = carry
+        rec = jnp.einsum("ghkl,bhl->bghk", r, hprev)
+        g = wx_t + rec
+        zt = jnp.tanh(g[:, 0])
+        it = g[:, 1]
+        ft = jax.nn.log_sigmoid(g[:, 2])
+        ot = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * (c / jnp.maximum(n, 1e-6))
+        return (c, n, m_new, h), h
+
+    (c, n, m, hlast), ys = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", None), (c, n, m, hlast)
+
+
+def slstm_step(cfg, p, x, state, shard=L.no_shard):
+    out, st = slstm_scan(cfg, p, x, shard, state)
+    return out, st
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+@dataclass
+class XLSTMState:
+    mc: jax.Array   # (G, M, B, H, hd, hd)
+    mn: jax.Array   # (G, M, B, H, hd)
+    mm: jax.Array   # (G, M, B, H)
+    sc: jax.Array   # (G, B, H, hd)
+    sn: jax.Array
+    sm: jax.Array
+    sh: jax.Array
+    length: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    XLSTMState,
+    data_fields=["mc", "mn", "mm", "sc", "sn", "sm", "sh", "length"],
+    meta_fields=[])
+
+
+def init_state(cfg, batch: int):
+    g, m_per = group_shape(cfg)
+    h_, hd = cfg.num_heads, cfg.hd()
+    f32 = jnp.float32
+    return XLSTMState(
+        mc=jnp.zeros((g, m_per, batch, h_, hd, hd), f32),
+        mn=jnp.zeros((g, m_per, batch, h_, hd), f32),
+        mm=jnp.full((g, m_per, batch, h_), -1e30, f32),
+        sc=jnp.zeros((g, batch, h_, hd), f32),
+        sn=jnp.zeros((g, batch, h_, hd), f32) + 1e-6,
+        sm=jnp.full((g, batch, h_, hd), -1e30, f32),
+        sh=jnp.zeros((g, batch, h_, hd), f32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def state_spec(cfg, batch: int, rules):
+    g, m_per = group_shape(cfg)
+    h_, hd = cfg.num_heads, cfg.hd()
+    f32 = jnp.float32
+    P = jax.sharding.PartitionSpec
+    sds = jax.ShapeDtypeStruct
+    abstract = XLSTMState(
+        mc=sds((g, m_per, batch, h_, hd, hd), f32),
+        mn=sds((g, m_per, batch, h_, hd), f32),
+        mm=sds((g, m_per, batch, h_), f32),
+        sc=sds((g, batch, h_, hd), f32),
+        sn=sds((g, batch, h_, hd), f32),
+        sm=sds((g, batch, h_, hd), f32),
+        sh=sds((g, batch, h_, hd), f32),
+        length=sds((), jnp.int32))
+    spec = XLSTMState(
+        mc=rules.spec_for((g, m_per, batch, h_, hd, hd),
+                          (None, None, "batch", "heads", None, None)),
+        mn=rules.spec_for((g, m_per, batch, h_, hd),
+                          (None, None, "batch", "heads", None)),
+        mm=rules.spec_for((g, m_per, batch, h_),
+                          (None, None, "batch", "heads")),
+        sc=rules.spec_for((g, batch, h_, hd), (None, "batch", "heads", None)),
+        sn=rules.spec_for((g, batch, h_, hd), (None, "batch", "heads", None)),
+        sm=rules.spec_for((g, batch, h_, hd), (None, "batch", "heads", None)),
+        sh=rules.spec_for((g, batch, h_, hd), (None, "batch", "heads", None)),
+        length=P())
+    return abstract, spec
+
+
+def _residual_mlstm(cfg, p, x, shard, runner):
+    h = L.rmsnorm(x, p["norm"])
+    out, st = runner(cfg, p, h, shard)
+    return x + out, st
+
+
+def forward(cfg, params, tokens, *, shard=L.no_shard, mode="train",
+            last_only=False, return_hidden=False):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    has_s = "slstm" in params
+
+    def group_body(x, gp):
+        def m_body(x, bp):
+            h = L.rmsnorm(x, bp["norm"])
+            out, _ = mlstm_parallel(cfg, bp, h, shard)
+            return x + out, None
+        m_fn = jax.checkpoint(m_body, prevent_cse=False) \
+            if (cfg.remat == "block" and mode == "train") else m_body
+        x, _ = jax.lax.scan(m_fn, x, gp["mlstm"])
+        if has_s:
+            h = L.rmsnorm(x, gp["slstm"]["norm"])
+            out, _ = slstm_scan(cfg, gp["slstm"], h, shard)
+            x = x + out
+        return x, None
+
+    groups = {"mlstm": params["mlstm"]}
+    if has_s:
+        groups["slstm"] = params["slstm"]
+    x, _ = jax.lax.scan(group_body, x, groups)
+    x = L.rmsnorm(x, params["norm_f"])
+    if return_hidden:
+        return jnp.mean(x.astype(jnp.float32), axis=1)
+    if last_only:
+        x = x[:, -1:]
+    lg = L.logits(params["embed"], x, shard)
+    return lg, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg, params, tokens, state: XLSTMState, *, shard=L.no_shard):
+    """Run the full prompt, returning last-token logits + final state."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    has_s = "slstm" in params
+
+    def group_body(x, xs):
+        gp, mc, mn, mm, sc, sn, sm, sh = xs
+
+        def m_body(x, bxs):
+            bp, c0, n0, m0 = bxs
+            h = L.rmsnorm(x, bp["norm"])
+            out, st = mlstm_parallel(cfg, bp, h, shard, state=(c0, n0, m0))
+            return x + out, st
+        x, mst = jax.lax.scan(m_body, x, (gp["mlstm"], mc, mn, mm))
+        sst = (sc, sn, sm, sh)
+        if has_s:
+            h = L.rmsnorm(x, gp["slstm"]["norm"])
+            out, sst = slstm_scan(cfg, gp["slstm"], h, shard,
+                                  state=(sc, sn, sm, sh))
+            x = x + out
+        return x, (mst, sst)
+
+    groups = {"mlstm": params["mlstm"]}
+    if has_s:
+        groups["slstm"] = params["slstm"]
+    st = state
+    x, (mst, sst) = jax.lax.scan(
+        group_body, x,
+        (groups, st.mc, st.mn, st.mm, st.sc, st.sn, st.sm, st.sh))
+    x = L.rmsnorm(x, params["norm_f"])
+    lg = L.logits(params["embed"], x[:, -1:], shard)
+    new = XLSTMState(mc=mst[0], mn=mst[1], mm=mst[2],
+                     sc=sst[0], sn=sst[1], sm=sst[2], sh=sst[3],
+                     length=state.length + tokens.shape[1])
+    return lg, new
+
+
+def decode_step(cfg, params, state: XLSTMState, tokens, *, shard=L.no_shard):
+    """One token for the whole stack. tokens: (B, 1)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, shard, dtype)
+    has_s = "slstm" in params
+
+    def group_body(x, xs):
+        gp, mc, mn, mm, sc, sn, sm, sh = xs
+
+        def m_body(x, bxs):
+            bp, c0, n0, m0 = bxs
+            h = L.rmsnorm(x, bp["norm"])
+            out, st = mlstm_step(cfg, bp, h, (c0, n0, m0), shard)
+            return x + out, st
+        x, mst = jax.lax.scan(m_body, x, (gp["mlstm"], mc, mn, mm))
+        sst = (sc, sn, sm, sh)
+        if has_s:
+            h = L.rmsnorm(x, gp["slstm"]["norm"])
+            out, sst = slstm_step(cfg, gp["slstm"], h, (sc, sn, sm, sh), shard)
+            x = x + out
+        return x, (mst, sst)
+
+    groups = {"mlstm": params["mlstm"]}
+    if has_s:
+        groups["slstm"] = params["slstm"]
+    st = state
+    x, (mst, sst) = jax.lax.scan(
+        group_body, x,
+        (groups, st.mc, st.mn, st.mm, st.sc, st.sn, st.sm, st.sh))
+    x = L.rmsnorm(x, params["norm_f"])
+    lg = L.logits(params["embed"], x, shard)
+    new = XLSTMState(mc=mst[0], mn=mst[1], mm=mst[2],
+                     sc=sst[0], sn=sst[1], sm=sst[2], sh=sst[3],
+                     length=state.length + 1)
+    return lg, new

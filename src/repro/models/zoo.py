@@ -1,0 +1,250 @@
+"""Unified model API over all architecture families.
+
+``Model = build_model(cfg, rules)`` exposes:
+  * ``defs``                        — ParamDef tree (single source of truth)
+  * ``init(key)`` / ``abstract()`` / ``specs()``
+  * ``loss(params, batch)``         — train objective (CE + MoE aux)
+  * ``forward(params, batch)``      — logits (train-style dense attention)
+  * ``prefill(params, batch)``      — last-token logits + cache/state
+  * ``decode(params, cache, tok)``  — one token
+  * ``cache_abstract(batch, len)`` / ``init_cache(batch, len)``
+  * ``input_specs(shape)``          — ShapeDtypeStructs for the dry-run
+  * ``input_shardings(shape)``      — matching PartitionSpecs
+  * ``embedding(params, batch)``    — pooled features for the MQRLD platform
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, AUDIO, SSM, HYBRID
+from repro.models import encdec, hymba, layers as L, transformer, xlstm
+from repro.models import spec as S
+from repro.sharding.partitioning import MeshRules
+
+
+def cross_entropy(logits, labels, *, z_weight: float = 1e-4,
+                  valid_vocab: Optional[int] = None):
+    """Mean CE over all positions, with a small z-loss. ``valid_vocab``
+    masks padded vocabulary columns (vocab padded for TPU sharding)."""
+    lg = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < lg.shape[-1]:
+        mask = jnp.arange(lg.shape[-1]) < valid_vocab
+        lg = jnp.where(mask, lg, -1e30)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    # label log-prob WITHOUT take_along_axis: a gather over the (TP-sharded)
+    # vocab dim forces SPMD to replicate the full logits; the iota-mask form
+    # stays shard-local with a cheap cross-shard reduction.
+    hit = (jnp.arange(lg.shape[-1])[None, None, :] == labels[..., None])
+    ll = jnp.sum(jnp.where(hit, lg, 0.0), axis=-1)
+    ce = jnp.mean(lse - ll)
+    zl = z_weight * jnp.mean(jnp.square(lse))
+    return ce + zl
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    rules: Optional[MeshRules]
+    mesh: Any = None
+
+    # ------------------------------------------------------------------ setup
+    def __post_init__(self):
+        cfg = self.cfg
+        if cfg.family == SSM:
+            self.defs = xlstm.model_defs(cfg)
+        elif cfg.family == HYBRID:
+            self.defs = hymba.model_defs(cfg)
+        elif cfg.is_encdec:
+            self.defs = encdec.model_defs(cfg)
+        else:
+            self.defs = transformer.model_defs(cfg)
+
+    def _shard(self):
+        if self.mesh is None or self.rules is None:
+            return L.no_shard
+        mesh, rules = self.mesh, self.rules
+
+        def fn(x, *logical):
+            # shape-aware: never force a mesh axis onto a non-divisible dim
+            # (e.g. 25 attention heads over a 16-way TP axis) — GSPMD would
+            # pad and then fight the following reshapes with full-
+            # rematerialization copies.
+            spec = rules.spec_for(x.shape, logical)
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(mesh, spec))
+        return fn
+
+    def init(self, key):
+        return S.init_params(self.defs, key)
+
+    def abstract(self):
+        return S.abstract_params(self.defs)
+
+    def specs(self):
+        assert self.rules is not None
+        return S.param_specs(self.defs, self.rules)
+
+    def n_params(self) -> int:
+        return S.count_params(self.defs)
+
+    # ---------------------------------------------------------------- forward
+    def forward(self, params, batch, *, mode="train", last_only=False):
+        cfg, sh = self.cfg, self._shard()
+        if cfg.family == SSM:
+            return xlstm.forward(cfg, params, batch["tokens"], shard=sh,
+                                 mode=mode, last_only=last_only)
+        if cfg.family == HYBRID:
+            return hymba.forward(cfg, params, batch["tokens"], shard=sh,
+                                 mode=mode, last_only=last_only)
+        if cfg.is_encdec:
+            return encdec.forward(cfg, params, batch["tokens"],
+                                  batch["frames"], shard=sh, mode=mode,
+                                  last_only=last_only)
+        return transformer.forward(
+            cfg, params, batch["tokens"],
+            frontend_embeds=batch.get("patches"), shard=sh, mode=mode,
+            last_only=last_only)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch, mode="train")
+        labels = batch["labels"]
+        if self.cfg.frontend == "vit_stub":
+            # loss over text positions only; logits cover patches + text
+            logits = logits[:, batch["patches"].shape[1]:]
+        return cross_entropy(logits, labels,
+                             valid_vocab=self.cfg.vocab_size) + 0.01 * aux
+
+    def embedding(self, params, batch):
+        """Mean-pooled final hidden state — the platform's feature vector."""
+        cfg, sh = self.cfg, self._shard()
+        if cfg.family == SSM:
+            return xlstm.forward(cfg, params, batch["tokens"], shard=sh,
+                                 return_hidden=True)
+        if cfg.family == HYBRID:
+            return hymba.forward(cfg, params, batch["tokens"], shard=sh,
+                                 return_hidden=True)
+        if cfg.is_encdec:
+            return encdec.forward(cfg, params, batch["tokens"],
+                                  batch["frames"], shard=sh,
+                                  return_hidden=True)
+        return transformer.pooled_embedding(
+            cfg, params, batch["tokens"],
+            frontend_embeds=batch.get("patches"), shard=sh)
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, batch, max_len: int):
+        """Consume the prompt; return (last logits, cache)."""
+        cfg, sh = self.cfg, self._shard()
+        tokens = batch["tokens"]
+        bsz = tokens.shape[0]
+        if cfg.family == SSM:
+            state = xlstm.init_state(cfg, bsz)
+            return xlstm.prefill(cfg, params, tokens, state, shard=sh)
+        if cfg.family == HYBRID:
+            # hymba prefill: run forward in stream mode for logits; cache
+            # population for generation is decode-driven in serve/.
+            lg, _ = hymba.forward(cfg, params, tokens, shard=sh,
+                                  mode="stream", last_only=True)
+            return lg, hymba.init_cache(cfg, bsz, max_len)
+        if cfg.is_encdec:
+            lg, _ = encdec.forward(cfg, params, tokens, batch["frames"],
+                                   shard=sh, mode="stream", last_only=True)
+            cache = encdec.init_cache(cfg, bsz, max_len)
+            cache = encdec.build_cross_cache(cfg, params, batch["frames"],
+                                             cache, shard=sh)
+            return lg, cache
+        return transformer.prefill(cfg, params, tokens, max_len,
+                                   frontend_embeds=batch.get("patches"),
+                                   shard=sh)
+
+    def decode(self, params, cache, tokens):
+        cfg, sh = self.cfg, self._shard()
+        if cfg.family == SSM:
+            return xlstm.decode_step(cfg, params, cache, tokens, shard=sh)
+        if cfg.family == HYBRID:
+            return hymba.decode_step(cfg, params, cache, tokens, shard=sh)
+        if cfg.is_encdec:
+            return encdec.decode_step(cfg, params, cache, tokens, shard=sh)
+        return transformer.decode_step(cfg, params, cache, tokens, shard=sh)
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family == SSM:
+            return xlstm.init_state(cfg, batch)
+        if cfg.family == HYBRID:
+            return hymba.init_cache(cfg, batch, max_len)
+        if cfg.is_encdec:
+            return encdec.init_cache(cfg, batch, max_len)
+        return transformer.init_cache(cfg, batch, max_len)
+
+    def cache_abstract(self, batch: int, max_len: int):
+        cfg, rules = self.cfg, self.rules
+        if cfg.family == SSM:
+            return xlstm.state_spec(cfg, batch, rules)
+        if cfg.family == HYBRID:
+            return hymba.cache_spec(cfg, batch, max_len, rules)
+        if cfg.is_encdec:
+            return encdec.cache_spec(cfg, batch, max_len, rules)
+        return transformer.cache_spec(cfg, batch, max_len, rules)
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        sds = jax.ShapeDtypeStruct
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "decode":
+            return {"tokens": sds((b, 1), i32)}
+        s = shape.seq_len
+        out: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            out["frames"] = sds((b, cfg.frontend_tokens, cfg.d_model), dt)
+            out["tokens"] = sds((b, s), i32)
+            if shape.kind == "train":
+                out["labels"] = sds((b, s), i32)
+            return out
+        if cfg.frontend == "vit_stub":
+            ft = cfg.frontend_tokens
+            out["patches"] = sds((b, ft, cfg.d_model), dt)
+            out["tokens"] = sds((b, s - ft), i32)
+            if shape.kind == "train":
+                out["labels"] = sds((b, s - ft), i32)
+            return out
+        out["tokens"] = sds((b, s), i32)
+        if shape.kind == "train":
+            out["labels"] = sds((b, s), i32)
+        return out
+
+    def input_shardings(self, shape: ShapeConfig) -> Dict[str, P]:
+        assert self.rules is not None
+        r = self.rules
+        specs = {}
+        for k, v in self.input_specs(shape).items():
+            logical = ("batch",) + (None,) * (len(v.shape) - 1)
+            specs[k] = r.spec_for(v.shape, logical)
+        return specs
+
+    def make_batch(self, shape: ShapeConfig, key) -> Dict[str, Any]:
+        """Concrete random batch matching input_specs (smoke tests)."""
+        out = {}
+        for name, s in self.input_specs(shape).items():
+            k, key = jax.random.split(key)
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(k, s.shape, 0,
+                                               self.cfg.vocab_size, s.dtype)
+            else:
+                out[name] = jax.random.normal(k, s.shape, s.dtype)
+        return out
+
+
+def build_model(cfg: ModelConfig, rules: Optional[MeshRules] = None,
+                mesh=None) -> Model:
+    return Model(cfg=cfg, rules=rules, mesh=mesh)

@@ -1,0 +1,3 @@
+from repro.sharding.partitioning import (  # noqa: F401
+    MeshRules, rules_for_mesh, shard,
+)

@@ -1,0 +1,163 @@
+"""AdamW with sharded, optionally-quantized optimizer state.
+
+Distributed-memory tricks for 1000+-chip runs:
+  * optimizer state dtype is configurable: fp32 / bf16 / int8 (blockwise
+    scaled 8-bit Adam) — int8 cuts the optimizer footprint 4x, which is what
+    lets arctic-480b train on a single 256-chip pod (see EXPERIMENTS.md).
+  * state tensors inherit the parameter sharding (FSDP x TP), so the memory
+    is divided by the full mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+# ---------------------------------------------------------------------------
+# Per-channel (last-dim) int8 quantization.
+#
+# Codes keep the PARAMETER'S OWN SHAPE, scales are shape[:-1] + (1,):
+# everything is elementwise, so the parameter's (FSDP x TP) sharding
+# propagates unchanged. (A flat (N/128, 128) blocked layout looks nicer
+# numerically but its reshape is sharding-hostile: GSPMD cannot reshard
+# 4-D tiled -> flat-blocked and falls back to FULL REPLICATION — on
+# arctic-480b that materialized the 283 GiB fp32 expert stack per device.)
+# ---------------------------------------------------------------------------
+def _quantizable(shape) -> bool:
+    return len(shape) >= 2
+
+
+def quantize_i8(x):
+    """x -> (int8 codes same shape, fp32 per-channel scales)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_i8(codes, scale, shape=None):
+    return codes.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Adam state containers
+# ---------------------------------------------------------------------------
+@dataclass
+class AdamState:
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+jax.tree_util.register_dataclass(AdamState, data_fields=["m", "v", "count"],
+                                 meta_fields=[])
+
+
+def _encode(x, dtype: str):
+    if dtype == "int8":
+        if not _quantizable(x.shape):
+            return x  # tiny 0/1-d tensors stay fp32
+        return quantize_i8(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode(enc, shape, dtype: str):
+    if dtype == "int8":
+        if isinstance(enc, tuple):
+            return dequantize_i8(enc[0], enc[1])
+        return enc.astype(jnp.float32)
+    return enc.astype(jnp.float32)
+
+
+def init_adam(params, state_dtype: str = "float32") -> AdamState:
+    def z(p):
+        return _encode(jnp.zeros(p.shape, jnp.float32), state_dtype)
+    return AdamState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def adam_abstract(params_abs, state_dtype: str = "float32") -> AdamState:
+    def z(p):
+        if state_dtype == "int8":
+            if not _quantizable(p.shape):
+                return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+            return (jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                    jax.ShapeDtypeStruct(p.shape[:-1] + (1,), jnp.float32))
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(state_dtype))
+    return AdamState(m=jax.tree.map(z, params_abs),
+                     v=jax.tree.map(z, params_abs),
+                     count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def adam_specs(params_abs, param_specs, rules,
+               state_dtype: str = "float32") -> AdamState:
+    """Optimizer-state shardings mirroring the parameter shardings."""
+    from jax.sharding import PartitionSpec as P
+
+    def sp(p, s):
+        if state_dtype == "int8":
+            if not _quantizable(p.shape):
+                return P(*s) if not isinstance(s, P) else s
+            scale_spec = P(*(tuple(s)[:-1] + (None,)))
+            return (s, scale_spec)
+        return s
+    return AdamState(
+        m=jax.tree.map(sp, params_abs, param_specs, is_leaf=None),
+        v=jax.tree.map(sp, params_abs, param_specs, is_leaf=None),
+        count=P())
+
+
+def _is_spec(x):
+    from jax.sharding import PartitionSpec
+    return isinstance(x, PartitionSpec)
+
+
+def lr_schedule(tc: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def adam_update(tc: TrainConfig, params, grads, state: AdamState,
+                state_dtype: str = "float32"):
+    """One AdamW step. params fp32 (sharded masters); grads fp32."""
+    count = state.count + 1
+    b1, b2 = tc.beta1, tc.beta2
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+    lr = lr_schedule(tc, count.astype(jnp.float32))
+
+    # global-norm clip
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, m_enc, v_enc):
+        g = g.astype(jnp.float32) * clip
+        m = _decode(m_enc, p.shape, state_dtype)
+        v = _decode(v_enc, p.shape, state_dtype)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / c1, v / c2
+        step_ = mh / (jnp.sqrt(vh) + tc.eps)
+        decay = tc.weight_decay * (p.ndim >= 2)
+        new_p = p - lr * (step_ + decay * p)
+        return new_p, _encode(m, state_dtype), _encode(v, state_dtype)
+
+    pl, tdef = jax.tree.flatten(params)
+    gl = jax.tree.leaves(grads)
+    ml = jax.tree.leaves(state.m, is_leaf=lambda x: isinstance(x, tuple))
+    vl = jax.tree.leaves(state.v, is_leaf=lambda x: isinstance(x, tuple))
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(pl, gl, ml, vl)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_p, AdamState(m=new_m, v=new_v, count=count), gnorm

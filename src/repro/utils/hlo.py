@@ -1,0 +1,386 @@
+"""Post-SPMD HLO text analysis: trip-count-aware FLOPs / collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — while-loop
+(scan) bodies are not multiplied by their trip count, which undercounts a
+scan-over-layers transformer by ~num_layers x. This parser walks the HLO
+call graph (entry -> while bodies / fusions / calls), extracts loop trip
+counts from canonical while conditions (compare against an s32 constant), and
+accumulates:
+
+  * ``flops``            — 2 * prod(result) * prod(contracting dims), dots +
+                           convolutions, weighted by trip counts (per-device)
+  * ``collective_bytes`` — wire bytes per device, by collective kind, using
+                           ring conventions:
+                             all-gather:          R * (n-1)/n
+                             all-reduce:          2R * (n-1)/n
+                             reduce-scatter:      R * (n-1)    (R = shard out)
+                             all-to-all:          R * (n-1)/n
+                             collective-permute:  R
+  * ``trip_weighted_insts`` — correction factor source for bytes-accessed
+
+All sizes are per-device (the SPMD program is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"([\w\-]+)\((.*)$")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%([\w\.\-]+).*body=%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(type_str):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{$")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = _HEADER_RE.match(stripped)
+        if header:
+            cur = Computation(name=header.group(1))
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            continue
+        m = _INST_RE.match(line)
+        if m and cur is not None:
+            inst = Instruction(name=m.group(1), type_str=m.group(2),
+                               op=m.group(3), rest=m.group(4))
+            cur.instructions.append(inst)
+            cur.shapes[inst.name] = inst.type_str
+    return comps
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _dus_slice_bytes(comps: Dict[str, Computation], comp: Computation,
+                     inst: Instruction) -> Optional[int]:
+    """If ``inst`` is (a fusion rooted in) a dynamic-update-slice, return
+    the UPDATE operand's byte size; else None."""
+    if inst.op == "dynamic-update-slice":
+        dus = inst
+        comp_shapes = comp.shapes
+    elif inst.op == "fusion":
+        m = _CALLS_RE.search(inst.rest)
+        body = comps.get(m.group(1)) if m else None
+        if body is None or not body.instructions:
+            return None
+        root = body.instructions[-1]
+        if root.op != "dynamic-update-slice":
+            return None
+        dus = root
+        comp_shapes = body.shapes
+    else:
+        return None
+    ops_ = _OPERANDS_RE.findall(dus.rest.split(")", 1)[0])
+    if len(ops_) < 2:
+        return None
+    sh = comp_shapes.get(ops_[1])
+    return _nbytes(sh) if sh else None
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for inst in cond.instructions:
+        for m in _CONST_RE.finditer(inst.rest):
+            best = max(best, int(m.group(1)))
+        for m in _CONST_RE.finditer(inst.type_str):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, inst: Instruction) -> float:
+    out_elems = 0
+    for dt, shape in _shapes_in(inst.type_str):
+        n = 1
+        for s in shape:
+            n *= s
+        out_elems += n
+    # contraction size from lhs operand shape
+    dims = _DIMS_RE.search(inst.rest)
+    contract = 1
+    if dims:
+        lhs_m = re.match(r"\s*%([\w\.\-]+)", inst.rest)
+        if lhs_m:
+            lhs_shape = comp.shapes.get(lhs_m.group(1))
+            if lhs_shape:
+                shapes = _shapes_in(lhs_shape)
+                if shapes:
+                    _, ls = shapes[0]
+                    for d in [int(x) for x in dims.group(1).split(",") if x]:
+                        if d < len(ls):
+                            contract *= ls[d]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+    inst_weight: float = 0.0    # trip-weighted instruction count
+    inst_raw: int = 0            # unweighted instruction count
+    hbm_bytes: float = 0.0       # kernel-boundary traffic estimate
+
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# ops that produce no HBM traffic of their own
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota",
+             "add-dependency", "opt-barrier"}
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_bytes(comp: Computation, inst: Instruction,
+                   invariant_ops: Optional[set] = None) -> Tuple[int, int]:
+    """Returns (variant_bytes, invariant_bytes).
+
+    ``invariant_ops``: names of values that are loop-invariant inside a
+    while body (derived from get-tuple-element of the loop parameter and
+    never updated). On real TPUs these are weights that stay VMEM/cache
+    resident across iterations, so the roofline charges them ONCE per loop
+    entry rather than once per iteration.
+    """
+    head = inst.rest.split(")", 1)[0]
+    var = inv = 0
+    for name in _OPERANDS_RE.findall(head):
+        sh = comp.shapes.get(name)
+        if sh is None:
+            continue
+        if invariant_ops is not None and name in invariant_ops:
+            inv += _nbytes(sh)
+        else:
+            var += _nbytes(sh)
+    return var, inv
+
+
+_GTE_IDX_RE = re.compile(r"index=(\d+)")
+
+
+def _loop_invariants(comp: Computation) -> set:
+    """Names in a while-body computation that are pure views of loop-
+    INVARIANT tuple elements: an element i is invariant when the body's
+    root tuple passes gte(param, i) through at position i unchanged (this
+    is how jax lowers scan ``xs`` — stacked weights). Views (gte/bitcast/
+    copy/reshape/transpose/convert chains) of those elements inherit
+    invariance. These are the stationary weights the roofline should
+    charge once per loop entry, not once per iteration."""
+    if not comp.instructions:
+        return set()
+    root = comp.instructions[-1]
+    if root.op != "tuple":
+        return set()
+    params = {i.name for i in comp.instructions if i.op == "parameter"}
+    # map: gte name -> tuple index (gtes of the loop param only)
+    gte_idx = {}
+    view_chain = {}   # name -> single-operand view source
+    for i in comp.instructions:
+        head = i.rest.split(")", 1)[0]
+        ops_ = _OPERANDS_RE.findall(head)
+        if i.op == "get-tuple-element":
+            m = _GTE_IDX_RE.search(i.rest)
+            if ops_ and ops_[0] in params and m:
+                gte_idx[i.name] = int(m.group(1))
+        elif i.op in ("bitcast", "copy", "reshape", "transpose", "convert") \
+                and len(ops_) == 1:
+            view_chain[i.name] = ops_[0]
+
+    def resolve(name, depth=0):
+        while name in view_chain and depth < 8:
+            name = view_chain[name]
+            depth += 1
+        return name
+
+    root_ops = _OPERANDS_RE.findall(root.rest.split(")", 1)[0])
+    invariant_idx = {idx for pos, name in enumerate(root_ops)
+                     if (idx := gte_idx.get(resolve(name))) is not None
+                     and idx == pos}
+    inv = {name for name, idx in gte_idx.items() if idx in invariant_idx}
+    view_ops = {"bitcast", "copy", "reshape", "transpose", "convert"}
+    changed = True
+    while changed:
+        changed = False
+        for i in comp.instructions:
+            if i.name in inv or i.op not in view_ops:
+                continue
+            head = i.rest.split(")", 1)[0]
+            names = _OPERANDS_RE.findall(head)
+            if names and all(n in inv for n in names):
+                inv.add(i.name)
+                changed = True
+    return inv
+
+
+def _accumulate(comps, comp_name: str, weight: float, stats: HloStats,
+                n_devices: int, visiting=None, count_bytes: bool = True,
+                entry_weight: Optional[float] = None):
+    """``entry_weight``: the weight at which this computation was ENTERED
+    (once per loop entry) — loop-invariant operand reads are charged at
+    this weight instead of the per-iteration weight."""
+    comp = comps.get(comp_name)
+    if comp is None:
+        return
+    visiting = visiting or set()
+    if comp_name in visiting:
+        return
+    visiting = visiting | {comp_name}
+    if entry_weight is None:
+        entry_weight = weight
+    invariants = _loop_invariants(comp) if entry_weight != weight else set()
+    for inst in comp.instructions:
+        stats.inst_weight += weight
+        stats.inst_raw += 1
+        if count_bytes and inst.op not in _FREE_OPS \
+                and inst.op not in ("while", "call", "conditional"):
+            dus_bytes = _dus_slice_bytes(comps, comp, inst)
+            if dus_bytes is not None:
+                # in-place dynamic-update-slice accumulation (scan ``ys``):
+                # only the updated slice moves, not the full stacked buffer
+                stats.hbm_bytes += weight * 2.0 * dus_bytes
+                continue
+            # kernel-boundary HBM traffic: result + operands. Fusion bodies
+            # are NOT recursed for bytes (they are one kernel). Loop-
+            # invariant operands (stationary weights) are charged once per
+            # loop entry — they stay VMEM/cache resident on the target HW.
+            var_b, inv_b = _operand_bytes(comp, inst, invariants)
+            stats.hbm_bytes += weight * (_nbytes(inst.type_str) + var_b) \
+                + entry_weight * inv_b
+        if inst.op == "dot" or inst.op == "convolution":
+            stats.flops += weight * _dot_flops(comp, inst)
+        elif inst.op in COLLECTIVES:
+            n = _group_size(inst.rest, n_devices)
+            r = _nbytes(inst.type_str)
+            if inst.op == "all-gather":
+                wire = r * (n - 1) / max(n, 1)
+            elif inst.op == "all-reduce":
+                wire = 2.0 * r * (n - 1) / max(n, 1)
+            elif inst.op == "reduce-scatter":
+                wire = float(r) * (n - 1)
+            elif inst.op == "all-to-all":
+                wire = r * (n - 1) / max(n, 1)
+            else:  # collective-permute
+                wire = float(r)
+            key = inst.op
+            stats.collective_bytes[key] = \
+                stats.collective_bytes.get(key, 0.0) + weight * wire
+            stats.collective_counts[key] = \
+                stats.collective_counts.get(key, 0) + 1
+        elif inst.op == "while":
+            cb = _COND_BODY_RE.search(inst.rest)
+            if cb:
+                # prefer XLA's own annotation when present
+                ktc = re.search(r'"known_trip_count":\{"n":"(\d+)"', inst.rest)
+                trips = int(ktc.group(1)) if ktc \
+                    else _trip_count(comps, cb.group(1))
+                stats.n_while += 1
+                stats.max_trip = max(stats.max_trip, trips)
+                _accumulate(comps, cb.group(2), weight * trips, stats,
+                            n_devices, visiting, count_bytes,
+                            entry_weight=weight)
+                _accumulate(comps, cb.group(1), weight * trips, stats,
+                            n_devices, visiting, count_bytes,
+                            entry_weight=weight)
+            continue
+        elif inst.op == "call" or inst.op == "conditional":
+            for m in _CALLS_RE.finditer(inst.rest):
+                _accumulate(comps, m.group(1), weight, stats, n_devices,
+                            visiting, count_bytes)
+            for m in re.finditer(r"(?:true_computation|false_computation|"
+                                 r"branch_computations=\{)%([\w\.\-]+)",
+                                 inst.rest):
+                _accumulate(comps, m.group(1), weight, stats, n_devices,
+                            visiting, count_bytes)
+        elif inst.op in ("fusion", "map", "reduce", "sort", "scatter",
+                         "reduce-window", "custom-call",
+                         "select-and-scatter"):
+            # flops-only recursion: the fusion is a single kernel, its
+            # interior traffic stays in registers/VMEM.
+            for m in _CALLS_RE.finditer(inst.rest):
+                _accumulate(comps, m.group(1), weight, stats, n_devices,
+                            visiting, count_bytes=False)
+            for m in re.finditer(r"to_apply=%([\w\.\-]+)", inst.rest):
+                _accumulate(comps, m.group(1), weight, stats, n_devices,
+                            visiting, count_bytes=False)
+
+
+def analyze(text: str, n_devices: int, entry: Optional[str] = None) -> HloStats:
+    comps = parse_hlo(text)
+    stats = HloStats()
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        entry_name = m.group(1) if m else next(iter(comps), None)
+    if entry_name:
+        _accumulate(comps, entry_name, 1.0, stats, n_devices)
+    return stats

@@ -1,0 +1,76 @@
+"""Roofline math for TPU v5e (target hardware).
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+We report BOTH the raw ``cost_analysis`` numbers (per-device, loop bodies
+counted once — XLA semantics) and trip-count-corrected numbers from the HLO
+parser; the roofline uses the corrected values. The memory term scales raw
+bytes-accessed by the parser's trip-weighted instruction factor (loop bodies
+dominate both counts for scan-over-layers programs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+LINK_BW = 50e9                # bytes/s per ICI link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # raw cost_analysis (per device, loops counted once)
+    raw_flops_per_dev: float
+    raw_bytes_per_dev: float
+    # corrected (per device, trip-count aware)
+    flops_per_dev: float
+    bytes_per_dev: float
+    collective_bytes_per_dev: float
+    collective_breakdown: Dict[str, float]
+    # terms in seconds
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0          # 6*N*D (global, analytic)
+    useful_ratio: float = 0.0          # model_flops / global corrected flops
+    memory_per_dev_bytes: float = 0.0  # from memory_analysis
+    roofline_fraction: float = 0.0     # t_compute / max(all terms)
+
+    def finalize(self):
+        self.t_compute = self.flops_per_dev / PEAK_FLOPS_BF16
+        self.t_memory = self.bytes_per_dev / HBM_BW
+        self.t_collective = self.collective_bytes_per_dev / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        global_flops = self.flops_per_dev * self.n_devices
+        self.useful_ratio = (self.model_flops / global_flops
+                             if global_flops else 0.0)
+        bound = max(terms.values())
+        self.roofline_fraction = (self.t_compute / bound) if bound else 0.0
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D for train, 2*N*D for forward-only, per
+    step; D = tokens processed. MoE counts active params only."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

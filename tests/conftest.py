@@ -1,0 +1,19 @@
+import os
+import sys
+
+# smoke tests and benches must see 1 device (the dry-run sets its own 512);
+# never set xla_force_host_platform_device_count here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def blobs():
+    """Well-separated gaussian blobs: (x, labels, centers)."""
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(6, 12)).astype(np.float32) * 8
+    lab = rng.integers(0, 6, 1500)
+    x = (centers[lab] + rng.normal(size=(1500, 12))).astype(np.float32)
+    return x, lab, centers

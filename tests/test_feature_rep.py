@@ -1,0 +1,133 @@
+"""Feature representation: LPGF, DPC, measurement, MORBO."""
+import numpy as np
+import pytest
+
+from repro.core.dpc import dpc
+from repro.core.lpgf import hibog, lpgf, mean_nn_distance
+from repro.core.measurement import (fidelity_score, frechet_distance,
+                                    gaussian_moments, kmeans, measure_models,
+                                    sc_score, select_model, silhouette)
+from repro.core.morbo import morbo_minimize, pareto_mask
+
+
+def _blobs(n=600, d=8, k=4, spread=6.0, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)).astype(np.float32) * spread
+    lab = rng.integers(0, k, n)
+    x = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    return x, lab
+
+
+# ------------------------------------------------------------------- LPGF
+def test_lpgf_tightens_clusters():
+    x, lab = _blobs()
+    moved = lpgf(x, iters=2)
+    def intra(y):
+        return np.mean([np.linalg.norm(y[lab == l] - y[lab == l].mean(0),
+                                       axis=1).mean() for l in range(4)])
+    assert intra(moved) < intra(x)
+
+
+def test_lpgf_improves_silhouette_vs_hibog_order():
+    """Paper Table 6: T+LPGF >= LPGF >= unoptimized (on SC)."""
+    x, lab = _blobs(seed=3)
+    s0 = silhouette(x, lab)
+    s_l = silhouette(lpgf(x, iters=2), lab)
+    assert s_l > s0
+
+
+def test_hibog_also_improves():
+    x, lab = _blobs(seed=4)
+    assert silhouette(hibog(x, iters=2), lab) > silhouette(x, lab)
+
+
+def test_mean_nn_distance_positive():
+    x, _ = _blobs(n=200)
+    g = mean_nn_distance(x)
+    assert g > 0
+
+
+# -------------------------------------------------------------------- DPC
+def test_dpc_recovers_blobs():
+    x, lab = _blobs(n=500, k=4, spread=10.0, seed=5)
+    res = dpc(x, max_clusters=8)
+    # purity: each found cluster should be dominated by one true label
+    purity = 0
+    for c in np.unique(res.labels):
+        m = res.labels == c
+        counts = np.bincount(lab[m], minlength=4)
+        purity += counts.max()
+    assert purity / len(x) > 0.9
+    assert 2 <= len(res.centers) <= 8
+
+
+def test_dpc_tiny_inputs():
+    res = dpc(np.zeros((2, 3), np.float32))
+    assert len(res.labels) == 2
+
+
+# ------------------------------------------------------------ measurement
+def test_silhouette_separated_beats_noise():
+    x, lab = _blobs(spread=10.0)
+    rng = np.random.default_rng(0)
+    noise = rng.normal(size=x.shape).astype(np.float32)
+    assert silhouette(x, lab) > silhouette(noise, lab)
+
+
+def test_frechet_zero_for_identical():
+    x, _ = _blobs(n=300)
+    mu, cov = gaussian_moments(x)
+    assert frechet_distance(mu, cov, mu, cov) < 1e-6
+
+
+def test_fidelity_lossless_beats_lossy():
+    x, _ = _blobs(n=400, d=10)
+    lossless = x.copy()                        # embedding == raw
+    rng = np.random.default_rng(1)
+    lossy = rng.normal(size=(400, 10)).astype(np.float32)  # uninformative
+    assert fidelity_score(x, lossless) > fidelity_score(x, lossy)
+
+
+def test_measurement_selects_informative_model():
+    x, lab = _blobs(n=500, d=10, spread=8.0)
+    rng = np.random.default_rng(2)
+    embeddings = {
+        "good": x + 0.01 * rng.normal(size=x.shape).astype(np.float32),
+        "noise": rng.normal(size=(500, 10)).astype(np.float32),
+    }
+    scores = measure_models(x, embeddings, k=4, sample=500)
+    best = select_model(scores, method="IN")
+    assert best.model == "good"
+    # eq. 6 regimes all computable
+    for m in ("SC", "IN", "IN+EX"):
+        assert np.isfinite(best.score(m))
+
+
+def test_kmeans_labels_shape():
+    x, _ = _blobs(n=200)
+    lab, cents = kmeans(x, 4)
+    assert lab.shape == (200,)
+    assert cents.shape == (4, x.shape[1])
+
+
+# ------------------------------------------------------------------ MORBO
+def test_pareto_mask():
+    y = np.array([[0, 1], [1, 0], [2, 2], [0.5, 0.5]])
+    m = pareto_mask(y)
+    assert m.tolist() == [True, True, False, True]
+
+
+def test_morbo_minimizes_two_objectives():
+    def f(x):
+        # conflicting: (x-1)^2 vs (x+1)^2 summed over dims
+        return np.array([np.sum((x - 1) ** 2), np.sum((x + 1) ** 2)])
+    res = morbo_minimize(f, (np.full(3, -3.0), np.full(3, 3.0)),
+                         n_objectives=2, n_init=8, iters=6, n_tr=2,
+                         batch=3, seed=0)
+    assert res.pareto.any()
+    # pareto points should live roughly inside [-1, 1]^3
+    px = res.x[res.pareto]
+    best = res.best_scalarized([0.5, 0.5])
+    assert np.all(np.abs(best) <= 2.0)
+    # scalarized optimum near 0 => objective sum near 2*3
+    assert f(best).sum() < f(np.full(3, 3.0)).sum()

@@ -1,0 +1,130 @@
+"""Learned index: build invariants, exactness vs brute force, reorder."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.index import BatchedExecutor, HostExecutor, build_index
+
+
+@pytest.fixture(scope="module")
+def built(blobs_module):
+    x, lab, _ = blobs_module
+    tree, perm, report = build_index(x, min_leaf=16, max_leaf=256,
+                                     dpc_max_clusters=6)
+    return x, tree, perm, report
+
+
+@pytest.fixture(scope="module")
+def blobs_module():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(6, 12)).astype(np.float32) * 8
+    lab = rng.integers(0, 6, 1500)
+    x = (centers[lab] + rng.normal(size=(1500, 12))).astype(np.float32)
+    return x, lab, centers
+
+
+def test_build_invariants(built):
+    x, tree, perm, report = built
+    # every row appears exactly once in the permutation
+    assert sorted(perm.tolist()) == list(range(len(x)))
+    # leaf ranges tile [0, N)
+    leaves = tree.leaf_ids
+    spans = sorted((int(tree.bucket_start[l]), int(tree.bucket_end[l]))
+                   for l in leaves)
+    cur = 0
+    for s, e in spans:
+        assert s == cur and e >= s
+        cur = e
+    assert cur == len(x)
+    # radius covers members
+    data = x[perm]
+    for l in leaves[:20]:
+        s, e = int(tree.bucket_start[l]), int(tree.bucket_end[l])
+        d = np.linalg.norm(data[s:e] - tree.centroid[l], axis=1)
+        assert (d <= tree.radius[l] + 1e-3).all()
+    assert report.lm_hit_ratio > 0.5
+
+
+def test_knn_exact_vs_bruteforce(built):
+    x, tree, perm, _ = built
+    data = x[perm]
+    ex = HostExecutor(tree, data)
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        q = data[rng.integers(len(data))] + rng.normal(size=12) * 0.3
+        rows, stats = ex.knn(q.astype(np.float32), 10)
+        d2 = ((data - q) ** 2).sum(1)
+        want = set(np.argsort(d2, kind="stable")[:10].tolist())
+        assert set(rows.tolist()) == want
+        assert 0 < stats.cbr <= 1.0
+
+
+def test_range_exact_vs_bruteforce(built):
+    x, tree, perm, _ = built
+    data = x[perm]
+    ex = HostExecutor(tree, data)
+    rng = np.random.default_rng(2)
+    for r in (0.5, 2.0, 6.0):
+        q = data[rng.integers(len(data))]
+        rows, _ = ex.range_query(q.astype(np.float32), r)
+        d2 = ((data - q) ** 2).sum(1)
+        want = set(np.nonzero(d2 <= r * r)[0].tolist())
+        assert set(rows.tolist()) == want
+
+
+def test_batched_matches_host(built):
+    x, tree, perm, _ = built
+    data = x[perm]
+    host = HostExecutor(tree, data)
+    bat = BatchedExecutor(tree, data)
+    rng = np.random.default_rng(3)
+    qs = data[rng.integers(0, len(data), 8)] + \
+        rng.normal(size=(8, 12)).astype(np.float32) * 0.2
+    bd, bi, _ = bat.knn(qs.astype(np.float32), 5)
+    for i in range(8):
+        hr, _ = host.knn(qs[i].astype(np.float32), 5)
+        assert set(bi[i].tolist()) == set(hr.tolist())
+
+
+def test_reorder_preserves_results_and_helps(built):
+    from repro.core.reorder import reorder_siblings
+    x, tree, perm, _ = built
+    data = x[perm]
+    ex = HostExecutor(tree, data)
+    rng = np.random.default_rng(4)
+    # skewed workload near one blob
+    center = data[0]
+    queries = [center + rng.normal(size=12).astype(np.float32) * 0.5
+               for _ in range(30)]
+    tree.access_count[:] = 0
+    before = 0
+    results_before = []
+    for q in queries:
+        rows, st = ex.knn(q.astype(np.float32), 5)
+        before += st.nodes_scanned
+        results_before.append(set(rows.tolist()))
+    changed = reorder_siblings(tree)
+    after = 0
+    for q, want in zip(queries, results_before):
+        rows, st = ex.knn(q.astype(np.float32), 5)
+        after += st.nodes_scanned
+        assert set(rows.tolist()) == want  # reorder never changes results
+    assert after <= before  # hot nodes first => never worse on the workload
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_knn_exact_property(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 400, 6
+    x = rng.normal(size=(n, d)).astype(np.float32) * rng.uniform(0.5, 3)
+    tree, perm, _ = build_index(x, min_leaf=8, max_leaf=64,
+                                dpc_max_clusters=5, seed=seed)
+    data = x[perm]
+    ex = HostExecutor(tree, data)
+    q = rng.normal(size=d).astype(np.float32)
+    rows, _ = ex.knn(q, 7)
+    d2 = ((data - q) ** 2).sum(1)
+    want = np.sort(d2, kind="stable")[:7]
+    got = np.sort(((data[rows] - q) ** 2).sum(1))
+    np.testing.assert_allclose(got, want, rtol=1e-5)

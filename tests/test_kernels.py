@@ -1,0 +1,89 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fused_topk import topk_l2_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lpgf_force import lpgf_force_pallas
+from repro.kernels.pairwise_l2 import pairwise_sq_l2_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("m,n,d", [(17, 33, 5), (64, 64, 16), (100, 257, 40),
+                                   (1, 300, 128), (130, 1, 7)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_pairwise_sweep(m, n, d, dtype):
+    q, p = _arr((m, d), dtype), _arr((n, d), dtype)
+    got = pairwise_sq_l2_pallas(q, p, bm=32, bn=64, interpret=True)
+    want = ref.pairwise_sq_l2(q, p)
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,n,d,k", [(20, 100, 8, 5), (64, 64, 16, 10),
+                                     (7, 500, 24, 1), (50, 33, 4, 33)])
+def test_topk_sweep(m, n, d, k):
+    q, p = _arr((m, d), np.float32), _arr((n, d), np.float32)
+    gd, gi = topk_l2_pallas(q, p, k, bm=16, bn=64, interpret=True)
+    wd, wi = ref.topk_l2(q, p, k)
+    np.testing.assert_allclose(np.sort(gd, 1), np.sort(wd, 1),
+                               rtol=1e-4, atol=1e-4)
+    # index sets must match where distances are distinct
+    for i in range(m):
+        assert set(np.asarray(gi)[i].tolist()) == \
+            set(np.asarray(wi)[i].tolist())
+
+
+@pytest.mark.parametrize("n,d", [(90, 11), (200, 5), (64, 33), (33, 2)])
+@pytest.mark.parametrize("r,g", [(2.5, 0.7), (10.0, 1.5)])
+def test_lpgf_sweep(n, d, r, g):
+    x = _arr((n, d), np.float32)
+    got_f, got_w = lpgf_force_pallas(x, r, g, bm=32, bn=32, interpret=True)
+    want_f, want_w = ref.lpgf_force(x, r, g)
+    scale = float(jnp.abs(want_f).max()) + 1e-6
+    np.testing.assert_allclose(got_f / scale, want_f / scale, atol=2e-5)
+    # the Fig-13 force law is continuous at the near/far boundary, so the
+    # FORCE matches tightly; the WEIGHT of a boundary pair can classify
+    # either way under fp reassociation -> loose tolerance on wsum
+    np.testing.assert_allclose(got_w, want_w, rtol=2e-2, atol=0.5)
+
+
+@pytest.mark.parametrize("b,s,h,hd", [(1, 64, 2, 16), (2, 128, 3, 32),
+                                      (1, 32, 1, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_flash_sweep(b, s, h, hd, causal, window, dtype):
+    q, k, v = (_arr((b, s, h, hd), dtype) for _ in range(3))
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 bq=32, bk=32, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = (jnp.asarray(RNG.normal(size=(1, 64, 2, 32))).astype(
+        jnp.bfloat16) for _ in range(3))
+    got = flash_attention_pallas(q, k, v, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ops_dispatch_cpu_matches_ref():
+    from repro.kernels import ops
+    q, p = _arr((10, 6), np.float32), _arr((20, 6), np.float32)
+    np.testing.assert_allclose(ops.pairwise_sq_l2(q, p),
+                               ref.pairwise_sq_l2(q, p), rtol=1e-5)
+    d1, i1 = ops.topk_l2(q, p, 3)
+    d2, i2 = ref.topk_l2(q, p, 3)
+    np.testing.assert_allclose(d1, d2, rtol=1e-5)

@@ -1,0 +1,191 @@
+"""Per-arch smoke tests (reduced configs) + family-specific math parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, all_configs, get_config
+from repro.models import build_model
+from repro.models import xlstm as X
+from repro.models import hymba as H
+
+SMALL_TRAIN = ShapeConfig("t", 32, 2, "train")
+ARCHS = sorted(all_configs())
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_smoke_forward_and_grad(name):
+    cfg = get_config(name).reduced()
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    batch = m.make_batch(SMALL_TRAIN, key)
+    loss, grads = jax.value_and_grad(m.loss)(params, batch)
+    assert jnp.isfinite(loss)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm)
+    logits, _ = m.forward(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.padded_vocab()
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_smoke_decode(name):
+    cfg = get_config(name).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    cache = m.init_cache(2, 32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    lg, cache2 = m.decode(params, cache, tok)
+    assert lg.shape == (2, 1, cfg.padded_vocab())
+    assert jnp.isfinite(lg.astype(jnp.float32)).all()
+    assert int(cache2.length) == 1
+
+
+def test_transformer_prefill_matches_forward_then_decode():
+    """Prefill(prompt) + decode(t) == forward(prompt + t) last logits."""
+    cfg = get_config("llama3-8b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, 200)
+    lg_pre, cache = m.prefill(params, {"tokens": toks}, 16)
+    full, _ = m.forward(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg_pre[:, -1], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+    nxt = jnp.argmax(lg_pre[:, -1, :cfg.vocab_size], -1)[:, None]
+    lg_dec, _ = m.decode(params, cache, nxt.astype(jnp.int32))
+    full2, _ = m.forward(
+        params, {"tokens": jnp.concatenate([toks, nxt], 1)})
+    np.testing.assert_allclose(np.asarray(lg_dec[:, -1], np.float32),
+                               np.asarray(full2[:, -1], np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_mlstm_chunked_matches_sequential():
+    """Chunked-parallel mLSTM == step-by-step recurrence."""
+    cfg = get_config("xlstm-1.3b").reduced()
+    p = {k: v for k, v in zip(
+        ["norm", "wq", "wk", "wv", "wi", "wf", "bf", "wog", "wo"],
+        jax.tree.leaves(
+            __import__("repro.models.spec", fromlist=["init_params"])
+            .init_params(X.mlstm_defs(cfg), jax.random.PRNGKey(3))))}
+    # rebuild dict in def order
+    from repro.models.spec import init_params
+    p = init_params(X.mlstm_defs(cfg), jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y_par, st_par = X.mlstm_parallel(cfg, p, x)
+    # sequential
+    st = None
+    ys = []
+    for t in range(16):
+        y, st = X.mlstm_step(cfg, p, x[:, t:t + 1], state=st or (
+            jnp.zeros((2, cfg.num_heads, cfg.hd(), cfg.hd())),
+            jnp.zeros((2, cfg.num_heads, cfg.hd())),
+            jnp.full((2, cfg.num_heads), -1e30)))
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_par[0]), np.asarray(st[0]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_scan_matches_step():
+    cfg = get_config("hymba-1.5b").reduced()
+    from repro.models.spec import init_params
+    p = init_params(H.mamba_defs(cfg), jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 12, cfg.d_model),
+                          jnp.float32)
+    y_scan, (h_scan, conv_scan) = H.mamba_scan(cfg, p, x, chunk=4)
+    h = jnp.zeros((2, H._dm(cfg), cfg.ssm_state))
+    conv = jnp.zeros((2, H.CONV_K - 1, H._dm(cfg)))
+    ys = []
+    for t in range(12):
+        y, (h, conv) = H.mamba_step(cfg, p, x[:, t:t + 1], (h, conv))
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hymba_ring_buffer_decode_matches_dense():
+    """Windowed ring-buffer decode == full-cache windowed attention."""
+    from repro.models import layers as L
+    cfg = get_config("hymba-1.5b").reduced()  # window 16
+    rng = jax.random.PRNGKey(7)
+    hd, kvp, hp = cfg.hd(), cfg.kvp(), cfg.hp()
+    steps = 24  # > window: buffer wraps
+    ks = jax.random.normal(rng, (1, steps, kvp, hd))
+    vs = jax.random.normal(jax.random.PRNGKey(8), (1, steps, kvp, hd))
+    qs = jax.random.normal(jax.random.PRNGKey(9), (1, steps, hp, hd))
+    win = cfg.window
+    ring_k = jnp.zeros((1, win, kvp, hd))
+    ring_v = jnp.zeros((1, win, kvp, hd))
+    kpos = jnp.full((win,), -1, jnp.int32)
+    for t in range(steps):
+        slot = t % win
+        ring_k = ring_k.at[:, slot].set(ks[:, t])
+        ring_v = ring_v.at[:, slot].set(vs[:, t])
+        kpos = kpos.at[slot].set(t)
+        got = L.attention_dense(qs[:, t:t + 1],
+                                L.expand_kv(cfg, ring_k),
+                                L.expand_kv(cfg, ring_v),
+                                causal=True, q_offset=t, kv_positions=kpos)
+        want = L.attention_dense(qs[:, t:t + 1],
+                                 L.expand_kv(cfg, ks[:, :t + 1]),
+                                 L.expand_kv(cfg, vs[:, :t + 1]),
+                                 causal=True, window=win, q_offset=t)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"t={t}")
+
+
+def test_attention_stream_matches_dense():
+    from repro.models import layers as L
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 4, 16))
+    a = L.attention_dense(q, k, v, causal=True)
+    b = L.attention_stream(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_head_padding_equivalence():
+    """hp>H with masked heads == unpadded math."""
+    base = get_config("internvl2-1b").reduced()  # head_pad_multiple=1
+    import dataclasses
+    padded = dataclasses.replace(base, head_pad_multiple=8)
+    assert padded.hp() == 8 and base.hp() == base.num_heads == 4
+    m0, m1 = build_model(base), build_model(padded)
+    p1 = m1.init(jax.random.PRNGKey(0))
+
+    # copy the real heads of p1 into p0's layout
+    def shrink(path_key, a):
+        return a
+    import jax.tree_util as jtu
+    p0 = m0.init(jax.random.PRNGKey(0))
+    f0 = jtu.tree_flatten_with_path(p0)[0]
+    f1 = {"/".join(str(k) for k in path): leaf
+          for path, leaf in jtu.tree_flatten_with_path(p1)[0]}
+    new0 = []
+    for path, leaf in f0:
+        key = "/".join(str(k) for k in path)
+        big = f1[key]
+        slices = tuple(slice(0, s) for s in leaf.shape)
+        new0.append(jnp.asarray(np.asarray(big)[slices]))
+    p0 = jtu.tree_unflatten(jtu.tree_structure(p0), new0)
+    batch = m0.make_batch(SMALL_TRAIN, jax.random.PRNGKey(2))
+    l0, _ = m0.forward(p0, batch)
+    l1, _ = m1.forward(p1, batch)
+    np.testing.assert_allclose(np.asarray(l0, np.float32),
+                               np.asarray(l1, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,207 @@
+"""Substrate: optimizer (incl. int8 states), data determinism, checkpoints,
+train loop convergence, gradient compression, HLO parser."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import TrainConfig, get_config
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import PipelineSpec, SyntheticLM
+from repro.train.compression import (compress_residual, dequantize_grad,
+                                     quantize_grad)
+from repro.train.optimizer import (adam_update, dequantize_i8, init_adam,
+                                   quantize_i8)
+
+
+# ----------------------------------------------------------------- optimizer
+def _toy_params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (16, 8)),
+            "b": jnp.zeros((8,)),
+            "deep": {"u": jax.random.normal(k, (4, 4, 8))}}
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_adam_descends_quadratic(state_dtype):
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=50,
+                     weight_decay=0.0)
+    params = _toy_params()
+    opt = init_adam(params, state_dtype)
+    target = jax.tree.map(lambda p: jnp.ones_like(p), params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+    l0 = loss(params)
+    for _ in range(40):
+        grads = jax.grad(loss)(params)
+        params, opt, gnorm = adam_update(tc, params, grads, opt, state_dtype)
+    assert loss(params) < 0.2 * l0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 5), st.integers(2, 200))
+def test_int8_quantization_error_bound(rows, cols):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * 10)
+    codes, scale = quantize_i8(x)
+    back = dequantize_i8(codes, scale)
+    # per-channel scaling bounds error by scale/2 = max|row| / 254
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1, keepdims=True)) / 127.0
+    assert (np.abs(np.asarray(back - x)) <= bound + 1e-6).all()
+
+
+# ------------------------------------------------------------------ data
+def test_pipeline_deterministic_and_distinct():
+    spec = PipelineSpec(vocab_size=100, seq_len=16, global_batch=4, seed=1)
+    p = SyntheticLM(spec)
+    a, b = p.batch(3), p.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding is disjoint streams
+    s0 = SyntheticLM(PipelineSpec(100, 16, 8, n_hosts=2, host_id=0, seed=1))
+    s1 = SyntheticLM(PipelineSpec(100, 16, 8, n_hosts=2, host_id=1, seed=1))
+    assert not np.array_equal(s0.batch(0)["tokens"], s1.batch(0)["tokens"])
+    # labels are next tokens
+    assert np.array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# ------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip_and_integrity():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "n": {"b": jnp.ones((2, 2), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        ck.save(5, tree, extra={"step": 5}, block=True)
+        ck.save(10, tree, extra={"step": 10}, block=True)
+        assert ck.all_steps() == [5, 10]
+        back, extra = ck.restore(10, tree)
+        assert extra["step"] == 10
+        np.testing.assert_array_equal(back["a"], tree["a"])
+        # corruption detection
+        import numpy as _np
+        path = os.path.join(d, "step_10", "arrays_0.npz")
+        z = dict(_np.load(path).items())
+        z["a"] = z["a"] + 1
+        _np.savez(path, **z)
+        with pytest.raises(AssertionError):
+            ck.restore(10, tree)
+
+
+def test_checkpoint_gc_keeps_latest():
+    tree = {"a": jnp.ones(3)}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree, block=True)
+        assert ck.all_steps() == [3, 4]
+
+
+# -------------------------------------------------------------- train loop
+def test_train_loss_decreases_and_resumes():
+    from repro.train.loop import train
+    cfg = get_config("mqrld-embedder-100m").reduced()
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(total_steps=10, checkpoint_every=4,
+                         checkpoint_dir=d, microbatches=2,
+                         learning_rate=1e-3, warmup_steps=2)
+        res = train(cfg, tc, seq_len=32, log_every=100,
+                    log_fn=lambda s: None)
+        assert res.steps_run == 10
+        assert res.final_loss < res.losses[0]
+        assert res.skipped_steps == 0
+        tc2 = TrainConfig(total_steps=14, checkpoint_every=4,
+                          checkpoint_dir=d, microbatches=2,
+                          learning_rate=1e-3, warmup_steps=2)
+        res2 = train(cfg, tc2, seq_len=32, log_every=100,
+                     log_fn=lambda s: None)
+        assert res2.restored_from == 10
+        assert res2.steps_run == 4
+
+
+# -------------------------------------------------------------- compression
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for _ in range(20):
+        codes, scale, err = compress_residual(g, err)
+        total_sent = total_sent + dequantize_grad(codes, scale)
+    # over T steps, sum of decoded ~= T * g (residual stays bounded)
+    np.testing.assert_allclose(np.asarray(total_sent) / 20, np.asarray(g),
+                               atol=np.abs(np.asarray(g)).max() / 100)
+
+
+def test_quantize_grad_roundtrip_sign():
+    g = jnp.asarray([[1.0, -2.0, 0.5, 0.0]])
+    codes, scale = quantize_grad(g)
+    back = dequantize_grad(codes, scale)
+    assert np.sign(np.asarray(back)).tolist() == \
+        np.sign(np.asarray(g)).tolist()
+
+
+# -------------------------------------------------------------- HLO parser
+def test_hlo_parser_counts_trips_and_collectives():
+    from repro.utils import hlo
+    txt = """
+ENTRY %main (p: f32[8,128]) -> f32[8,128] {
+  %p = f32[8,128]{1,0} parameter(0)
+  %while.1 = (s32[], f32[8,128]) while(%tuple.0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %gte = f32[8,128]{1,0} get-tuple-element(%while.1), index=1
+}
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %dot = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot), replica_groups=[4,4]<=[16]
+}
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %c = s32[] constant(12)
+}
+"""
+    st_ = hlo.analyze(txt, 16)
+    assert st_.max_trip == 12
+    # dot flops: 2*8*128*128 per trip * 12
+    assert st_.flops == pytest.approx(12 * 2 * 8 * 128 * 128)
+    # all-reduce wire: 2 * 8*128*4 bytes * 3/4 * 12 trips
+    want = 12 * 2 * (8 * 128 * 4) * 3 / 4
+    assert st_.total_collective_bytes() == pytest.approx(want)
+
+
+# ------------------------------------------------------------ sharding rules
+def test_spec_for_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.partitioning import MeshRules
+    r = MeshRules(dp=("data",), tp="model", fsdp=("data",),
+                  sizes=(("data", 16), ("model", 16)))
+    # divisible: sharded
+    assert r.spec_for((32, 64), ("batch", "ff")) == P("data", "model")
+    # non-divisible heads: dropped
+    assert r.spec_for((32, 14, 64), ("batch", "heads", None)) == \
+        P("data", None, None)
+    # kv cache fallback: batch=1 can't shard -> seq takes ALL idle axes
+    sp = r.kv_spec((4, 1, 4096, 8, 64), (None, "batch", None, "kv_heads",
+                                         None), batch_dim=1, seq_dim=2)
+    assert sp == P(None, None, ("data", "model"), None, None)
+    # batched decode: batch takes data -> seq takes the idle model axis
+    sp2 = r.kv_spec((4, 128, 4096, 8, 64), (None, "batch", None, "kv_heads",
+                                            None), batch_dim=1, seq_dim=2)
+    assert sp2 == P(None, "data", "model", None, None)
+
+
+def test_flat_spec():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.partitioning import MeshRules
+    r = MeshRules(sizes=(("data", 16), ("model", 16)))
+    assert r.flat_spec(256) == P(("data", "model"), None)
+    assert r.flat_spec(16) == P("data", None)
+    assert r.flat_spec(3) == P(None, None)

@@ -1,0 +1,71 @@
+"""Hyperspace transformation: constraints, invertibility, perturbation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transform import (HyperspaceTransform, default_pairs,
+                                  init_transform, perturb)
+
+RNG = np.random.default_rng(0)
+
+
+def test_constraints_hold():
+    x = RNG.normal(size=(500, 16)).astype(np.float32) * ([1, 5] * 8)
+    t = init_transform(x)
+    assert t.check_constraints()
+    # R orthonormal, S positive
+    np.testing.assert_allclose(t.r.T @ t.r, np.eye(16), atol=1e-4)
+    assert (t.s > 0).all()
+
+
+def test_invertibility_roundtrip():
+    x = RNG.normal(size=(300, 10)).astype(np.float32)
+    t = init_transform(x)
+    y = t.apply(x)
+    back = t.inverse(y)
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+def test_scaling_stretches_high_variance_dims():
+    x = RNG.normal(size=(2000, 4)).astype(np.float32)
+    x[:, 0] *= 10.0  # dominant direction
+    t = init_transform(x)
+    assert t.s[0] > t.s[1]  # eigenvalues sorted desc
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 24), st.integers(50, 200))
+def test_invertibility_property(d, n):
+    rng = np.random.default_rng(d * 1000 + n)
+    x = rng.normal(size=(n, d)).astype(np.float32) * rng.uniform(0.1, 5, d)
+    t = init_transform(x)
+    y = t.apply(x)
+    scale = np.abs(x).max() + 1
+    np.testing.assert_allclose(t.inverse(y) / scale, x / scale, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(-1, 1), min_size=1, max_size=4),
+       st.lists(st.floats(-0.5, 0.5), min_size=1, max_size=4))
+def test_perturb_preserves_constraints(theta, delta):
+    x = RNG.normal(size=(200, 8)).astype(np.float32)
+    base = init_transform(x)
+    t = perturb(base, theta, delta)
+    assert t.check_constraints()
+    # still invertible after query-aware perturbation
+    y = t.apply(x)
+    np.testing.assert_allclose(t.inverse(y), x, atol=1e-2)
+
+
+def test_distance_bounds():
+    """Enhanced-space distances are bounded by s_min/s_max ratios — the
+    bound the V.R superset query relies on."""
+    x = RNG.normal(size=(100, 6)).astype(np.float32)
+    t = init_transform(x)
+    y = t.apply(x)
+    a, b = x[:50], x[50:]
+    da = np.linalg.norm(a - b, axis=1)
+    dy = np.linalg.norm(t.apply(a) - t.apply(b), axis=1)
+    smax, smin = t.s.max(), t.s.min()
+    assert (dy <= da * smax * (1 + 1e-4)).all()
+    assert (dy >= da * smin * (1 - 1e-4)).all()
