@@ -1,0 +1,87 @@
+"""Engine — batched hybrid QPS: the device-resident engine
+(``MQRLD.execute_batch``, leaf scans through the Pallas fused_topk
+row-mask kernel — interpret mode on CPU) versus the per-query scalar
+loop over ``MQRLD.execute`` on the same 64-query rich hybrid batch.
+
+Not a paper figure: this measures the serving-path refactor (ISSUE 1);
+the acceptance bar is >= 5x QPS at n >= 20k rows, exact results.
+"""
+import numpy as np
+
+from benchmarks.common import Csv, timeit, us
+from repro.core import query as Q
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+
+N_ROWS = 20_000
+BATCH = 64
+
+
+def _platform(n=N_ROWS, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(12, d)).astype(np.float32) * 6
+    cat = rng.integers(0, 12, n)
+    vec = (centers[cat] + rng.normal(size=(n, d))).astype(np.float32)
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    t = (MMOTable("engine_bench").add_vector("v", vec)
+         .add_numeric("price", price))
+    p = MQRLD(t, seed=seed)
+    p.prepare(min_leaf=64, max_leaf=1024)
+    return p
+
+
+def _hybrid_batch(p, qn=BATCH, seed=1):
+    """The paper's three typical rich hybrid queries (Fig 24: VR+NR,
+    NR+VK, VR+VK) plus pure V.K, round-robin."""
+    tab = p.table
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, tab.n_rows, qn)
+    qs = []
+    for j, i in enumerate(rows):
+        v = tab.vector["v"][i]
+        kind = j % 4
+        if kind == 0:
+            qs.append(Q.VK.of("v", v, 20))
+        elif kind == 1:
+            qs.append(Q.And.of(Q.NR("price", 25, 75), Q.VK.of("v", v, 20)))
+        elif kind == 2:
+            qs.append(Q.And.of(Q.VR.of("v", v, 4.0), Q.NR("price", 20, 80)))
+        else:
+            qs.append(Q.And.of(Q.VR.of("v", v, 4.0), Q.VK.of("v", v, 20)))
+    return qs
+
+
+def run(csv: Csv):
+    p = _platform()
+    queries = _hybrid_batch(p)
+
+    def scalar_all():
+        return [p.execute(q, record=False)[0] for q in queries]
+
+    def batched_all():
+        return p.execute_batch(queries)[0]
+
+    batched_all()  # warm the compiled rounds (one-time cost, excluded)
+    t_scalar, r_scalar = timeit(scalar_all, repeat=2)
+    t_batch, r_batch = timeit(batched_all, repeat=3)
+
+    exact = all(set(a.tolist()) == set(np.asarray(b).tolist())
+                for a, b in zip(r_batch, r_scalar))
+    oracle_ok = all(set(a.tolist())
+                    == set(np.asarray(p.oracle(q)).tolist())
+                    for a, q in zip(r_batch, queries))
+    speedup = t_scalar / max(t_batch, 1e-12)
+    qps_scalar = len(queries) / t_scalar
+    qps_batch = len(queries) / t_batch
+    csv.add("engine/scalar_per_query", us(t_scalar / len(queries)),
+            f"qps={qps_scalar:.0f}")
+    csv.add("engine/batched_per_query", us(t_batch / len(queries)),
+            f"qps={qps_batch:.0f}")
+    csv.add("engine/speedup", speedup,
+            f"exact={exact} oracle={oracle_ok} n={N_ROWS} batch={BATCH}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -10,10 +10,11 @@ import time
 def main() -> None:
     from benchmarks.common import Csv
     from benchmarks import (bench_ablation, bench_cbr, bench_cdf,
-                            bench_clustering, bench_highdim, bench_hybrid,
-                            bench_learned_index, bench_measurement,
-                            bench_range_knn, bench_scalability,
-                            bench_transform, bench_vector_index)
+                            bench_clustering, bench_engine, bench_highdim,
+                            bench_hybrid, bench_learned_index,
+                            bench_measurement, bench_range_knn,
+                            bench_scalability, bench_transform,
+                            bench_vector_index)
     modules = [
         ("table6", bench_clustering),
         ("fig7", bench_measurement),
@@ -25,6 +26,7 @@ def main() -> None:
         ("fig21", bench_cbr),
         ("fig22_23", bench_scalability),
         ("fig24", bench_hybrid),
+        ("engine", bench_engine),
         ("fig25_26", bench_highdim),
         ("fig27", bench_ablation),
     ]

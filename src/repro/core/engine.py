@@ -1,0 +1,520 @@
+"""Batched, device-resident hybrid-query engine — one compiled path from
+MOAPI query trees to the Pallas kernels.
+
+The scalar path (``MQRLD.execute``) walks the cluster tree per query in
+host Python: faithful to the paper, and the source of QBS statistics. This
+module is the serving path: it holds the cluster-tree leaves, padded bucket
+tiles and per-attribute exact-space metadata (``LeafMeta``) as device
+arrays, plans a *batch* of heterogeneous ``Q.Query`` trees into a fixed set
+of vectorized stages, and executes them with a handful of compiled calls
+regardless of batch size:
+
+  1. **Leaf pruning** — for every distinct basic predicate, a (g, L)
+     leaf-survival matrix from per-attribute centroid/radius balls (V.R)
+     and [min, max] boxes (N.E/N.R), expanded to rows through the
+     row->leaf map.
+  2. **Predicate masks** — exact (g, n) boolean masks per (type, attr)
+     group: one fused compare for numeric groups, one pairwise-L2 kernel
+     call for vector groups.
+  3. **Masked KNN** — every V.K node in the batch becomes a job; jobs are
+     grouped per attribute and leaf-scanned through the Pallas
+     ``fused_topk`` row-mask kernel (``ops.topk_l2_masked``): each beam
+     round gathers every query's W best-lower-bound buckets into a
+     (G, W*cap, d) candidate tile and keeps a fused running top-k. Beam
+     doubling against the lower bound (host-driven, same argument as the
+     scalar executor) preserves exactness; And(VK, predicate) stays fused
+     by folding the predicate mask into the kernel's validity mask.
+
+Execution contract (scalar vs batched): ``execute_batch`` returns exactly
+the rows of scalar ``execute`` for every query archetype whose V.K
+candidate masks are derivable from predicate-only subtrees — V.K at top
+level, under Or, or as a direct child of And whose other parts are VK-free
+(this covers all MOAPI archetypes in tests/ and the paper's rich hybrid
+queries). For the one order-dependent corner the scalar path permits (a VK
+nested inside a combiner that is itself a *sibling* of other And parts,
+where ``_exec`` threads partially-accumulated masks), ``plannable`` returns
+False and ``MQRLD.execute_batch`` falls back to the scalar path for that
+query. Row order: top-level V.K results are distance-ordered (ties by
+bucket-beam order, matching the scalar executor's visit order); every other
+result is ascending row ids.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Device leaf state
+# ---------------------------------------------------------------------------
+@dataclass
+class LeafGeometry:
+    """Struct-of-arrays for one vector space over the shared bucket layout:
+    per-leaf ball metadata plus padded bucket row tiles."""
+    centroid: jax.Array      # (L, d)
+    radius: jax.Array        # (L,)
+    bucket_rows: jax.Array   # (L, cap) int32; -1 = padding
+    cap: int
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.centroid.shape[0])
+
+
+def bucket_tiles(starts: np.ndarray, ends: np.ndarray, tile: int = 0
+                 ) -> Tuple[np.ndarray, int, np.ndarray]:
+    """Padded physical-row tiles from leaf [start, end) ranges.
+
+    tile=0: one tile per leaf, cap = max bucket size. tile>0: each leaf is
+    split into fixed ``tile``-row chunks — buckets vary 10-30x in size, so
+    fixed chunks keep the padding waste of the (T, cap) gather bounded at
+    <2x instead of max/mean. Returns (rows (T, cap), cap, leaf_of_tile
+    (T,)); chunks of one leaf are consecutive, so a stable lower-bound sort
+    preserves the scalar executor's bucket visit order.
+    """
+    starts = np.asarray(starts)
+    ends = np.asarray(ends)
+    if tile <= 0:
+        sizes = ends - starts
+        cap = int(sizes.max(initial=1))
+        rows = np.full((len(starts), cap), -1, np.int32)
+        for i, (s, e) in enumerate(zip(starts, ends)):
+            rows[i, :e - s] = np.arange(s, e, dtype=np.int32)
+        return rows, cap, np.arange(len(starts), dtype=np.int32)
+    chunks: List[np.ndarray] = []
+    leaf_of_tile: List[int] = []
+    for i, (s, e) in enumerate(zip(starts, ends)):
+        for c0 in range(int(s), int(e), tile):
+            chunks.append(np.arange(c0, min(c0 + tile, int(e)),
+                                    dtype=np.int32))
+            leaf_of_tile.append(i)
+    if not chunks:  # degenerate: no rows at all
+        chunks.append(np.empty(0, np.int32))
+        leaf_of_tile.append(0)
+    rows = np.full((len(chunks), tile), -1, np.int32)
+    for i, c in enumerate(chunks):
+        rows[i, :len(c)] = c
+    return rows, tile, np.asarray(leaf_of_tile, np.int32)
+
+
+def tile_data(col: np.ndarray, bucket_rows: np.ndarray) -> np.ndarray:
+    """(n, d) column -> (T, cap, d) tile-major copy (padding rows are row 0;
+    a tile's validity mask excludes them). Tiles are contiguous row runs, so
+    beam rounds gather whole tiles instead of individual rows."""
+    col = np.asarray(col, np.float32)
+    safe = np.maximum(np.asarray(bucket_rows), 0)
+    return col[safe]
+
+
+@dataclass
+class EngineStats:
+    """Aggregate stats for one batch (the scalar path's per-query
+    ``QueryStats``/QBS recording is intentionally not replicated here)."""
+    queries: int = 0
+    predicate_buckets: int = 0   # leaves surviving box/ball pruning
+    knn_buckets: int = 0         # bucket tiles scanned across beam rounds
+    rows_scanned: int = 0        # valid rows fed to the top-k kernel
+    knn_rounds: int = 0
+    time_s: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Batched exact KNN over bucket tiles (one vector space)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("w0", "w1", "k", "interpret"))
+def _knn_round(act, qs, order, masks_tiles, data_tiles, bucket_rows, *,
+               w0: int, w1: int, k: int, interpret: bool):
+    """One beam round for the ``act`` query subset: scan each query's
+    [w0, w1) best-lower-bound buckets with the fused distance+top-k kernel.
+    Returns (sq_dists, physical rows, number of valid candidate rows).
+    Rounds are incremental — the host merges each round's top-k with the
+    carry from earlier buckets. ``data_tiles`` is the (T, cap, d)
+    tile-major copy of the table column: candidate gathers move whole
+    contiguous tiles, not individual rows."""
+    qa = jnp.take(qs, act, axis=0)
+    sel = jnp.take(order, act, axis=0)[:, w0:w1]         # (G, w1-w0)
+    g, w = sel.shape
+    cand = bucket_rows[sel].reshape(g, -1)               # (G, w*cap)
+    valid = cand >= 0
+    pts = jnp.take(data_tiles, sel, axis=0)              # (G, w, cap, d)
+    pts = pts.reshape(g, -1, pts.shape[-1])              # (G, w*cap, d)
+    if masks_tiles is not None:
+        ma = jnp.take(masks_tiles, act, axis=0)          # (G, T, cap)
+        ma = jnp.take_along_axis(ma, sel[:, :, None], axis=1)
+        valid = valid & ma.reshape(g, -1)
+    d2, idx = ops.topk_l2_masked(qa, pts, valid, k, interpret=interpret)
+    rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
+    rows = jnp.where(idx >= 0, rows, -1)
+    return d2, rows, jnp.sum(valid, axis=1)
+
+
+@jax.jit
+def _tile_masks(masks, bucket_rows):
+    """Re-layout per-row masks (G, n) into tile-major (G, T, cap) once per
+    KNN group, so beam rounds gather masks by tile index."""
+    t, cap = bucket_rows.shape
+    flat = jnp.maximum(bucket_rows.reshape(-1), 0)
+    return jnp.take(masks, flat, axis=1).reshape(masks.shape[0], t, cap)
+
+
+@jax.jit
+def _knn_prologue(qs, centroid, radius, masks_tiles=None):
+    """Per-query leaf lower bounds, visit order, and sorted bounds.
+
+    With a row mask, tiles holding NO masked rows get lb = +inf: they sort
+    last and the stopping bound treats them as exhausted, so a selective
+    filter (the And(VK, predicate) case) scans only the filter's own tiles
+    instead of expanding the beam across the whole table."""
+    d2c = ops.pairwise_sq_l2(qs, centroid)
+    dc = jnp.sqrt(jnp.maximum(d2c, 0.0))
+    lb = jnp.maximum(dc - radius[None, :], 0.0)          # (G, L)
+    if masks_tiles is not None:
+        lb = jnp.where(jnp.any(masks_tiles, axis=2), lb, jnp.inf)
+    order = jnp.argsort(lb, axis=1)
+    return order, jnp.take_along_axis(lb, order, axis=1)
+
+
+def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
+                masks: Optional[jax.Array] = None, beam: int = 8,
+                interpret: bool = True,
+                stats: Optional[EngineStats] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact batched (optionally row-masked) KNN.
+
+    qs: (G, d); data_tiles: (T, cap, d) tile-major device copy of the
+    column (see ``tile_data``); masks: optional (G, n) bool device.
+    Returns (dists (G, k) fp32 L2, rows (G, k) int; -1/inf pad slots).
+
+    Exactness: leaves are ranked per query by the lower bound
+    max(0, |q - C| - R); after scanning the top-w, the result is final once
+    the kth masked distance <= the (w+1)-th lower bound — identical to the
+    scalar executor's stopping rule, with the beam doubling host-driven so
+    every round is one fixed-shape compiled call. Rounds are incremental
+    (each scans only the newly admitted buckets and merges with the carry),
+    queries whose bound is met leave the batch, and straggler subsets are
+    padded to powers of two so compiled round shapes stay bounded.
+    """
+    t0 = time.time()
+    qs = jnp.asarray(qs, jnp.float32)
+    masks_tiles = None
+    if masks is not None:
+        masks_tiles = _tile_masks(jnp.asarray(masks), geom.bucket_rows)
+    g = int(qs.shape[0])
+    l = geom.n_leaves
+    order, lb_sorted = _knn_prologue(qs, geom.centroid, geom.radius,
+                                     masks_tiles)
+    lb_sorted = np.asarray(lb_sorted)
+    best_d2 = np.full((g, k), np.inf, np.float32)
+    best_r = np.full((g, k), -1, np.int64)
+    active = np.arange(g)
+    w0, w = 0, max(1, min(beam, l))
+    while len(active):
+        na = len(active)
+        gp = 1 << max(0, na - 1).bit_length()   # pad count to a power of 2
+        padded = np.zeros(gp, np.int32)
+        padded[:na] = active
+        d2, rows, nvalid = _knn_round(
+            jnp.asarray(padded), qs, order, masks_tiles,
+            data_tiles, geom.bucket_rows, w0=w0, w1=w, k=k,
+            interpret=interpret)
+        d2 = np.asarray(d2[:na])
+        rows = np.asarray(rows[:na])
+        if stats is not None:
+            stats.knn_rounds += 1
+            stats.knn_buckets += na * (w - w0)
+            stats.rows_scanned += int(np.asarray(nvalid)[:na].sum())
+        # host merge with the carry: carried entries come from
+        # earlier (lower-lb) buckets, so a stable sort keeps the scalar
+        # executor's visit-order tie-break
+        alld = np.concatenate([best_d2[active], d2], axis=1)
+        allr = np.concatenate([best_r[active], rows], axis=1)
+        pick = np.argsort(alld, axis=1, kind="stable")[:, :k]
+        merged_d = np.take_along_axis(alld, pick, axis=1)
+        merged_r = np.take_along_axis(allr, pick, axis=1)
+        best_d2[active] = merged_d
+        best_r[active] = merged_r
+        kth = np.sqrt(merged_d[:, -1])
+        nxt = lb_sorted[active, w] if w < l else np.full(na, np.inf)
+        done = (kth <= nxt) | (w >= l)
+        active = active[~done]
+        w0, w = w, min(2 * w, l)
+    if stats is not None:
+        stats.time_s += time.time() - t0
+    return np.sqrt(best_d2), best_r
+
+
+# ---------------------------------------------------------------------------
+# Grouped predicate masks (one compiled call per (type, attr) group)
+# ---------------------------------------------------------------------------
+@jax.jit
+def _ne_group_masks(col, num_lo, num_hi, row_leaf, v, tol):
+    leaf_ok = ((num_lo[None, :] <= (v + tol)[:, None])
+               & (num_hi[None, :] >= (v - tol)[:, None]))
+    m = jnp.abs(col[None, :] - v[:, None]) <= tol[:, None]
+    return m & leaf_ok[:, row_leaf], jnp.sum(leaf_ok)
+
+
+@jax.jit
+def _nr_group_masks(col, num_lo, num_hi, row_leaf, lo, hi):
+    leaf_ok = ((num_lo[None, :] <= hi[:, None])
+               & (num_hi[None, :] >= lo[:, None]))
+    m = (col[None, :] >= lo[:, None]) & (col[None, :] <= hi[:, None])
+    return m & leaf_ok[:, row_leaf], jnp.sum(leaf_ok)
+
+
+@jax.jit
+def _vr_group_masks(qs, r, centroid, radius, col, row_leaf):
+    d2c = ops.pairwise_sq_l2(qs, centroid)
+    dc = jnp.sqrt(jnp.maximum(d2c, 0.0))
+    # conservative slack: dc comes from the quadratic-expansion kernel and
+    # can overestimate by fp epsilon — pruning must never drop a leaf whose
+    # boundary row is exactly at distance r + R
+    slack = 1e-4 * (1.0 + r[:, None] + radius[None, :])
+    leaf_ok = dc - radius[None, :] <= r[:, None] + slack
+    d2 = ops.pairwise_sq_l2(qs, col)
+    r2 = (r * r)[:, None]
+    m = d2 <= r2
+    # rows whose kernel distance sits within fp noise of the boundary get
+    # re-checked on the host with the exact sum((x-q)^2) formula
+    near = jnp.abs(d2 - r2) <= 1e-3 * (r2 + 1.0)
+    return m & leaf_ok[:, row_leaf], jnp.sum(leaf_ok), near
+
+
+# ---------------------------------------------------------------------------
+# Query planning
+# ---------------------------------------------------------------------------
+def _contains_vk(q: Q.Query) -> bool:
+    return any(isinstance(b, Q.VK) for b in Q.basic_queries(q))
+
+
+def plannable(q: Q.Query) -> bool:
+    """True when every V.K candidate mask derives from predicate-only
+    subtrees (see module docstring for the excluded corner)."""
+    if isinstance(q, (Q.NE, Q.NR, Q.VR, Q.VK)):
+        return True
+    if isinstance(q, Q.And):
+        return all(isinstance(p, Q.VK) or
+                   (not _contains_vk(p) and plannable(p))
+                   for p in q.parts)
+    if isinstance(q, Q.Or):
+        return all(plannable(p) for p in q.parts)
+    return False
+
+
+class HybridEngine:
+    """Batched executor over one prepared MQRLD table (see module doc)."""
+
+    def __init__(self, tree, table, meta, *, interpret: bool = True,
+                 beam: int = 16, tile: int = 128):
+        leaves = tree.leaf_ids
+        starts = np.asarray(tree.bucket_start[leaves])
+        ends = np.asarray(tree.bucket_end[leaves])
+        rows_np, cap, leaf_of_tile = bucket_tiles(starts, ends, tile)
+        self.bucket_rows = jnp.asarray(rows_np)
+        self.cap = cap
+        self.tile = tile
+        self.n = table.n_rows
+        self.n_leaves = len(leaves)
+        self.n_tiles = len(leaf_of_tile)
+        self.interpret = interpret
+        self.beam = beam
+        # all metadata lives at TILE granularity (a tile inherits its
+        # leaf's ball/box bounds); row_tile maps rows back for pruning
+        row_tile = np.zeros(max(1, self.n), np.int32)
+        for t in range(len(rows_np)):
+            valid = rows_np[t][rows_np[t] >= 0]
+            row_tile[valid] = t
+        self.row_leaf = jnp.asarray(row_tile[:self.n])
+        self.vec = {a: jnp.asarray(c, jnp.float32)
+                    for a, c in table.vector.items()}
+        self.vec_np = {a: np.asarray(c, np.float32)
+                       for a, c in table.vector.items()}
+        self.vec_tiles = {a: jnp.asarray(tile_data(c, rows_np))
+                          for a, c in table.vector.items()}
+        self.num = {a: jnp.asarray(c, jnp.float32)
+                    for a, c in table.numeric.items()}
+        self.geom = {a: LeafGeometry(
+            centroid=jnp.asarray(meta.vec_centroid[a][leaf_of_tile],
+                                 jnp.float32),
+            radius=jnp.asarray(meta.vec_radius[a][leaf_of_tile],
+                               jnp.float32),
+            bucket_rows=self.bucket_rows, cap=cap) for a in table.vector}
+        self.num_lo = {a: jnp.asarray(meta.num_lo[a][leaf_of_tile],
+                                      jnp.float32)
+                       for a in table.numeric}
+        self.num_hi = {a: jnp.asarray(meta.num_hi[a][leaf_of_tile],
+                                      jnp.float32)
+                       for a in table.numeric}
+
+    # ------------------------------------------------------------ stage 1+2
+    def _predicate_masks(self, queries: Sequence[Q.Query],
+                         stats: EngineStats) -> Dict[Q.Query, np.ndarray]:
+        """Exact (n,) row masks for every distinct basic predicate in the
+        batch, computed group-wise: one leaf-pruning + one compare/kernel
+        call per (type, attr) group. Masks come back to the host as one
+        (g, n) transfer per group — the boolean combining in ``_walk`` is
+        numpy (sub-microsecond per op vs ~100us device dispatch), and only
+        the final V.K candidate masks return to the device."""
+        nodes: List[Q.Query] = []
+        seen = set()
+        for q in queries:
+            for b in Q.basic_queries(q):
+                if isinstance(b, Q.VK) or b in seen:
+                    continue
+                seen.add(b)
+                nodes.append(b)
+        groups: Dict[Tuple[str, str], List[Q.Query]] = defaultdict(list)
+        for b in nodes:
+            groups[(type(b).__name__, b.attr)].append(b)
+
+        masks: Dict[Q.Query, np.ndarray] = {}
+        for (tname, attr), grp in groups.items():
+            if tname == "NE":
+                m, touched = _ne_group_masks(
+                    self.num[attr], self.num_lo[attr], self.num_hi[attr],
+                    self.row_leaf,
+                    jnp.asarray([b.value for b in grp], jnp.float32),
+                    jnp.asarray([b.tol for b in grp], jnp.float32))
+                m = np.asarray(m)
+            elif tname == "NR":
+                m, touched = _nr_group_masks(
+                    self.num[attr], self.num_lo[attr], self.num_hi[attr],
+                    self.row_leaf,
+                    jnp.asarray([b.lo for b in grp], jnp.float32),
+                    jnp.asarray([b.hi for b in grp], jnp.float32))
+                m = np.asarray(m)
+            else:  # VR
+                vecs = np.stack([b.vec() for b in grp])
+                r2 = np.asarray([b.radius for b in grp],
+                                np.float32) ** 2
+                m, touched, near = _vr_group_masks(
+                    jnp.asarray(vecs),
+                    jnp.asarray([b.radius for b in grp], jnp.float32),
+                    self.geom[attr].centroid, self.geom[attr].radius,
+                    self.vec[attr], self.row_leaf)
+                m = np.asarray(m)
+                gis, ris = np.nonzero(np.asarray(near))
+                if len(gis):
+                    m = np.array(m)  # writable copy for boundary patching
+                    col = self.vec_np[attr]
+                    exact = (((col[ris] - vecs[gis]) ** 2).sum(1)
+                             <= r2[gis])
+                    m[gis, ris] = exact
+            stats.predicate_buckets += int(touched)
+            for i, b in enumerate(grp):
+                masks[b] = m[i]
+        return masks
+
+    # --------------------------------------------------------------- stage 3
+    def _walk(self, q, ambient, pred_masks, jobs, job_rows, ctr):
+        """Mirror of the scalar ``MQRLD._exec`` over device masks. Planning
+        pass (job_rows None): registers every V.K as (node, candidate mask)
+        and returns None for VK-containing subtrees. Finishing pass:
+        substitutes batched KNN results. Traversal order is identical in
+        both passes, so ``ctr`` indexes the same job list."""
+        if isinstance(q, (Q.NE, Q.NR, Q.VR)):
+            m = pred_masks[q]
+            return m if ambient is None else (m & ambient)
+        if isinstance(q, Q.VK):
+            i = ctr[0]
+            ctr[0] += 1
+            if job_rows is None:
+                jobs.append((q, ambient))
+                return None
+            rows = np.asarray(job_rows[i])
+            m = np.zeros(self.n, bool)
+            m[rows[rows >= 0]] = True
+            return m
+        if isinstance(q, Q.And):
+            mask = ambient
+            vks = []
+            for p in q.parts:
+                if isinstance(p, Q.VK):
+                    vks.append(p)
+                    continue
+                pm = self._walk(p, mask, pred_masks, jobs, job_rows, ctr)
+                mask = pm if mask is None else (mask & pm)
+            if not vks:
+                return mask if mask is not None \
+                    else np.ones(self.n, bool)
+            res = None
+            for p in vks:
+                vm = self._walk(p, mask, pred_masks, jobs, job_rows, ctr)
+                if vm is not None:
+                    res = vm if res is None else (res & vm)
+            return res
+        if isinstance(q, Q.Or):
+            out = np.zeros(self.n, bool)
+            any_unknown = False
+            for p in q.parts:
+                pm = self._walk(p, ambient, pred_masks, jobs, job_rows, ctr)
+                if pm is None:
+                    any_unknown = True
+                else:
+                    out = out | pm
+            return None if any_unknown else out
+        raise TypeError(q)
+
+    def _run_jobs(self, jobs, stats: EngineStats) -> List[np.ndarray]:
+        """Group V.K jobs per (attribute, masked?) and run each group as one
+        beam-doubled masked KNN through the fused kernel. Masked jobs are
+        kept apart: filtered candidates push the kth bound up, so masked
+        groups need deeper beams — mixing would drag unmasked queries
+        through extra rounds."""
+        out: List[Optional[np.ndarray]] = [None] * len(jobs)
+        by_grp: Dict[Tuple[str, bool], List[int]] = defaultdict(list)
+        for i, (vk, mask) in enumerate(jobs):
+            by_grp[(vk.attr, mask is not None)].append(i)
+        for (attr, masked), idxs in by_grp.items():
+            qs = jnp.asarray(np.stack([jobs[i][0].vec() for i in idxs]))
+            kmax = max(jobs[i][0].k for i in idxs)
+            masks = None
+            if masked:
+                masks = jnp.asarray(np.stack([jobs[i][1] for i in idxs]))
+            _, rows = batched_knn(self.geom[attr], self.vec_tiles[attr],
+                                  qs, kmax, masks=masks, beam=self.beam,
+                                  interpret=self.interpret, stats=stats)
+            for pos, i in enumerate(idxs):
+                out[i] = rows[pos, :jobs[i][0].k]
+        return out  # type: ignore[return-value]
+
+    # -------------------------------------------------------------- execute
+    def execute_batch(self, queries: Sequence[Q.Query]
+                      ) -> Tuple[List[np.ndarray], EngineStats]:
+        """Execute a batch of plannable query trees. Returns one row array
+        per query (see module docstring for the ordering contract)."""
+        t0 = time.time()
+        stats = EngineStats(queries=len(queries))
+        for q in queries:
+            if not plannable(q):
+                raise ValueError(
+                    f"query not plannable for the batched engine "
+                    f"(use MQRLD.execute_batch for scalar fallback): {q!r}")
+        pred_masks = self._predicate_masks(queries, stats)
+        jobs: List[Tuple[Q.VK, Optional[jax.Array]]] = []
+        ctr = [0]
+        for q in queries:
+            self._walk(q, None, pred_masks, jobs, None, ctr)
+        job_rows = self._run_jobs(jobs, stats)
+        out: List[np.ndarray] = []
+        ctr = [0]
+        for q in queries:
+            if isinstance(q, Q.VK):
+                ctr[0] += 1  # consume this query's own job slot
+                rows = np.asarray(job_rows[ctr[0] - 1])
+                out.append(rows[rows >= 0].astype(np.int64))
+                continue
+            m = self._walk(q, None, pred_masks, jobs, job_rows, ctr)
+            out.append(np.nonzero(m)[0].astype(np.int64))
+        stats.time_s = time.time() - t0
+        return out, stats

@@ -390,67 +390,51 @@ class HostExecutor:
 # ---------------------------------------------------------------------------
 class BatchedExecutor:
     """Vectorized leaf-ranked KNN: lower bounds over all leaves, padded
-    bucket gathers, exactness via beam doubling against the bound."""
+    bucket gathers, exactness via beam doubling against the bound.
 
-    def __init__(self, tree: ClusterTree, data: np.ndarray):
+    Since the engine refactor this is a thin veneer over
+    ``repro.core.engine.batched_knn``: the leaf scan runs through the
+    Pallas ``fused_topk`` row-mask kernel (interpret mode on CPU) instead
+    of a host-side per-query loop. Kept as the single-space KNN API; rich
+    hybrid batches go through ``repro.core.engine.HybridEngine``.
+    """
+
+    def __init__(self, tree: ClusterTree, data: np.ndarray,
+                 *, interpret: bool = True, tile: int = 128):
         import jax.numpy as jnp
+
+        from repro.core.engine import LeafGeometry, bucket_tiles, tile_data
         self.tree = tree
         self.data = np.asarray(data, np.float32)
+        self.interpret = interpret
         leaves = tree.leaf_ids
         self.leaves = leaves
-        self.lc = tree.centroid[leaves]            # (L, d)
-        self.lr = tree.radius[leaves]              # (L,)
         starts = tree.bucket_start[leaves]
         ends = tree.bucket_end[leaves]
-        self.bucket_cap = int((ends - starts).max(initial=1))
-        # padded bucket row-id matrix (L, cap); -1 = padding
-        l = len(leaves)
-        self.bucket_rows = np.full((l, self.bucket_cap), -1, np.int64)
-        for i, (s, e) in enumerate(zip(starts, ends)):
-            self.bucket_rows[i, :e - s] = np.arange(s, e)
+        rows, cap, leaf_of_tile = bucket_tiles(starts, ends, tile)
+        self.bucket_cap = cap
+        self.geom = LeafGeometry(
+            centroid=jnp.asarray(tree.centroid[leaves][leaf_of_tile],
+                                 jnp.float32),
+            radius=jnp.asarray(tree.radius[leaves][leaf_of_tile],
+                               jnp.float32),
+            bucket_rows=jnp.asarray(rows), cap=cap)
+        self._data_tiles = jnp.asarray(tile_data(self.data, rows))
 
     def knn(self, qs: np.ndarray, k: int, beam: int = 8
             ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
         """qs: (Q, d) -> (dists (Q,k), rows (Q,k), stats). Exact."""
-        import jax.numpy as jnp
-        t0 = time.time()
-        qs = np.asarray(qs, np.float32)
-        nq, l = len(qs), len(self.leaves)
-        d2c = np.asarray(ops.pairwise_sq_l2(jnp.asarray(qs),
-                                            jnp.asarray(self.lc)))
-        dc = np.sqrt(np.maximum(d2c, 0))
-        lb = np.maximum(dc - self.lr[None, :], 0.0)     # (Q, L)
-        order = np.argsort(lb, axis=1, kind="stable")
+        from repro.core.engine import EngineStats, batched_knn
+        es = EngineStats()
+        best_d, best_i = batched_knn(
+            self.geom, self._data_tiles, np.asarray(qs, np.float32), k,
+            beam=beam, interpret=self.interpret, stats=es)
         stats = QueryStats()
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_i = np.full((nq, k), -1, np.int64)
-        done = np.zeros(nq, bool)
-        visited = np.zeros(nq, np.int64)
-        while not done.all():
-            beam = min(beam, l)
-            for qi in np.nonzero(~done)[0]:
-                sel = order[qi, visited[qi]:beam]
-                if len(sel) == 0:
-                    done[qi] = True
-                    continue
-                rows = self.bucket_rows[sel].reshape(-1)
-                rows = rows[rows >= 0]
-                # small ragged gathers: plain numpy (a jitted kernel would
-                # recompile per bucket-count; the TPU path batches uniform
-                # bucket tiles instead)
-                diff = self.data[rows] - qs[qi]
-                d = np.sqrt(np.maximum(np.einsum("nd,nd->n", diff, diff), 0))
-                alld = np.concatenate([best_d[qi], d])
-                alli = np.concatenate([best_i[qi], rows])
-                pick = np.argsort(alld, kind="stable")[:k]
-                best_d[qi], best_i[qi] = alld[pick], alli[pick]
-                visited[qi] = beam
-                stats.buckets_touched += len(sel)
-                stats.rows_scanned += len(rows)
-                # exact when kth distance <= next unvisited lower bound
-                nxt = lb[qi, order[qi, beam]] if beam < l else np.inf
-                done[qi] = bool(best_d[qi][-1] <= nxt or beam >= l)
-            beam = min(beam * 2, l)
-        stats.time_s = time.time() - t0
-        stats.cbr = stats.buckets_touched / max(1, nq * l)
-        return best_d, best_i, stats
+        stats.buckets_touched = es.knn_buckets
+        stats.rows_scanned = es.rows_scanned
+        stats.time_s = es.time_s
+        # buckets_touched counts TILES, so normalize by the tile count to
+        # keep the cross-bucket-rate contract (cbr <= 1)
+        nq, t = len(qs), self.geom.n_leaves
+        stats.cbr = stats.buckets_touched / max(1, nq * t)
+        return best_d.astype(np.float32), best_i.astype(np.int64), stats

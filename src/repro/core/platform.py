@@ -12,6 +12,17 @@ attribute space using per-leaf (centroid, radius) metadata per vector
 attribute and per-leaf [min, max] boxes per numeric attribute. The paper's
 performance claim — better layout => fewer buckets touched => faster —
 shows up as lower CBR, not as approximation error.
+
+Execution paths (scalar vs batched): ``execute`` is the paper-faithful
+scalar path — host-side tree walk per query, the only path that records
+QBS rows, per-query ``QueryStats`` and Algorithm-3 access counts.
+``execute_batch`` routes a batch of query trees through the device-resident
+``repro.core.engine.HybridEngine`` (vectorized leaf pruning, grouped
+predicate masks, beam-doubled masked KNN through the Pallas fused_topk
+kernel) and returns exactly the same rows per query; queries outside the
+engine's plannable fragment transparently fall back to the scalar path.
+Both paths are exact; use the scalar one for QBS/stats parity and the
+batched one for serving throughput.
 """
 from __future__ import annotations
 
@@ -56,6 +67,7 @@ class MQRLD:
         self.enhanced: Optional[np.ndarray] = None
         self.seed = seed
         self._oracle_cache: Dict = {}
+        self._engine = None
 
     # ------------------------------------------------------------ build
     def prepare(self, columns: Optional[List[str]] = None, *,
@@ -99,6 +111,7 @@ class MQRLD:
         self.enhanced = feats[perm]
         self._build_meta()
         self._oracle_cache.clear()
+        self._engine = None  # device state is stale after a rebuild
         return report
 
     def _build_meta(self):
@@ -262,6 +275,47 @@ class MQRLD:
                 out[self._exec(p, stats, row_mask)] = True
             return np.nonzero(out)[0]
         raise TypeError(q)
+
+    # ------------------------------------------------------- batched engine
+    def engine(self, *, interpret: bool = True, beam: int = 16,
+               tile: int = 128):
+        """The device-resident batched executor for this table (built
+        lazily, invalidated by ``prepare``)."""
+        assert self.tree is not None, "call prepare() first"
+        from repro.core.engine import HybridEngine
+        if (self._engine is None or self._engine.interpret != interpret
+                or self._engine.beam != beam or self._engine.tile != tile):
+            self._engine = HybridEngine(self.tree, self.table, self.meta,
+                                        interpret=interpret, beam=beam,
+                                        tile=tile)
+        return self._engine
+
+    def execute_batch(self, queries: Sequence[Q.Query], *,
+                      interpret: bool = True):
+        """Execute a batch of rich hybrid queries on the batched engine.
+
+        Returns (results, EngineStats): one row array per query, exactly
+        the rows scalar ``execute`` returns (top-level V.K results are
+        distance-ordered, everything else ascending row ids). Queries
+        outside the engine's plannable fragment (see
+        ``repro.core.engine.plannable``) fall back to the scalar path.
+        No QBS recording happens here — replay on ``execute`` for that.
+        """
+        from repro.core.engine import EngineStats, plannable
+        eng = self.engine(interpret=interpret)
+        results: List[Optional[np.ndarray]] = [None] * len(queries)
+        planned = [i for i, q in enumerate(queries) if plannable(q)]
+        if planned:
+            rows, stats = eng.execute_batch([queries[i] for i in planned])
+            for i, r in zip(planned, rows):
+                results[i] = r
+        else:
+            stats = EngineStats()
+        stats.queries = len(queries)  # incl. scalar fallbacks (whose work
+        for i, q in enumerate(queries):  # is not in the engine counters)
+            if results[i] is None:  # scalar fallback
+                results[i] = self.execute(q, record=False)[0]
+        return results, stats
 
     # ------------------------------------------------------------- oracle
     def oracle(self, query: Q.Query) -> np.ndarray:

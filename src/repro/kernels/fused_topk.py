@@ -8,6 +8,13 @@ Grid: (M/BM, N/BN) with the N axis INNERMOST and "arbitrary" semantics —
 each (i, j) step merges tile-j candidates into query tile i's running
 buffer. The merge keeps the best k of (k + BN) candidates with a two-way
 sort network over a fixed-width buffer (k padded to a lane multiple).
+
+Two variants share the merge scheme:
+  * ``topk_l2_pallas``        — one shared point set for all queries
+  * ``topk_l2_masked_pallas`` — per-query candidate tiles + a validity
+    mask, the hybrid-engine leaf scan: each query ranks only the rows its
+    bucket beam gathered, and filtered KNN (And(VK, predicate)) stays
+    fused by zeroing the mask instead of re-gathering.
 """
 from __future__ import annotations
 
@@ -84,4 +91,97 @@ def topk_l2_pallas(q, p, k: int, *, bm: int = 128, bn: int = 512,
     valid = besti < n
     bestd = jnp.where(valid, bestd, jnp.inf)
     besti = jnp.where(valid, besti, -1)
+    return bestd, besti
+
+
+# ---------------------------------------------------------------------------
+# Row-masked, per-query-candidate variant (hybrid-engine leaf scan)
+# ---------------------------------------------------------------------------
+def _masked_kernel(q_ref, p_ref, v_ref, bestd_ref, besti_ref, *, bc: int,
+                   k: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        bestd_ref[...] = jnp.full_like(bestd_ref, jnp.inf)
+        besti_ref[...] = jnp.full_like(besti_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)          # (BG, D)
+    p = p_ref[...].astype(jnp.float32)          # (BG, BC, D)
+    v = v_ref[...]                              # (BG, BC) int32 0/1
+    qq = jnp.sum(q * q, axis=1)                 # (BG,)
+    pp = jnp.sum(p * p, axis=2)                 # (BG, BC)
+    # per-query vector x candidate-matrix product, batched over BG
+    cross = jax.lax.dot_general(
+        p, q, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)      # (BG, BC)
+    d = jnp.maximum(qq[:, None] + pp - 2.0 * cross, 0.0)
+    idx = (j * bc + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1))
+    # masked rows (bucket padding, filtered-out predicate rows) never win
+    d = jnp.where(v != 0, d, jnp.inf)
+
+    alld = jnp.concatenate([bestd_ref[...], d], axis=1)     # (BG, k+BC)
+    alli = jnp.concatenate([besti_ref[...], idx], axis=1)
+    negd, sel = jax.lax.top_k(-alld, k)
+    bestd_ref[...] = -negd
+    besti_ref[...] = jnp.take_along_axis(alli, sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bg", "bc", "interpret"))
+def topk_l2_masked_pallas(q, p, valid, k: int, *, bg: int = None,
+                          bc: int = None, interpret: bool = False):
+    """q: (G, D), p: (G, C, D), valid: (G, C) -> (dists (G, k), idx (G, k)).
+
+    Row g of ``p`` is query g's own candidate tile; ``valid`` entries of 0
+    (bucket padding / filtered rows) are excluded. Returned squared
+    distances are ascending; exhausted slots come back as (inf, -1) and
+    indices point into [0, C).
+
+    Block defaults are backend-dependent: on TPU small VMEM-safe tiles
+    ((8, 512, D) ~ 2 MB at D=512); in interpret mode the per-grid-step
+    overhead dominates everything else, so tiles grow to cover the whole
+    problem (bounded at bc=16384) and the 128-lane padding is skipped —
+    this is what makes the CPU serving path competitive.
+    """
+    g, _ = q.shape
+    c = p.shape[1]
+    kk = max(1, min(k, c))
+
+    def rup(x, m):
+        return ((x + m - 1) // m) * m
+    if bg is None:
+        bg = min(64, rup(g, 8)) if interpret else 8
+    if bc is None:
+        bc = min(16384, rup(c, 128)) if interpret else 512
+    dpad = 8 if interpret else 128
+    q2 = _pad(_pad(q.astype(jnp.float32), dpad, 1), bg, 0)
+    p2 = _pad(_pad(_pad(p.astype(jnp.float32), dpad, 2), bc, 1), bg, 0)
+    v2 = _pad(_pad(valid.astype(jnp.int32), bc, 1), bg, 0)
+    gp, dp = q2.shape
+    cp = p2.shape[1]
+    grid = (gp // bg, cp // bc)
+    bestd, besti = pl.pallas_call(
+        functools.partial(_masked_kernel, bc=bc, k=kk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bg, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bg, bc, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bg, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((bg, kk), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gp, kk), jnp.float32),
+            jax.ShapeDtypeStruct((gp, kk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q2, p2, v2)
+    bestd = bestd[:g]
+    besti = jnp.where(jnp.isfinite(bestd), besti[:g], -1)
+    if kk < k:  # fewer candidates than k: pad to the requested width
+        bestd = jnp.pad(bestd, ((0, 0), (0, k - kk)),
+                        constant_values=jnp.inf)
+        besti = jnp.pad(besti, ((0, 0), (0, k - kk)), constant_values=-1)
     return bestd, besti

@@ -65,6 +65,17 @@ def topk_l2(q, p, k: int, interpret: bool = False):
     return ref.topk_l2(q, p, k)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_l2_masked(q, p, valid, k: int, interpret: bool = False):
+    """Per-query candidate tiles + validity mask (hybrid-engine leaf scan).
+    q: (G, D), p: (G, C, D), valid: (G, C)."""
+    if use_pallas() or interpret:
+        from repro.kernels.fused_topk import topk_l2_masked_pallas
+        return topk_l2_masked_pallas(q, p, valid, k,
+                                     interpret=not use_pallas())
+    return ref.topk_l2_masked(q, p, valid, k)
+
+
 def topk_l2_blocked(q, p, k: int, row_block: int = 2048):
     import numpy as np
     ds, is_ = [], []

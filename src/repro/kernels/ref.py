@@ -28,6 +28,28 @@ def topk_l2(q, p, k: int):
     return -neg, idx
 
 
+def topk_l2_masked(q, p, valid, k: int):
+    """Per-query-candidate masked top-k. q: (G, D), p: (G, C, D),
+    valid: (G, C) -> (sq_dists (G, k) ascending, indices (G, k) into
+    [0, C)). Invalid rows never win; exhausted slots are (inf, -1)."""
+    qf = q.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    qq = jnp.sum(qf * qf, axis=1)[:, None]
+    pp = jnp.sum(pf * pf, axis=2)
+    cross = jnp.einsum("gd,gcd->gc", qf, pf,
+                       preferred_element_type=jnp.float32)
+    d = jnp.maximum(qq + pp - 2.0 * cross, 0.0)
+    d = jnp.where(valid != 0, d, jnp.inf)
+    kk = max(1, min(k, d.shape[1]))
+    neg, idx = jax.lax.top_k(-d, kk)
+    dd = -neg
+    idx = jnp.where(jnp.isfinite(dd), idx, -1)
+    if kk < k:
+        dd = jnp.pad(dd, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=-1)
+    return dd, idx
+
+
 def lpgf_force(points, radius, g_mean, c: float = 1.1):
     """LPGF resultant force per point (paper Fig 13), exact all-pairs.
 

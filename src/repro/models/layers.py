@@ -134,7 +134,11 @@ def attention_dense(q, k, v, *, causal: bool = True, window: int = 0,
     """
     b, sq, h, hd = q.shape
     skv = k.shape[1]
-    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    # fp32 score accumulation + fp32 softmax*V: matches the streaming/flash
+    # paths bit-for-bit up to reduction order, so prefill (stream) and
+    # forward/decode (dense) agree within bf16 rounding of the output cast
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32)
     scores *= 1.0 / np.sqrt(hd)
     qpos = jnp.arange(sq) + q_offset            # (sq,)
     if kv_positions is None:
@@ -150,8 +154,10 @@ def attention_dense(q, k, v, *, causal: bool = True, window: int = 0,
     if kv_valid_len is not None:
         mask &= kpos[None, :] < kv_valid_len
     scores = jnp.where(mask[None, None], scores, -1e30)
-    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhqs,bshd->bqhd", w, v)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
 
 
 def attention_stream(q, k, v, *, causal: bool = True, window: int = 0,

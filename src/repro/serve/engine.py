@@ -5,6 +5,13 @@ Straggler/fault posture: requests are grouped into fixed-shape batches
 (padded; static shapes = one compiled program), decode runs a fixed-length
 jitted loop per batch, and the engine is stateless between batches — a
 replacement worker resumes from the request queue with no handoff.
+
+``RetrievalServer`` is the retrieval half of a production deployment: it
+pads a batch of token prompts into one embedding forward pass, turns each
+request into a MOAPI query (V.K, optionally And-ed with a caller-supplied
+predicate tree), and executes the whole batch through the platform's
+device-resident hybrid engine (``MQRLD.execute_batch``) — one compiled
+path from request queue to Pallas kernels.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import query as Q
 from repro.models import build_model
 
 
@@ -115,3 +123,84 @@ class EmbeddingServer:
                 (len(tokens), self.cfg.frontend_tokens, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
         return np.asarray(self._embed_jit(self.params, batch))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval serving: embedder -> hybrid engine
+# ---------------------------------------------------------------------------
+@dataclass
+class RetrievalRequest:
+    tokens: np.ndarray                   # (S,) int32 prompt tokens
+    attr: str                            # vector column to search
+    k: int = 10
+    predicate: Optional[Q.Query] = None  # VK-free filter tree, And-ed in
+
+
+@dataclass
+class RetrievalResult:
+    rows: np.ndarray                     # result row ids (distance order)
+    query: Q.Query                       # the MOAPI query that was run
+
+
+class RetrievalServer:
+    """Batched retrieval serving over a prepared ``MQRLD`` platform.
+
+    Each ``serve`` call is two compiled stages: one padded embedding
+    forward pass for all prompts, then one ``execute_batch`` through the
+    hybrid engine for all queries. Prompts are right-padded with
+    ``pad_token`` to the batch max length (mean-pooled embeddings shift
+    slightly versus unpadded prompts; real deployments bucket by length).
+
+    ``project`` maps the embedder's output onto the searched vector
+    column's space (identity by default) — the supported hook when the
+    backbone dimension differs from the stored column.
+
+    Results are ALWAYS distance-ordered: ``execute_batch`` returns
+    filtered-KNN (And) results as ascending row ids, so ``serve``
+    re-ranks them by distance to the request embedding before returning.
+    """
+
+    def __init__(self, platform, embedder: EmbeddingServer, *,
+                 batch_size: int = 64, pad_token: int = 0,
+                 project=None):
+        self.platform = platform
+        self.embedder = embedder
+        self.batch_size = batch_size
+        self.pad_token = pad_token
+        self.project = project
+
+    def _queries(self, reqs: Sequence[RetrievalRequest],
+                 emb: np.ndarray) -> List[Q.Query]:
+        out = []
+        for r, e in zip(reqs, emb):
+            vk = Q.VK.of(r.attr, e, r.k)
+            out.append(vk if r.predicate is None
+                       else Q.And.of(r.predicate, vk))
+        return out
+
+    def _ranked(self, req: RetrievalRequest, emb: np.ndarray,
+                rows: np.ndarray) -> np.ndarray:
+        if req.predicate is None or len(rows) == 0:
+            return rows  # top-level V.K is already distance-ordered
+        col = self.platform.table.vector[req.attr][rows]
+        d2 = ((col - emb[None, :]) ** 2).sum(1)
+        return rows[np.argsort(d2, kind="stable")]
+
+    def serve(self, requests: Sequence[RetrievalRequest]
+              ) -> List[RetrievalResult]:
+        results: List[RetrievalResult] = []
+        for i in range(0, len(requests), self.batch_size):
+            chunk = requests[i:i + self.batch_size]
+            plen = max(len(r.tokens) for r in chunk)
+            toks = np.full((len(chunk), plen), self.pad_token, np.int32)
+            for j, r in enumerate(chunk):
+                toks[j, :len(r.tokens)] = r.tokens
+            emb = self.embedder.embed(toks)
+            if self.project is not None:
+                emb = np.asarray(self.project(emb))
+            queries = self._queries(chunk, emb)
+            rows, _ = self.platform.execute_batch(queries)
+            results.extend(
+                RetrievalResult(rows=self._ranked(req, e, r), query=q)
+                for req, e, r, q in zip(chunk, emb, rows, queries))
+        return results

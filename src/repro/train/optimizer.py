@@ -74,10 +74,37 @@ def _decode(enc, shape, dtype: str):
     return enc.astype(jnp.float32)
 
 
+def _encode_v(v, dtype: str):
+    """Second-moment encode. int8 codes store sqrt(v) (the RMS): linear
+    codes on v itself underflow to 0 for any entry 254x below its channel
+    max, and a zero denominator under a nonzero first moment turns one Adam
+    step into mh/eps — a parameter explosion. RMS codes halve the dynamic
+    range in log space, and the decode side clamps the denominator at the
+    remaining quantization resolution."""
+    if dtype == "int8":
+        if not _quantizable(v.shape):
+            return v
+        return quantize_i8(jnp.sqrt(v))
+    return v.astype(jnp.dtype(dtype))
+
+
+def _decode_v(enc, dtype: str):
+    """Returns (v fp32, denom_floor). ``denom_floor`` is half a quantization
+    step of sqrt(v): a code-0 entry may hide a true RMS up to this value, so
+    the Adam denominator must never drop below it."""
+    if dtype == "int8" and isinstance(enc, tuple):
+        s = dequantize_i8(enc[0], enc[1])
+        return jnp.square(s), 0.5 * enc[1]
+    return enc.astype(jnp.float32), 0.0
+
+
 def init_adam(params, state_dtype: str = "float32") -> AdamState:
     def z(p):
         return _encode(jnp.zeros(p.shape, jnp.float32), state_dtype)
-    return AdamState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+
+    def zv(p):
+        return _encode_v(jnp.zeros(p.shape, jnp.float32), state_dtype)
+    return AdamState(m=jax.tree.map(z, params), v=jax.tree.map(zv, params),
                      count=jnp.zeros((), jnp.int32))
 
 
@@ -143,14 +170,14 @@ def adam_update(tc: TrainConfig, params, grads, state: AdamState,
     def upd(p, g, m_enc, v_enc):
         g = g.astype(jnp.float32) * clip
         m = _decode(m_enc, p.shape, state_dtype)
-        v = _decode(v_enc, p.shape, state_dtype)
+        v, vfloor = _decode_v(v_enc, state_dtype)
         m = b1 * m + (1 - b1) * g
         v = b2 * v + (1 - b2) * g * g
         mh, vh = m / c1, v / c2
-        step_ = mh / (jnp.sqrt(vh) + tc.eps)
+        step_ = mh / (jnp.maximum(jnp.sqrt(vh), vfloor) + tc.eps)
         decay = tc.weight_decay * (p.ndim >= 2)
         new_p = p - lr * (step_ + decay * p)
-        return new_p, _encode(m, state_dtype), _encode(v, state_dtype)
+        return new_p, _encode(m, state_dtype), _encode_v(v, state_dtype)
 
     pl, tdef = jax.tree.flatten(params)
     gl = jax.tree.leaves(grads)

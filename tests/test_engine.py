@@ -1,0 +1,199 @@
+"""Batched hybrid-query engine: exactness parity against the scalar path
+and the brute-force oracle for every MOAPI archetype, the Pallas
+(interpret) vs pure-jnp kernel paths, masked-KNN edge cases, unplannable
+fallback, and the retrieval-serving wiring."""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.engine import EngineStats, batched_knn, plannable
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+
+@pytest.fixture(scope="module")
+def platform():
+    rng = np.random.default_rng(0)
+    n, d = 2500, 12
+    centers = rng.normal(size=(6, d)).astype(np.float32) * 7
+    lab = rng.integers(0, 6, n)
+    vec = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    vec2 = rng.normal(size=(n, 6)).astype(np.float32)
+    t = (MMOTable("shop")
+         .add_vector("img", vec, model="clip")
+         .add_vector("audio", vec2, model="audioclip")
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32))
+         .add_numeric("delivery", rng.uniform(0, 24, n).astype(np.float32)))
+    p = MQRLD(t, seed=0)
+    p.prepare(min_leaf=16, max_leaf=256, dpc_max_clusters=6)
+    return p
+
+
+def _cases(p):
+    t = p.table
+    v1 = t.vector["img"][10]
+    v2 = t.vector["audio"][10]
+    return [
+        # basic queries
+        Q.NE("price", float(t.numeric["price"][7]), 0.5),
+        Q.NR("price", 10, 30),
+        Q.VR.of("img", v1, 3.0),
+        Q.VK.of("img", v1, 12),
+        # the paper's three typical rich hybrids
+        Q.And.of(Q.VR.of("img", v1, 4.0), Q.NR("price", 20, 80)),
+        Q.And.of(Q.NR("price", 20, 80), Q.VK.of("img", v1, 10)),
+        Q.And.of(Q.VR.of("img", v1, 5.0), Q.VK.of("img", v1, 10)),
+        # multi-vector, unions, nesting
+        Q.And.of(Q.VR.of("img", v1, 6.0), Q.VR.of("audio", v2, 4.0)),
+        Q.Or.of(Q.NR("price", 0, 5), Q.VR.of("img", v1, 2.0)),
+        Q.And.of(Q.Or.of(Q.NR("price", 0, 50), Q.NR("delivery", 0, 6)),
+                 Q.VK.of("img", v1, 15)),
+        Q.Or.of(Q.VK.of("img", v1, 5), Q.NR("price", 99, 100)),
+        # edges: near-empty filter under VK, tight mask, empty predicate
+        Q.And.of(Q.NR("price", 40, 41), Q.VK.of("img", v1, 50)),
+        Q.And.of(Q.VR.of("img", v1, 0.1), Q.VK.of("img", v1, 5)),
+        Q.NR("price", 200, 300),
+    ]
+
+
+def _rowset(rows):
+    return set(np.asarray(rows).tolist())
+
+
+def test_execute_batch_parity(platform):
+    """One batch, every archetype: engine == scalar execute == oracle.
+    Runs on the engine default, i.e. the Pallas fused_topk kernel in
+    interpret mode on CPU."""
+    p = platform
+    cases = _cases(p)
+    results, stats = p.execute_batch(cases)
+    assert stats.queries == len(cases)
+    for q, rows in zip(cases, results):
+        scalar, _ = p.execute(q, record=False)
+        assert _rowset(rows) == _rowset(scalar), q
+        assert _rowset(rows) == _rowset(p.oracle(q)), q
+
+
+def test_execute_batch_kernel_paths_agree(platform):
+    """interpret=True (Pallas interpret kernel) and interpret=False
+    (pure-jnp ref on CPU) return identical rows."""
+    p = platform
+    cases = _cases(p)
+    got_pallas, _ = p.execute_batch(cases, interpret=True)
+    got_ref, _ = p.execute_batch(cases, interpret=False)
+    for q, a, b in zip(cases, got_pallas, got_ref):
+        assert _rowset(a) == _rowset(b), q
+
+
+def test_toplevel_vk_distance_order(platform):
+    """Top-level V.K results come back distance-ordered, like the scalar
+    executor's ranking."""
+    p = platform
+    v = p.table.vector["img"][77]
+    (rows,), _ = p.execute_batch([Q.VK.of("img", v, 9)])
+    d = ((p.table.vector["img"][rows] - v) ** 2).sum(1)
+    assert (np.diff(d) >= -1e-6).all()
+    assert len(rows) == 9
+
+
+def test_masked_knn_fewer_matches_than_k(platform):
+    """And(NR, VK) where the filter admits fewer rows than k: the engine
+    returns exactly the surviving rows, like the scalar path."""
+    p = platform
+    price = p.table.numeric["price"]
+    lo = float(np.sort(price)[3])  # filter admits ~4 rows
+    q = Q.And.of(Q.NR("price", 0.0, lo), Q.VK.of("img",
+                                                 p.table.vector["img"][5],
+                                                 20))
+    (rows,), _ = p.execute_batch([q])
+    scalar, _ = p.execute(q, record=False)
+    assert _rowset(rows) == _rowset(scalar) == _rowset(p.oracle(q))
+    assert len(rows) <= 20
+
+
+def test_unplannable_falls_back_to_scalar(platform):
+    """A V.K nested under a combiner that is a *sibling* of other And
+    parts is order-dependent in the scalar executor: the engine refuses it
+    and MQRLD.execute_batch transparently falls back."""
+    p = platform
+    v = p.table.vector["img"][3]
+    q = Q.And.of(Q.Or.of(Q.VK.of("img", v, 10), Q.NR("price", 0, 1)),
+                 Q.NR("price", 0, 60))
+    assert not plannable(q)
+    ok = Q.And.of(Q.NR("price", 0, 60), Q.VK.of("img", v, 10))
+    assert plannable(ok)
+    results, _ = p.execute_batch([q, ok])
+    for qq, rows in zip([q, ok], results):
+        scalar, _ = p.execute(qq, record=False)
+        assert _rowset(rows) == _rowset(scalar), qq
+
+
+def test_batched_knn_matches_oracle(platform):
+    """The engine's beam-doubled masked KNN core, standalone: exact
+    against brute force with and without a row mask."""
+    p = platform
+    eng = p.engine()
+    col = p.table.vector["img"]
+    rng = np.random.default_rng(3)
+    qs = col[rng.integers(0, len(col), 6)] + \
+        rng.normal(size=(6, col.shape[1])).astype(np.float32) * 0.2
+    mask = p.table.numeric["price"] < 50.0
+    stats = EngineStats()
+    _, rows = batched_knn(eng.geom["img"], eng.vec_tiles["img"],
+                          qs.astype(np.float32), 7,
+                          masks=np.broadcast_to(mask, (6, len(mask))),
+                          beam=4, stats=stats)
+    d2 = ((col[None, :, :] - qs[:, None, :]) ** 2).sum(-1)
+    d2 = np.where(mask[None, :], d2, np.inf)
+    for i in range(6):
+        want = set(np.argsort(d2[i], kind="stable")[:7].tolist())
+        assert set(rows[i][rows[i] >= 0].tolist()) == want
+    assert stats.knn_rounds >= 1 and stats.rows_scanned > 0
+
+
+def test_engine_rebuilt_after_prepare():
+    rng = np.random.default_rng(5)
+    vec = rng.normal(size=(400, 8)).astype(np.float32)
+    p = MQRLD(MMOTable("t").add_vector("v", vec), seed=1)
+    p.prepare(min_leaf=8, max_leaf=64)
+    e1 = p.engine()
+    q = Q.VK.of("v", vec[0], 5)
+    (r1,), _ = p.execute_batch([q])
+    p.prepare(min_leaf=8, max_leaf=128)
+    assert p.engine() is not e1  # stale device state was invalidated
+    (r2,), _ = p.execute_batch([q])
+    assert _rowset(r2) == _rowset(p.oracle(q))
+
+
+class _StubEmbedder:
+    """Duck-typed embedder: maps a token row to a table vector, so the
+    serving path is testable without a model forward pass."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def embed(self, tokens):
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["img"][rows] + 0.01
+
+
+def test_retrieval_server_serves_batches(platform):
+    p = platform
+    server = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4)
+    reqs = [RetrievalRequest(tokens=np.asarray([i, 1, 2], np.int32),
+                             attr="img", k=5,
+                             predicate=Q.NR("price", 10, 90))
+            for i in (3, 50, 999, 1500, 2222)]
+    out = server.serve(reqs)
+    assert len(out) == 5
+    stub = _StubEmbedder(p.table)
+    for req, res in zip(reqs, out):
+        assert 0 < len(res.rows) <= 5
+        prices = p.table.numeric["price"][res.rows]
+        assert ((prices >= 10) & (prices <= 90)).all()
+        assert _rowset(res.rows) == _rowset(p.oracle(res.query))
+        # filtered results are re-ranked: rows come back distance-ordered
+        emb = stub.embed(req.tokens[None, :])[0]
+        d2 = ((p.table.vector["img"][res.rows] - emb) ** 2).sum(1)
+        assert (np.diff(d2) >= -1e-6).all()

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.fused_topk import topk_l2_pallas
+from repro.kernels.fused_topk import topk_l2_masked_pallas, topk_l2_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lpgf_force import lpgf_force_pallas
 from repro.kernels.pairwise_l2 import pairwise_sq_l2_pallas
@@ -40,6 +40,29 @@ def test_topk_sweep(m, n, d, k):
     for i in range(m):
         assert set(np.asarray(gi)[i].tolist()) == \
             set(np.asarray(wi)[i].tolist())
+
+
+@pytest.mark.parametrize("g,c,d,k", [(5, 37, 12, 4), (8, 300, 32, 10),
+                                     (3, 7, 5, 10), (1, 1, 1, 3),
+                                     (16, 129, 8, 16)])
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.02])
+def test_topk_masked_sweep(g, c, d, k, density):
+    """Row-masked per-query-candidate variant (hybrid-engine leaf scan)."""
+    q = _arr((g, d), np.float32)
+    p = _arr((g, c, d), np.float32)
+    v = jnp.asarray(RNG.random((g, c)) < density)
+    gd, gi = topk_l2_masked_pallas(q, p, v, k, bg=4, bc=64, interpret=True)
+    wd, wi = ref.topk_l2_masked(q, p, v, k)
+    gd, gi, wd, wi = map(np.asarray, (gd, gi, wd, wi))
+    # identical validity pattern, same distances, same index sets
+    assert (np.isfinite(gd) == np.isfinite(wd)).all()
+    fin = np.isfinite(wd)
+    np.testing.assert_allclose(gd[fin], wd[fin], rtol=1e-4, atol=1e-4)
+    assert ((gi >= 0) == fin).all() and ((wi >= 0) == fin).all()
+    for i in range(g):
+        assert set(gi[i][fin[i]].tolist()) == set(wi[i][fin[i]].tolist())
+        # masked-out candidates never appear
+        assert all(bool(v[i, j]) for j in gi[i][fin[i]])
 
 
 @pytest.mark.parametrize("n,d", [(90, 11), (200, 5), (64, 33), (33, 2)])
