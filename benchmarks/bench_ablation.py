@@ -12,7 +12,8 @@ from repro.core.platform import MQRLD
 
 def run(csv: Csv):
     rng = np.random.default_rng(0)
-    n = 5000
+    from benchmarks.common import smoke_n
+    n = smoke_n(5000, 1000)
     x, _ = gaussmix(n=n, d=8, k=8, spread=5.0)
     price = rng.uniform(0, 100, n).astype(np.float32)
     table = MMOTable("abl").add_vector("v", x).add_numeric("price", price)

@@ -2,7 +2,7 @@
 synthetic distributions, with and without feature representation."""
 import numpy as np
 
-from benchmarks.common import Csv, DATASETS
+from benchmarks.common import Csv, DATASETS, smoke_n
 from repro.core.index import HostExecutor, build_index
 from repro.core.lpgf import lpgf
 from repro.core.transform import init_transform
@@ -11,7 +11,7 @@ from repro.core.transform import init_transform
 def run(csv: Csv):
     rng = np.random.default_rng(0)
     for dname, maker in DATASETS.items():
-        x, _ = maker(n=4000, d=8)
+        x, _ = maker(n=smoke_n(4000, 800), d=8)
         for rep in ("raw", "T+LPGF"):
             feats = x if rep == "raw" else np.asarray(
                 lpgf(init_transform(x).apply(x), iters=1), np.float32)

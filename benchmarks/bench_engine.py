@@ -1,13 +1,27 @@
 """Engine — batched hybrid QPS: the device-resident engine
 (``MQRLD.execute_batch``, leaf scans through the Pallas fused_topk
 row-mask kernel — interpret mode on CPU) versus the per-query scalar
-loop over ``MQRLD.execute`` on the same 64-query rich hybrid batch.
+loop over ``MQRLD.execute`` on the same 64-query rich hybrid batch,
+with the KNN beam loop run both ways:
 
-Not a paper figure: this measures the serving-path refactor (ISSUE 1);
-the acceptance bar is >= 5x QPS at n >= 20k rows, exact results.
+  * host loop  (``device_loop=False``) — beam doubling driven from
+    Python, one device->host merge per round (the exactness oracle);
+  * device loop (``device_loop=True``) — the whole beam loop as one
+    ``lax.while_loop`` call, V.R routed through the tile planner.
+
+Not a paper figure: this measures the serving-path refactors (ISSUE 1-2);
+the acceptance bars are >= 5x QPS batched-vs-scalar and >= 1.5x QPS
+device-vs-host loop at n >= 20k rows, exact results, with per-mode beam
+round counts reported.
+
+``--smoke`` (also via ``benchmarks.run --smoke``): toy n / batch,
+repeat=1 — keeps this module executed in CI.
 """
+import sys
+
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Csv, timeit, us
 from repro.core import query as Q
 from repro.core.lake import MMOTable
@@ -52,36 +66,78 @@ def _hybrid_batch(p, qn=BATCH, seed=1):
 
 
 def run(csv: Csv):
-    p = _platform()
-    queries = _hybrid_batch(p)
+    n = common.smoke_n(N_ROWS, 2_000)
+    qn = common.smoke_n(BATCH, 16)
+    p = _platform(n=n)
+    queries = _hybrid_batch(p, qn=qn)
 
     def scalar_all():
         return [p.execute(q, record=False)[0] for q in queries]
 
-    def batched_all():
-        return p.execute_batch(queries)[0]
+    def host_all():
+        return p.execute_batch(queries, device_loop=False)[0]
 
-    batched_all()  # warm the compiled rounds (one-time cost, excluded)
+    def device_all():
+        return p.execute_batch(queries, device_loop=True)[0]
+
+    # warm the compiled rounds / the while_loop (one-time cost, excluded)
+    # and keep one stats snapshot per mode for the round-count report
+    _, host_stats = p.execute_batch(queries, device_loop=False)
+    _, dev_stats = p.execute_batch(queries, device_loop=True)
     t_scalar, r_scalar = timeit(scalar_all, repeat=2)
-    t_batch, r_batch = timeit(batched_all, repeat=3)
+    t_host, r_host = timeit(host_all, repeat=5)
+    t_dev, r_dev = timeit(device_all, repeat=5)
 
-    exact = all(set(a.tolist()) == set(np.asarray(b).tolist())
-                for a, b in zip(r_batch, r_scalar))
-    oracle_ok = all(set(a.tolist())
+    # the beam loops head-to-head on the batch's V.K jobs: the stages
+    # the device_loop flag does NOT touch (grouped predicate masks, the
+    # host tree walk) are identical work in both modes and would only
+    # dilute/noise the comparison, so the loops are also timed alone
+    from repro.core.engine import EngineStats
+    eng = p.engine()
+    pred = eng._predicate_masks(queries, EngineStats())
+    jobs, ctr = [], [0]
+    for q in queries:
+        eng._walk(q, None, pred, jobs, None, ctr)
+    t_loop_host, _ = timeit(
+        lambda: eng._run_jobs(jobs, EngineStats(), False), repeat=5)
+    t_loop_dev, _ = timeit(
+        lambda: eng._run_jobs(jobs, EngineStats(), True), repeat=5)
+
+    def same(a_rows, b_rows):
+        return all(set(np.asarray(a).tolist()) == set(np.asarray(b).tolist())
+                   for a, b in zip(a_rows, b_rows))
+
+    exact = same(r_host, r_scalar) and same(r_dev, r_scalar)
+    oracle_ok = all(set(np.asarray(a).tolist())
                     == set(np.asarray(p.oracle(q)).tolist())
-                    for a, q in zip(r_batch, queries))
-    speedup = t_scalar / max(t_batch, 1e-12)
+                    for a, q in zip(r_dev, queries))
     qps_scalar = len(queries) / t_scalar
-    qps_batch = len(queries) / t_batch
+    qps_host = len(queries) / t_host
+    qps_dev = len(queries) / t_dev
     csv.add("engine/scalar_per_query", us(t_scalar / len(queries)),
             f"qps={qps_scalar:.0f}")
-    csv.add("engine/batched_per_query", us(t_batch / len(queries)),
-            f"qps={qps_batch:.0f}")
-    csv.add("engine/speedup", speedup,
-            f"exact={exact} oracle={oracle_ok} n={N_ROWS} batch={BATCH}")
+    csv.add("engine/host_loop_per_query", us(t_host / len(queries)),
+            f"qps={qps_host:.0f} rounds={host_stats.knn_rounds}")
+    csv.add("engine/device_loop_per_query", us(t_dev / len(queries)),
+            f"qps={qps_dev:.0f} rounds={dev_stats.knn_rounds} "
+            f"vr_tiles={dev_stats.vr_tiles_scanned}"
+            f"/pruned={dev_stats.vr_tiles_pruned}"
+            f"/dense_fallbacks={dev_stats.vr_dense_fallbacks}")
+    csv.add("engine/speedup_batched", t_scalar / max(t_dev, 1e-12),
+            f"exact={exact} oracle={oracle_ok} n={n} batch={len(queries)}")
+    csv.add("engine/speedup_e2e_device_vs_host",
+            t_host / max(t_dev, 1e-12),
+            f"host_rounds={host_stats.knn_rounds} "
+            f"device_rounds={dev_stats.knn_rounds}")
+    csv.add("engine/speedup_beam_loop_device_vs_host",
+            t_loop_host / max(t_loop_dev, 1e-12),
+            f"loop_host_us={us(t_loop_host):.0f} "
+            f"loop_device_us={us(t_loop_dev):.0f} jobs={len(jobs)}")
 
 
 if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        common.SMOKE = True
     c = Csv()
     run(c)
     c.emit()

@@ -3,7 +3,7 @@
 import numpy as np
 
 from benchmarks.baselines import IVFIndex, LSHIndex
-from benchmarks.common import Csv, gaussmix, recall, timeit, us
+from benchmarks.common import Csv, gaussmix, recall, smoke_n, timeit, us
 from repro.core import query as Q
 from repro.core.index import HostExecutor, build_index
 from repro.core.lake import MMOTable
@@ -12,7 +12,7 @@ from repro.core.platform import MQRLD
 
 def run(csv: Csv):
     # Fig 25: 64-dim KNN
-    x, _ = gaussmix(n=6000, d=64, k=16, spread=4.0)
+    x, _ = gaussmix(n=smoke_n(6000, 800), d=64, k=16, spread=4.0)
     tree, perm, _ = build_index(x, min_leaf=16, max_leaf=512,
                                 dpc_max_clusters=10)
     ex = HostExecutor(tree, x[perm])
@@ -35,7 +35,7 @@ def run(csv: Csv):
 
     # Fig 26: high-dim rich hybrid (vector + vector + numeric)
     rng2 = np.random.default_rng(1)
-    n = 4000
+    n = smoke_n(4000, 800)
     img, _ = gaussmix(n=n, d=48, k=12, spread=4.0, seed=3)
     txt, _ = gaussmix(n=n, d=32, k=12, spread=4.0, seed=4)
     dims = rng2.uniform(100, 4000, n).astype(np.float32)

@@ -4,13 +4,14 @@ intersected afterwards — how the paper's competitors must execute them)."""
 import numpy as np
 
 from benchmarks.baselines import BruteForce
-from benchmarks.common import Csv, gaussmix, timeit, us
+from benchmarks.common import Csv, gaussmix, smoke_n, timeit, us
 from repro.core import query as Q
 from repro.core.lake import MMOTable
 from repro.core.platform import MQRLD
 
 
-def _platform(n=5000, d=8, seed=0):
+def _platform(n=None, d=8, seed=0):
+    n = n or smoke_n(5000, 1000)
     rng = np.random.default_rng(seed)
     x, _ = gaussmix(n=n, d=d, k=8, spread=5.0, seed=seed)
     x2, _ = gaussmix(n=n, d=6, k=6, spread=4.0, seed=seed + 1)

@@ -2,14 +2,14 @@
 LPGF vs T+LPGF layouts (the paper's Evaluation 2)."""
 import numpy as np
 
-from benchmarks.common import Csv, gaussmix, timeit, us
+from benchmarks.common import Csv, gaussmix, smoke_n, timeit, us
 from repro.core.index import HostExecutor, build_index
 from repro.core.lpgf import lpgf
 from repro.core.transform import init_transform
 
 
 def run(csv: Csv):
-    x, _ = gaussmix(n=6000, d=8, k=8, spread=5.0)
+    x, _ = gaussmix(n=smoke_n(6000, 1000), d=8, k=8, spread=5.0)
     t = init_transform(x)
     datasets = {
         "Original": x,

@@ -18,7 +18,8 @@ def _mqrld(x):
 
 
 def run(csv: Csv):
-    x, _ = gaussmix(n=6000, d=8, k=8, spread=5.0)
+    from benchmarks.common import smoke_n
+    x, _ = gaussmix(n=smoke_n(6000, 1000), d=8, k=8, spread=5.0)
     ex, feats, perm = _mqrld(x)
     brute = BruteForce(feats[perm])
     ivf = IVFIndex(feats[perm], nlist=32, nprobe=6)

@@ -1,14 +1,15 @@
 """Fig 22/23 — scalability: query time vs dataset size and dimensions."""
 import numpy as np
 
-from benchmarks.common import Csv, gaussmix, timeit, us
+from benchmarks.common import Csv, gaussmix, smoke_n, timeit, us
 from repro.core.index import HostExecutor, build_index
 
 
 def run(csv: Csv):
     rng = np.random.default_rng(0)
     # ------- Fig 22: size scaling
-    for n in (2000, 8000, 32000):
+    import benchmarks.common as common
+    for n in ((1000,) if common.SMOKE else (2000, 8000, 32000)):
         x, _ = gaussmix(n=n, d=8, k=8)
         tree, perm, _ = build_index(x, min_leaf=32, max_leaf=1024,
                                     dpc_max_clusters=8)
@@ -20,7 +21,7 @@ def run(csv: Csv):
                 f"leaves={len(tree.leaf_ids)};depth={tree.max_depth()}")
     # ------- Fig 23: dimension scaling
     for d in (3, 8, 16):
-        x, _ = gaussmix(n=8000, d=d, k=8)
+        x, _ = gaussmix(n=smoke_n(8000, 1000), d=d, k=8)
         tree, perm, _ = build_index(x, min_leaf=32, max_leaf=1024,
                                     dpc_max_clusters=8)
         ex = HostExecutor(tree, x[perm])

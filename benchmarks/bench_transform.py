@@ -2,7 +2,8 @@
 query-time/recall uplift (Initialized_T vs Optimized_T via MORBO)."""
 import numpy as np
 
-from benchmarks.common import Csv, gaussmix, timeit, us
+from benchmarks import common
+from benchmarks.common import Csv, gaussmix, smoke_n, timeit, us
 from repro.core import query as Q
 from repro.core.lake import MMOTable
 from repro.core.morbo import morbo_minimize
@@ -12,7 +13,7 @@ from repro.core.transform import init_transform
 
 def run(csv: Csv):
     # ---- Fig 10: T construction cost vs dataset size
-    for n in (2000, 8000, 32000):
+    for n in ((1000,) if common.SMOKE else (2000, 8000, 32000)):
         x, _ = gaussmix(n=n, d=16, k=8)
         tc, _ = timeit(init_transform, x, repeat=1)
         tt, t = timeit(lambda: init_transform(x).apply(x), repeat=1)
@@ -21,7 +22,7 @@ def run(csv: Csv):
 
     # ---- Fig 11: query uplift raw vs Init_T vs Opt_T (small MORBO budget)
     rng = np.random.default_rng(0)
-    n = 3000
+    n = smoke_n(3000, 800)
     x, _ = gaussmix(n=n, d=8, k=8, spread=4.0, seed=2)
     price = rng.uniform(0, 100, n).astype(np.float32)
     table = MMOTable("tfm").add_vector("v", x).add_numeric("price", price)

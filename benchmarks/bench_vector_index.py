@@ -9,7 +9,8 @@ from repro.core.transform import init_transform
 
 
 def run(csv: Csv):
-    x, _ = gaussmix(n=6000, d=16, k=8, spread=5.0)
+    from benchmarks.common import smoke_n
+    x, _ = gaussmix(n=smoke_n(6000, 1000), d=16, k=8, spread=5.0)
     t = init_transform(x)
     datasets = {"Original": x,
                 "T+LPGF": np.asarray(lpgf(t.apply(x), iters=1), np.float32)}

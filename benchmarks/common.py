@@ -14,6 +14,18 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 
+# ------------------------------------------------------------------ smoke
+# --smoke (benchmarks/run.py, scripts/check.sh) runs every bench module at
+# toy scale with repeat=1 so bench code is executed in CI instead of
+# bit-rotting; numbers from a smoke run are NOT comparable to full runs.
+SMOKE = False
+
+
+def smoke_n(n: int, tiny: int) -> int:
+    """Full-run size ``n``, or ``tiny`` under --smoke."""
+    return tiny if SMOKE else n
+
+
 # ------------------------------------------------------------------ datasets
 def gaussmix(n: int = 8000, d: int = 8, k: int = 8, seed: int = 0,
              spread: float = 6.0):
@@ -42,7 +54,7 @@ DATASETS = {"GaussMix": gaussmix, "Uniform": uniform, "Skewed": skewed}
 def timeit(fn: Callable, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
     out = None
     best = float("inf")
-    for _ in range(repeat):
+    for _ in range(1 if SMOKE else repeat):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
         best = min(best, time.perf_counter() - t0)

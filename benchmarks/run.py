@@ -2,13 +2,21 @@
 
 Prints ``name,us_per_call,derived`` CSV (paper-protocol benchmarks at CPU
 scale; see benchmarks/common.py for the scale adaptation note).
+
+``--smoke``: run every module at toy scale with repeat=1 (CI keeps the
+bench code executed; the numbers are not comparable to full runs).
 """
 import sys
 import time
 
 
 def main() -> None:
+    from benchmarks import common
     from benchmarks.common import Csv
+    args = [a for a in sys.argv[1:]]
+    if "--smoke" in args:
+        args.remove("--smoke")
+        common.SMOKE = True
     from benchmarks import (bench_ablation, bench_cbr, bench_cdf,
                             bench_clustering, bench_engine, bench_highdim,
                             bench_hybrid, bench_learned_index,
@@ -30,7 +38,7 @@ def main() -> None:
         ("fig25_26", bench_highdim),
         ("fig27", bench_ablation),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     csv = Csv()
     print("name,us_per_call,derived")
     for name, mod in modules:

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # One entry point for builders and CI: install dev deps (best effort — the
 # test suite degrades gracefully when hypothesis is unavailable, see
-# tests/conftest.py) and run the tier-1 suite from ROADMAP.md.
+# tests/conftest.py), run the tier-1 suite from ROADMAP.md, then execute
+# every benchmark module at toy scale (--smoke: tiny n, repeat=1) so the
+# bench code cannot bit-rot unexecuted.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,3 +11,6 @@ python -m pip install -q -r requirements-dev.txt \
   || echo "WARN: dev-requirement install failed (offline?); continuing" >&2
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+echo "== benchmarks (--smoke) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke

@@ -20,10 +20,40 @@ regardless of batch size:
      grouped per attribute and leaf-scanned through the Pallas
      ``fused_topk`` row-mask kernel (``ops.topk_l2_masked``): each beam
      round gathers every query's W best-lower-bound buckets into a
-     (G, W*cap, d) candidate tile and keeps a fused running top-k. Beam
-     doubling against the lower bound (host-driven, same argument as the
-     scalar executor) preserves exactness; And(VK, predicate) stays fused
-     by folding the predicate mask into the kernel's validity mask.
+     (G, W*cap, d) candidate tile and keeps a fused running top-k.
+     And(VK, predicate) stays fused by folding the predicate mask into
+     the kernel's validity mask.
+
+Execution-path flag (``device_loop``): the engine keeps two complete
+query paths that return identical rows.
+
+  * ``device_loop=False`` — the exactness oracle (the original serving
+    path): the KNN beam loop is ``batched_knn``, beam *doubling* driven
+    from host Python with one compiled round call plus one device->host
+    merge per round (2-4 transfers per batch), and V.R predicates mask
+    the full column. Keep this path as the reference when changing the
+    device path.
+  * ``device_loop=True`` (the default) — the device-resident path:
+    ``batched_knn_device`` runs one fused first round over the whole
+    batch, then finishes the stragglers inside a single
+    ``jax.lax.while_loop`` (``_knn_device_loop``) that carries the
+    per-query top-k heap and active mask as loop state, calls the same
+    ``ops.topk_l2_masked`` kernel per round, and retires a query once
+    its kth distance <= the next unscanned lower bound — the scalar
+    executor's stopping rule, with a fixed round budget of
+    ceil(T / W) as the worst-case backstop, so the loop is exact even
+    when the rule never fires. V.R predicates route through the same
+    tile beam (below) instead of the full column.
+
+V.R routing (device path): the tile-level planner ``_vr_leaf_plan``
+keeps only tiles satisfying the triangle bound |q - C| - R <= r (C, R
+the tile ball; r the query radius), distances are evaluated on the
+gathered surviving tiles alone, and rows within fp noise of the
+boundary are re-checked on the host with the exact formula. When the
+bound is unselective (surviving tiles cover more than
+``_VR_DENSE_CUTOFF`` of the table) the planner falls back to the dense
+full-column mask (also the oracle path's behavior), which is cheaper
+than a near-total gather.
 
 Execution contract (scalar vs batched): ``execute_batch`` returns exactly
 the rows of scalar ``execute`` for every query archetype whose V.K
@@ -107,6 +137,27 @@ def bucket_tiles(starts: np.ndarray, ends: np.ndarray, tile: int = 0
     return rows, tile, np.asarray(leaf_of_tile, np.int32)
 
 
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1): pads variable-size subsets so
+    the compiled-shape universe stays logarithmic."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+def _tile_geometry(col: np.ndarray, rows_np: np.ndarray, bucket_rows,
+                   cap: int) -> "LeafGeometry":
+    """Per-tile ball (centroid, radius) over the tile's own rows."""
+    valid = rows_np >= 0
+    cnt = np.maximum(valid.sum(1), 1)
+    pts = np.asarray(col, np.float32)[np.maximum(rows_np, 0)]
+    pts = np.where(valid[:, :, None], pts, 0.0)
+    cen = pts.sum(1) / cnt[:, None]
+    d2 = ((pts - cen[:, None, :]) ** 2).sum(2)
+    rad = np.sqrt(np.max(np.where(valid, d2, 0.0), axis=1))
+    return LeafGeometry(centroid=jnp.asarray(cen, jnp.float32),
+                        radius=jnp.asarray(rad, jnp.float32),
+                        bucket_rows=bucket_rows, cap=cap)
+
+
 def tile_data(col: np.ndarray, bucket_rows: np.ndarray) -> np.ndarray:
     """(n, d) column -> (T, cap, d) tile-major copy (padding rows are row 0;
     a tile's validity mask excludes them). Tiles are contiguous row runs, so
@@ -125,6 +176,9 @@ class EngineStats:
     knn_buckets: int = 0         # bucket tiles scanned across beam rounds
     rows_scanned: int = 0        # valid rows fed to the top-k kernel
     knn_rounds: int = 0
+    vr_tiles_scanned: int = 0    # tiles gathered by the V.R tile planner
+    vr_tiles_pruned: int = 0     # tiles dropped by the V.R triangle bound
+    vr_dense_fallbacks: int = 0  # V.R groups that took the dense column path
     time_s: float = 0.0
 
 
@@ -220,7 +274,7 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
     w0, w = 0, max(1, min(beam, l))
     while len(active):
         na = len(active)
-        gp = 1 << max(0, na - 1).bit_length()   # pad count to a power of 2
+        gp = _next_pow2(na)
         padded = np.zeros(gp, np.int32)
         padded[:na] = active
         d2, rows, nvalid = _knn_round(
@@ -254,6 +308,212 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Device-resident beam loop (lax.while_loop variant of batched_knn)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("w1", "w", "budget", "k", "interpret"))
+def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
+                     lb_sorted, masks_tiles, data_tiles, bucket_rows, *,
+                     w1: int, w: int, budget: int, k: int,
+                     interpret: bool):
+    """The straggler beam loop as one compiled call (see module
+    docstring): compaction gathers, the ``lax.while_loop``, and the
+    stats reduction all land in a single dispatch.
+
+    ``idx`` selects the straggler subset (padded to a power of two so
+    compiled shapes stay bounded; ``active0`` marks the real rows) out
+    of the full-batch arrays; the first fused round's (d2, rows) seed
+    the per-query top-k carry, and each straggler keeps its own
+    remaining visit order (columns past ``w1``), padded to the loop's
+    static budget*w width with 0-columns whose +inf lower bound kills
+    them. Returns (best_d2, best_rows, [rounds, buckets_scanned,
+    rows_scanned])."""
+    l = order.shape[1]
+    qs = jnp.take(qs_full, idx, axis=0)
+    bd0 = jnp.take(d2_full, idx, axis=0)
+    br0 = jnp.take(rows_full, idx, axis=0)
+    order_pad = jnp.pad(jnp.take(order, idx, axis=0)[:, w1:],
+                        ((0, 0), (0, budget * w - (l - w1))))
+    lb_pad = jnp.pad(jnp.take(lb_sorted, idx, axis=0)[:, w1:],
+                     ((0, 0), (0, budget * w + 1 - (l - w1))),
+                     constant_values=jnp.inf)
+    if masks_tiles is not None:
+        masks_tiles = jnp.take(masks_tiles, idx, axis=0)
+    g = qs.shape[0]
+
+    def cond(st):
+        r, active = st[0], st[1]
+        return (r < budget) & jnp.any(active)
+
+    def body(st):
+        r, active, bd, br, nbuck, nrows = st
+        start = r * w
+        sel = jax.lax.dynamic_slice_in_dim(order_pad, start, w, axis=1)
+        # columns whose lower bound is +inf are padding, or real tiles
+        # with no mask-surviving rows — neither can contribute a row
+        colv = ~jnp.isinf(jax.lax.dynamic_slice_in_dim(
+            lb_pad, start, w, axis=1))                   # (G, w)
+        cand = bucket_rows[sel].reshape(g, -1)           # (G, w*cap)
+        valid = ((cand >= 0) & jnp.repeat(colv, bucket_rows.shape[1],
+                                          axis=1) & active[:, None])
+        pts = jnp.take(data_tiles, sel, axis=0)          # (G, w, cap, d)
+        pts = pts.reshape(g, -1, pts.shape[-1])
+        if masks_tiles is not None:
+            ma = jnp.take_along_axis(masks_tiles, sel[:, :, None], axis=1)
+            valid = valid & ma.reshape(g, -1)
+        d2, idx = ops.topk_l2_masked(qs, pts, valid, k,
+                                     interpret=interpret)
+        rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
+        rows = jnp.where(idx >= 0, rows, -1)
+        # merge with the carry: carry first, lax.top_k is stable, so
+        # earlier (lower-lb) buckets keep the scalar executor's
+        # visit-order tie-break; inactive queries contribute only +inf
+        # candidates (valid was zeroed), so their carry is a fixed point
+        alld = jnp.concatenate([bd, d2], axis=1)
+        allr = jnp.concatenate([br, rows], axis=1)
+        negd, pick = jax.lax.top_k(-alld, k)
+        md = -negd
+        mr = jnp.take_along_axis(allr, pick, axis=1)
+        kth = jnp.sqrt(md[:, -1])
+        nxt = jax.lax.dynamic_slice_in_dim(lb_pad, start + w, 1,
+                                           axis=1)[:, 0]
+        active2 = active & ~(kth <= nxt)
+        nbuck = nbuck + jnp.sum(jnp.where(active[:, None], colv, False))
+        nrows = nrows + jnp.sum(valid)
+        return r + 1, active2, md, mr, nbuck, nrows
+
+    st0 = (jnp.int32(0), active0, bd0, br0,
+           jnp.int32(0), jnp.int32(0))
+    r, _, bd, br, nbuck, nrows = jax.lax.while_loop(cond, body, st0)
+    return bd, br, jnp.stack([r, nbuck, nrows])
+
+
+@jax.jit
+def _knn_prologue_fast(qs, centroid, radius, masks_tiles=None):
+    """``_knn_prologue`` with a packed single-key sort (device path
+    only; the host oracle keeps the reference prologue).
+
+    The fp32 lower bound's bit pattern is order-preserving for
+    non-negative floats (+inf included), so bound and tile index can
+    share one int32 key: the low 12 mantissa bits are TRUNCATED and
+    replaced by the tile index (< 4096 tiles; ``batched_knn_device``
+    falls back to the reference prologue above that). XLA then sorts
+    one integer tensor instead of a variadic (float, index) pair —
+    several times faster on CPU. Truncation only LOWERS the reported
+    bound, so the stopping rule stays conservative and the loop exact;
+    near-equal bounds order by tile index, which is also the reference
+    tie-break."""
+    d2c = ops.pairwise_sq_l2(qs, centroid)
+    dc = jnp.sqrt(jnp.maximum(d2c, 0.0))
+    lb = jnp.maximum(dc - radius[None, :], 0.0)          # (G, L)
+    if masks_tiles is not None:
+        lb = jnp.where(jnp.any(masks_tiles, axis=2), lb, jnp.inf)
+    bits = jax.lax.bitcast_convert_type(lb, jnp.int32)
+    l = lb.shape[1]
+    key = jnp.sort((bits & ~jnp.int32(4095))
+                   | jnp.arange(l, dtype=jnp.int32)[None, :], axis=1)
+    order = key & 4095
+    lb_sorted = jax.lax.bitcast_convert_type(key & ~jnp.int32(4095),
+                                             jnp.float32)
+    return order, lb_sorted
+
+
+@functools.partial(jax.jit, static_argnames=("w1", "k", "interpret"))
+def _knn_start(qs, masks_tiles, centroid, radius, data_tiles,
+               bucket_rows, *, w1: int, k: int, interpret: bool):
+    """Fused prologue + first beam round over the full batch + the
+    stopping rule: a query stays active iff its kth distance exceeds
+    the next unscanned lower bound (the scalar executor's rule). One
+    dispatch; only the (G,) active mask and the stats scalar leave the
+    device before the straggler loop."""
+    g = qs.shape[0]
+    prologue = _knn_prologue_fast if centroid.shape[0] <= 4096 \
+        else _knn_prologue
+    order, lb_sorted = prologue(qs, centroid, radius, masks_tiles)
+    l = lb_sorted.shape[1]
+    d2, rows, nvalid = _knn_round(
+        jnp.arange(g, dtype=jnp.int32), qs, order, masks_tiles,
+        data_tiles, bucket_rows, w0=0, w1=w1, k=k, interpret=interpret)
+    kth = jnp.sqrt(d2[:, -1])
+    nxt = lb_sorted[:, w1] if w1 < l else \
+        jnp.full(g, jnp.inf, jnp.float32)
+    return order, lb_sorted, d2, rows, kth > nxt, jnp.sum(nvalid)
+
+
+def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
+                       masks: Optional[jax.Array] = None, beam: int = 8,
+                       interpret: bool = True,
+                       w1: Optional[int] = None, ws: Optional[int] = None,
+                       stats: Optional[EngineStats] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact batched (optionally row-masked) KNN with the beam loop on
+    device: same contract (and identical rows) as ``batched_knn``, which
+    stays as the host exactness oracle.
+
+    Structure: ONE fused first round scans every query's top beam/2
+    lower-bound tiles — on clustered data this finishes the large
+    majority of the batch. A single (G,) active-mask transfer then
+    compacts the stragglers (padded to a power of two, so compiled
+    shapes stay bounded), and their remaining rounds run entirely
+    inside ``_knn_device_loop`` (a ``lax.while_loop`` carrying the
+    per-query top-k heap and active mask as loop state). Round widths
+    (overridable via ``w1``/``ws``, in tiles of the layout passed in)
+    default to beam/2 for the first round and beam for straggler
+    rounds — and the engine hands this path its FINER device tile
+    layout, so a device round scans roughly half the rows of a host
+    round: a device round costs no host round-trip, so the host loop's
+    over-scanning (wide tiles, wide doubling beams, both needed to
+    amortize its per-round sync) buys nothing here. The fixed round
+    budget ceil(remaining / W) makes the loop exact even when the
+    stopping rule never fires (k > matching rows), while the per-round
+    bound check retires queries exactly like the scalar executor.
+    Versus the host loop's 2-4 full transfers + host merges per batch,
+    this path transfers one bool per query mid-batch and never computes
+    a straggler round at full batch width."""
+    t0 = time.time()
+    qs = jnp.asarray(qs, jnp.float32)
+    masks_tiles = None
+    if masks is not None:
+        masks_tiles = _tile_masks(jnp.asarray(masks), geom.bucket_rows)
+    g = int(qs.shape[0])
+    l = geom.n_leaves
+    w1 = max(1, min(w1 if w1 else max(1, beam // 2), l))
+    order, lb_sorted, d2, rows, active, nvalid = _knn_start(
+        qs, masks_tiles, geom.centroid, geom.radius, data_tiles,
+        geom.bucket_rows, w1=w1, k=k, interpret=interpret)
+    if stats is not None:
+        stats.knn_rounds += 1
+        stats.knn_buckets += g * w1
+        stats.rows_scanned += int(nvalid)
+    act = np.nonzero(np.asarray(active))[0]
+    if len(act) and w1 < l:
+        na = len(act)
+        gp = _next_pow2(na)
+        padded = np.zeros(gp, np.int64)
+        padded[:na] = act
+        idx = jnp.asarray(padded, jnp.int32)
+        active0 = jnp.asarray(np.arange(gp) < na)
+        w = max(1, ws if ws else beam)
+        budget = -(-(l - w1) // w)
+        bd, br, loop_stats = _knn_device_loop(
+            idx, active0, qs, d2, rows, order, lb_sorted, masks_tiles,
+            data_tiles, geom.bucket_rows, w1=w1, w=w, budget=budget,
+            k=k, interpret=interpret)
+        d2 = np.asarray(d2, dtype=np.float32).copy()
+        rows = np.asarray(rows).copy()
+        d2[act] = np.asarray(bd)[:na]
+        rows[act] = np.asarray(br)[:na]
+        if stats is not None:
+            rounds, nbuck, nrows = np.asarray(loop_stats)
+            stats.knn_rounds += int(rounds)
+            stats.knn_buckets += int(nbuck)
+            stats.rows_scanned += int(nrows)
+    if stats is not None:
+        stats.time_s += time.time() - t0
+    return np.sqrt(np.asarray(d2)), np.asarray(rows).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
 # Grouped predicate masks (one compiled call per (type, attr) group)
 # ---------------------------------------------------------------------------
 @jax.jit
@@ -272,22 +532,72 @@ def _nr_group_masks(col, num_lo, num_hi, row_leaf, lo, hi):
     return m & leaf_ok[:, row_leaf], jnp.sum(leaf_ok)
 
 
+_VR_DENSE_CUTOFF = 0.5  # surviving-tile row fraction above which the
+#                         gather costs more than one dense column pass
+
+
 @jax.jit
-def _vr_group_masks(qs, r, centroid, radius, col, row_leaf):
+def _vr_leaf_plan(qs, r, centroid, radius):
+    """Tile-level V.R planner: (g, T) survival matrix from the triangle
+    bound |q - C| - R <= r. Conservative slack: distances come from the
+    quadratic-expansion kernel and can overestimate by fp epsilon —
+    pruning must never drop a tile whose boundary row is exactly at
+    distance r + R. The slack has a RELATIVE ``1e-4 * dc`` term on top
+    of the absolute one: the tile route evaluates (and fp-rechecks)
+    only rows of surviving tiles, so unlike the dense path a wrongly
+    pruned tile cannot be rescued later — the expansion's error grows
+    with coordinate magnitude (~eps * (|q|^2 + |C|^2) / dc) and the
+    relative term dominates it whenever the bound is anywhere near
+    tight."""
     d2c = ops.pairwise_sq_l2(qs, centroid)
     dc = jnp.sqrt(jnp.maximum(d2c, 0.0))
-    # conservative slack: dc comes from the quadratic-expansion kernel and
-    # can overestimate by fp epsilon — pruning must never drop a leaf whose
-    # boundary row is exactly at distance r + R
-    slack = 1e-4 * (1.0 + r[:, None] + radius[None, :])
-    leaf_ok = dc - radius[None, :] <= r[:, None] + slack
+    slack = 1e-4 * (1.0 + r[:, None] + radius[None, :]) + 1e-4 * dc
+    return dc - radius[None, :] <= r[:, None] + slack
+
+
+@jax.jit
+def _vr_union_eval(qs, r2, sel_u, member, data_tiles, tile_pp,
+                   bucket_rows):
+    """Exact radius test over the UNION of the group's surviving tiles.
+
+    sel_u: (U,) union tile ids (padded to a power of two; pad columns
+    carry no members); member: (g, U) per-query tile survival. The
+    union layout turns the evaluation into ONE (g, d) x (d, U*cap) GEMM
+    — compute-bound — instead of per-query gathers + batched matvecs,
+    which are memory-bound. Returns one packed int8 (g, U*cap) — bit 0:
+    within radius, bit 1: within fp noise of the boundary (host
+    re-checks those exactly) — a single transfer; the candidate ->
+    physical-row map is rebuilt host-side from ``sel_u``. ``tile_pp``
+    holds precomputed per-row squared norms, so the gathered points are
+    read once (the GEMM)."""
+    pts = jnp.take(data_tiles, sel_u, axis=0)        # (U, cap, d)
+    rows = jnp.take(bucket_rows, sel_u, axis=0)      # (U, cap)
+    u, cap, dim = pts.shape
+    pts = pts.reshape(u * cap, dim)
+    rows = rows.reshape(u * cap)
+    valid = (rows >= 0)[None, :] & jnp.repeat(member, cap, axis=1)
+    qq = jnp.sum(qs * qs, axis=1)
+    pp = jnp.take(tile_pp, sel_u, axis=0).reshape(u * cap)
+    cross = jax.lax.dot_general(
+        qs, pts, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (g, U*cap)
+    d2 = jnp.maximum(qq[:, None] + pp[None, :] - 2.0 * cross, 0.0)
+    within = valid & (d2 <= r2[:, None])
+    near = valid & (jnp.abs(d2 - r2[:, None]) <= 1e-3 * (r2[:, None] + 1.0))
+    return within.astype(jnp.int8) | (near.astype(jnp.int8) << 1)
+
+
+@jax.jit
+def _vr_dense_masks(qs, r, leaf_ok, col, row_leaf):
+    """Dense fallback (the pre-planner path): full-column distances,
+    masked by the tile survival matrix through the row->tile map."""
     d2 = ops.pairwise_sq_l2(qs, col)
     r2 = (r * r)[:, None]
     m = d2 <= r2
     # rows whose kernel distance sits within fp noise of the boundary get
     # re-checked on the host with the exact sum((x-q)^2) formula
     near = jnp.abs(d2 - r2) <= 1e-3 * (r2 + 1.0)
-    return m & leaf_ok[:, row_leaf], jnp.sum(leaf_ok), near
+    return m & leaf_ok[:, row_leaf], near
 
 
 # ---------------------------------------------------------------------------
@@ -315,12 +625,17 @@ class HybridEngine:
     """Batched executor over one prepared MQRLD table (see module doc)."""
 
     def __init__(self, tree, table, meta, *, interpret: bool = True,
-                 beam: int = 16, tile: int = 128):
+                 beam: int = 16, tile: int = 128,
+                 device_loop: bool = True,
+                 device_tile: Optional[int] = None):
+        self.device_loop = device_loop
+        self.device_tile = device_tile or max(32, tile // 2)
         leaves = tree.leaf_ids
         starts = np.asarray(tree.bucket_start[leaves])
         ends = np.asarray(tree.bucket_end[leaves])
         rows_np, cap, leaf_of_tile = bucket_tiles(starts, ends, tile)
         self.bucket_rows = jnp.asarray(rows_np)
+        self.bucket_rows_np = rows_np
         self.cap = cap
         self.tile = tile
         self.n = table.n_rows
@@ -339,26 +654,44 @@ class HybridEngine:
                     for a, c in table.vector.items()}
         self.vec_np = {a: np.asarray(c, np.float32)
                        for a, c in table.vector.items()}
-        self.vec_tiles = {a: jnp.asarray(tile_data(c, rows_np))
-                          for a, c in table.vector.items()}
+        self.vec_tiles, self.vec_tile_pp = {}, {}
+        for a, c in table.vector.items():
+            tiles = tile_data(c, rows_np)
+            self.vec_tiles[a] = jnp.asarray(tiles)
+            self.vec_tile_pp[a] = jnp.asarray((tiles ** 2).sum(-1))
         self.num = {a: jnp.asarray(c, jnp.float32)
                     for a, c in table.numeric.items()}
-        self.geom = {a: LeafGeometry(
-            centroid=jnp.asarray(meta.vec_centroid[a][leaf_of_tile],
-                                 jnp.float32),
-            radius=jnp.asarray(meta.vec_radius[a][leaf_of_tile],
-                               jnp.float32),
-            bucket_rows=self.bucket_rows, cap=cap) for a in table.vector}
-        self.num_lo = {a: jnp.asarray(meta.num_lo[a][leaf_of_tile],
-                                      jnp.float32)
-                       for a in table.numeric}
-        self.num_hi = {a: jnp.asarray(meta.num_hi[a][leaf_of_tile],
-                                      jnp.float32)
-                       for a in table.numeric}
+        # per-TILE balls/boxes, not the leaf's: chunks of one big leaf
+        # would otherwise share the leaf ball, giving duplicate loose
+        # lower bounds that keep the KNN stopping rule from firing and
+        # the V.R triangle bound from pruning. Computed once (numpy) at
+        # build; LeafMeta stays the scalar path's leaf-level truth.
+        valid = rows_np >= 0
+        self.geom = {a: _tile_geometry(c, rows_np, self.bucket_rows, cap)
+                     for a, c in table.vector.items()}
+        # finer KNN-only layout for the device beam loop: narrow device
+        # rounds want narrow tiles (tighter balls, finer stopping
+        # granularity); the host loop's wide synced rounds keep the
+        # coarse layout. Both are exact — tiling never affects results.
+        rows_dev, cap_dev, _ = bucket_tiles(starts, ends,
+                                            self.device_tile)
+        br_dev = jnp.asarray(rows_dev)
+        self.vec_tiles_dev = {a: jnp.asarray(tile_data(c, rows_dev))
+                              for a, c in table.vector.items()}
+        self.geom_dev = {a: _tile_geometry(c, rows_dev, br_dev, cap_dev)
+                         for a, c in table.vector.items()}
+        self.num_lo, self.num_hi = {}, {}
+        for a, c in table.numeric.items():
+            cv = np.asarray(c, np.float32)[np.maximum(rows_np, 0)]
+            self.num_lo[a] = jnp.asarray(
+                np.where(valid, cv, np.inf).min(axis=1), jnp.float32)
+            self.num_hi[a] = jnp.asarray(
+                np.where(valid, cv, -np.inf).max(axis=1), jnp.float32)
 
     # ------------------------------------------------------------ stage 1+2
     def _predicate_masks(self, queries: Sequence[Q.Query],
-                         stats: EngineStats) -> Dict[Q.Query, np.ndarray]:
+                         stats: EngineStats, tile_route: bool = True
+                         ) -> Dict[Q.Query, np.ndarray]:
         """Exact (n,) row masks for every distinct basic predicate in the
         batch, computed group-wise: one leaf-pruning + one compare/kernel
         call per (type, attr) group. Masks come back to the host as one
@@ -394,26 +727,76 @@ class HybridEngine:
                     jnp.asarray([b.hi for b in grp], jnp.float32))
                 m = np.asarray(m)
             else:  # VR
-                vecs = np.stack([b.vec() for b in grp])
-                r2 = np.asarray([b.radius for b in grp],
-                                np.float32) ** 2
-                m, touched, near = _vr_group_masks(
-                    jnp.asarray(vecs),
-                    jnp.asarray([b.radius for b in grp], jnp.float32),
-                    self.geom[attr].centroid, self.geom[attr].radius,
-                    self.vec[attr], self.row_leaf)
-                m = np.asarray(m)
-                gis, ris = np.nonzero(np.asarray(near))
-                if len(gis):
-                    m = np.array(m)  # writable copy for boundary patching
-                    col = self.vec_np[attr]
-                    exact = (((col[ris] - vecs[gis]) ** 2).sum(1)
-                             <= r2[gis])
-                    m[gis, ris] = exact
+                m, touched = self._vr_masks(attr, grp, stats, tile_route)
             stats.predicate_buckets += int(touched)
             for i, b in enumerate(grp):
                 masks[b] = m[i]
         return masks
+
+    def _vr_masks(self, attr: str, grp: List[Q.Query],
+                  stats: EngineStats, tile_route: bool
+                  ) -> Tuple[np.ndarray, int]:
+        """(g, n) exact radius masks for one V.R group.
+
+        tile_route=True (device path): the triangle bound keeps only
+        plausible tiles, distances are evaluated on the gathered
+        survivors, boundary rows re-checked exactly on the host; falls
+        back to the dense column pass when the bound leaves most of the
+        table standing. tile_route=False (oracle path): always the
+        dense full-column pass, masked by the leaf-survival matrix —
+        the original engine behavior."""
+        vecs = np.stack([b.vec() for b in grp])
+        r = np.asarray([b.radius for b in grp], np.float32)
+        r2 = r.astype(np.float32) ** 2
+        qs = jnp.asarray(vecs, jnp.float32)
+        leaf_ok = np.asarray(_vr_leaf_plan(
+            qs, jnp.asarray(r), self.geom[attr].centroid,
+            self.geom[attr].radius))
+        touched = int(leaf_ok.sum())
+        g = len(grp)
+        stats.vr_tiles_pruned += g * self.n_tiles - touched
+        union = np.nonzero(leaf_ok.any(axis=0))[0]
+        if not tile_route \
+                or len(union) * self.cap > _VR_DENSE_CUTOFF \
+                * max(1, self.n):
+            if tile_route:
+                stats.vr_dense_fallbacks += 1
+            m, near = _vr_dense_masks(qs, jnp.asarray(r),
+                                      jnp.asarray(leaf_ok),
+                                      self.vec[attr], self.row_leaf)
+            m, near = np.asarray(m), np.asarray(near)
+            gis, ris = np.nonzero(near)
+            if len(gis):
+                m = np.array(m)  # writable copy for boundary patching
+                col = self.vec_np[attr]
+                exact = (((col[ris] - vecs[gis]) ** 2).sum(1) <= r2[gis])
+                m[gis, ris] = exact
+            return m, touched
+        stats.vr_tiles_scanned += touched
+        # pad the union to a power of two so compiled shapes stay
+        # bounded across batches; pad columns have no members
+        u = len(union)
+        up = _next_pow2(u)
+        sel_u = np.zeros(up, np.int32)
+        sel_u[:u] = union
+        member = np.zeros((g, up), bool)
+        member[:, :u] = leaf_ok[:, union]
+        packed = np.asarray(_vr_union_eval(
+            qs, jnp.asarray(r2), jnp.asarray(sel_u), jnp.asarray(member),
+            self.vec_tiles[attr], self.vec_tile_pp[attr],
+            self.bucket_rows))
+        within, near = (packed & 1).astype(bool), (packed & 2).astype(bool)
+        rows = self.bucket_rows_np[sel_u].reshape(-1)     # host-side map
+        m = np.zeros((g, self.n), bool)
+        gis, cis = np.nonzero(within)
+        m[gis, rows[cis]] = True
+        gis, cis = np.nonzero(near)
+        if len(gis):
+            col = self.vec_np[attr]
+            rws = rows[cis]
+            exact = (((col[rws] - vecs[gis]) ** 2).sum(1) <= r2[gis])
+            m[gis, rws] = exact
+        return m, touched
 
     # --------------------------------------------------------------- stage 3
     def _walk(self, q, ambient, pred_masks, jobs, job_rows, ctr):
@@ -465,34 +848,61 @@ class HybridEngine:
             return None if any_unknown else out
         raise TypeError(q)
 
-    def _run_jobs(self, jobs, stats: EngineStats) -> List[np.ndarray]:
-        """Group V.K jobs per (attribute, masked?) and run each group as one
-        beam-doubled masked KNN through the fused kernel. Masked jobs are
-        kept apart: filtered candidates push the kth bound up, so masked
-        groups need deeper beams — mixing would drag unmasked queries
-        through extra rounds."""
+    def _run_jobs(self, jobs, stats: EngineStats,
+                  device_loop: bool) -> List[np.ndarray]:
+        """Run every V.K job as one beam-loop masked KNN per group
+        through the fused kernel.
+
+        Device path: ONE group per attribute — masked and unmasked jobs
+        share a single compiled program (unmasked jobs get an all-true
+        mask); straggler compaction retires finished queries, so
+        mixing no longer drags unmasked queries through extra full-width
+        rounds, and the per-call fixed cost is paid once. Oracle path:
+        masked jobs are kept apart, as originally — filtered candidates
+        push the kth bound up, so masked groups need deeper beams and
+        mixing would drag unmasked queries through extra rounds."""
+        knn = batched_knn_device if device_loop else batched_knn
         out: List[Optional[np.ndarray]] = [None] * len(jobs)
-        by_grp: Dict[Tuple[str, bool], List[int]] = defaultdict(list)
+        by_grp: Dict[Tuple, List[int]] = defaultdict(list)
         for i, (vk, mask) in enumerate(jobs):
-            by_grp[(vk.attr, mask is not None)].append(i)
-        for (attr, masked), idxs in by_grp.items():
+            key = vk.attr if device_loop else (vk.attr, mask is not None)
+            by_grp[key].append(i)
+        for key, idxs in by_grp.items():
+            attr = key if device_loop else key[0]
+            # masked jobs first: the all-true rows of the unmasked tail
+            # are built on device instead of being staged and uploaded
+            idxs = sorted(idxs, key=lambda i: jobs[i][1] is None)
             qs = jnp.asarray(np.stack([jobs[i][0].vec() for i in idxs]))
             kmax = max(jobs[i][0].k for i in idxs)
+            n_masked = sum(jobs[i][1] is not None for i in idxs)
             masks = None
-            if masked:
-                masks = jnp.asarray(np.stack([jobs[i][1] for i in idxs]))
-            _, rows = batched_knn(self.geom[attr], self.vec_tiles[attr],
-                                  qs, kmax, masks=masks, beam=self.beam,
-                                  interpret=self.interpret, stats=stats)
+            if n_masked:
+                masks = jnp.asarray(np.stack(
+                    [jobs[i][1] for i in idxs[:n_masked]]))
+                if n_masked < len(idxs):
+                    masks = jnp.concatenate(
+                        [masks, jnp.ones((len(idxs) - n_masked, self.n),
+                                         bool)])
+            geom = self.geom_dev[attr] if device_loop else self.geom[attr]
+            tiles = self.vec_tiles_dev[attr] if device_loop \
+                else self.vec_tiles[attr]
+            _, rows = knn(geom, tiles, qs, kmax, masks=masks,
+                          beam=self.beam, interpret=self.interpret,
+                          stats=stats)
             for pos, i in enumerate(idxs):
                 out[i] = rows[pos, :jobs[i][0].k]
         return out  # type: ignore[return-value]
 
     # -------------------------------------------------------------- execute
-    def execute_batch(self, queries: Sequence[Q.Query]
+    def execute_batch(self, queries: Sequence[Q.Query], *,
+                      device_loop: Optional[bool] = None
                       ) -> Tuple[List[np.ndarray], EngineStats]:
         """Execute a batch of plannable query trees. Returns one row array
-        per query (see module docstring for the ordering contract)."""
+        per query (see module docstring for the ordering contract).
+        ``device_loop`` overrides the engine default per call (None =
+        use the constructor flag) without rebuilding device state."""
+        if device_loop is None:
+            device_loop = self.device_loop
         t0 = time.time()
         stats = EngineStats(queries=len(queries))
         for q in queries:
@@ -500,12 +910,13 @@ class HybridEngine:
                 raise ValueError(
                     f"query not plannable for the batched engine "
                     f"(use MQRLD.execute_batch for scalar fallback): {q!r}")
-        pred_masks = self._predicate_masks(queries, stats)
+        pred_masks = self._predicate_masks(queries, stats,
+                                           tile_route=device_loop)
         jobs: List[Tuple[Q.VK, Optional[jax.Array]]] = []
         ctr = [0]
         for q in queries:
             self._walk(q, None, pred_masks, jobs, None, ctr)
-        job_rows = self._run_jobs(jobs, stats)
+        job_rows = self._run_jobs(jobs, stats, device_loop)
         out: List[np.ndarray] = []
         ctr = [0]
         for q in queries:

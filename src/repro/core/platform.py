@@ -18,11 +18,15 @@ scalar path — host-side tree walk per query, the only path that records
 QBS rows, per-query ``QueryStats`` and Algorithm-3 access counts.
 ``execute_batch`` routes a batch of query trees through the device-resident
 ``repro.core.engine.HybridEngine`` (vectorized leaf pruning, grouped
-predicate masks, beam-doubled masked KNN through the Pallas fused_topk
-kernel) and returns exactly the same rows per query; queries outside the
-engine's plannable fragment transparently fall back to the scalar path.
-Both paths are exact; use the scalar one for QBS/stats parity and the
-batched one for serving throughput.
+predicate masks, masked KNN through the Pallas fused_topk kernel) and
+returns exactly the same rows per query; queries outside the engine's
+plannable fragment transparently fall back to the scalar path. The
+engine itself has two beam-loop implementations behind the
+``device_loop`` flag — the on-device ``lax.while_loop`` path with
+V.R routed through the tile beam (the serving default), and the
+host-driven doubling loop with dense V.R kept as the exactness oracle —
+see ``repro.core.engine``. All paths are exact; use the scalar one for
+QBS/stats parity and the batched one for serving throughput.
 """
 from __future__ import annotations
 
@@ -278,20 +282,31 @@ class MQRLD:
 
     # ------------------------------------------------------- batched engine
     def engine(self, *, interpret: bool = True, beam: int = 16,
-               tile: int = 128):
+               tile: int = 128,
+               device_loop: Optional[bool] = None):
         """The device-resident batched executor for this table (built
-        lazily, invalidated by ``prepare``)."""
+        lazily, invalidated by ``prepare``). ``device_loop`` sets the
+        engine's default KNN beam-loop implementation (device
+        ``lax.while_loop`` vs the host-driven exactness oracle) only
+        when passed explicitly — None leaves a cached engine's
+        configured default untouched — and is also a per-call override
+        on ``execute_batch``; it never forces a rebuild of device
+        state."""
         assert self.tree is not None, "call prepare() first"
         from repro.core.engine import HybridEngine
         if (self._engine is None or self._engine.interpret != interpret
                 or self._engine.beam != beam or self._engine.tile != tile):
-            self._engine = HybridEngine(self.tree, self.table, self.meta,
-                                        interpret=interpret, beam=beam,
-                                        tile=tile)
+            self._engine = HybridEngine(
+                self.tree, self.table, self.meta, interpret=interpret,
+                beam=beam, tile=tile,
+                device_loop=True if device_loop is None else device_loop)
+        elif device_loop is not None:
+            self._engine.device_loop = device_loop
         return self._engine
 
     def execute_batch(self, queries: Sequence[Q.Query], *,
-                      interpret: bool = True):
+                      interpret: bool = True,
+                      device_loop: bool = True):
         """Execute a batch of rich hybrid queries on the batched engine.
 
         Returns (results, EngineStats): one row array per query, exactly
@@ -299,14 +314,18 @@ class MQRLD:
         distance-ordered, everything else ascending row ids). Queries
         outside the engine's plannable fragment (see
         ``repro.core.engine.plannable``) fall back to the scalar path.
-        No QBS recording happens here — replay on ``execute`` for that.
+        ``device_loop=False`` routes V.K beams through the host-driven
+        loop (the exactness oracle) instead of the on-device
+        ``lax.while_loop``. No QBS recording happens here — replay on
+        ``execute`` for that.
         """
         from repro.core.engine import EngineStats, plannable
         eng = self.engine(interpret=interpret)
         results: List[Optional[np.ndarray]] = [None] * len(queries)
         planned = [i for i, q in enumerate(queries) if plannable(q)]
         if planned:
-            rows, stats = eng.execute_batch([queries[i] for i in planned])
+            rows, stats = eng.execute_batch([queries[i] for i in planned],
+                                            device_loop=device_loop)
             for i, r in zip(planned, rows):
                 results[i] = r
         else:

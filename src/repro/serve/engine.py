@@ -155,19 +155,29 @@ class RetrievalServer:
     column's space (identity by default) — the supported hook when the
     backbone dimension differs from the stored column.
 
-    Results are ALWAYS distance-ordered: ``execute_batch`` returns
-    filtered-KNN (And) results as ascending row ids, so ``serve``
-    re-ranks them by distance to the request embedding before returning.
+    ``device_loop`` picks the engine's KNN beam-loop implementation
+    (True = on-device ``lax.while_loop``, the serving default; False =
+    the host-driven exactness oracle) and is forwarded to
+    ``MQRLD.execute_batch`` unchanged.
+
+    Ordering contract: results come back in SUBMISSION order — one
+    ``RetrievalResult`` per request, positionally — regardless of how
+    the planner groups, reorders, or scalar-fallbacks queries inside
+    ``execute_batch``. Within each result, rows are ALWAYS
+    distance-ordered: ``execute_batch`` returns filtered-KNN (And)
+    results as ascending row ids, so ``serve`` re-ranks them by
+    distance to the request embedding before returning.
     """
 
     def __init__(self, platform, embedder: EmbeddingServer, *,
                  batch_size: int = 64, pad_token: int = 0,
-                 project=None):
+                 project=None, device_loop: bool = True):
         self.platform = platform
         self.embedder = embedder
         self.batch_size = batch_size
         self.pad_token = pad_token
         self.project = project
+        self.device_loop = device_loop
 
     def _queries(self, reqs: Sequence[RetrievalRequest],
                  emb: np.ndarray) -> List[Q.Query]:
@@ -199,7 +209,8 @@ class RetrievalServer:
             if self.project is not None:
                 emb = np.asarray(self.project(emb))
             queries = self._queries(chunk, emb)
-            rows, _ = self.platform.execute_batch(queries)
+            rows, _ = self.platform.execute_batch(
+                queries, device_loop=self.device_loop)
             results.extend(
                 RetrievalResult(rows=self._ranked(req, e, r), query=q)
                 for req, e, r, q in zip(chunk, emb, rows, queries))

@@ -65,6 +65,103 @@ def test_topk_masked_sweep(g, c, d, k, density):
         assert all(bool(v[i, j]) for j in gi[i][fin[i]])
 
 
+# ---------------------------------------------------------------------------
+# topk_l2_masked edge cases (the hybrid engine's beam-round kernel)
+# ---------------------------------------------------------------------------
+def test_topk_masked_all_masked_tiles():
+    """Queries whose whole candidate tile is masked out must come back
+    as (inf, -1) everywhere; mixed rows are unaffected."""
+    g, c, d, k = 4, 96, 8, 5
+    q = _arr((g, d), np.float32)
+    p = _arr((g, c, d), np.float32)
+    v = np.ones((g, c), bool)
+    v[0] = False                      # fully masked query
+    v[2, 50:] = False                 # half-masked query
+    gd, gi = topk_l2_masked_pallas(q, p, jnp.asarray(v), k,
+                                   bg=2, bc=32, interpret=True)
+    gd, gi = np.asarray(gd), np.asarray(gi)
+    assert (gi[0] == -1).all() and np.isinf(gd[0]).all()
+    assert (gi[1] >= 0).all()
+    assert all(j < 50 for j in gi[2][gi[2] >= 0])
+    wd, wi = ref.topk_l2_masked(q, p, jnp.asarray(v), k)
+    assert (np.isfinite(gd) == np.isfinite(np.asarray(wd))).all()
+
+
+def test_topk_masked_k_exceeds_surviving_rows():
+    """k larger than the surviving-row count: exactly the survivors
+    come back, the rest of the k slots are (inf, -1) padding."""
+    g, c, d, k = 3, 40, 6, 25
+    q = _arr((g, d), np.float32)
+    p = _arr((g, c, d), np.float32)
+    v = np.zeros((g, c), bool)
+    v[0, :7] = True
+    v[1, :1] = True                   # single survivor
+    v[2, :] = True                    # k < c here? no: k=25 < c=40
+    gd, gi = topk_l2_masked_pallas(q, p, jnp.asarray(v), k,
+                                   bg=2, bc=16, interpret=True)
+    gd, gi = np.asarray(gd), np.asarray(gi)
+    assert (gi[0] >= 0).sum() == 7 and np.isinf(gd[0][7:]).all()
+    assert (gi[1] >= 0).sum() == 1
+    assert set(gi[0][gi[0] >= 0].tolist()) == set(range(7))
+    assert (gi[2] >= 0).sum() == k
+
+
+def test_topk_masked_k_exceeds_candidate_width():
+    """k > C: the kernel pads the requested width with (inf, -1)."""
+    g, c, d, k = 2, 9, 4, 16
+    q = _arr((g, d), np.float32)
+    p = _arr((g, c, d), np.float32)
+    v = jnp.asarray(np.ones((g, c), bool))
+    gd, gi = topk_l2_masked_pallas(q, p, v, k, interpret=True)
+    gd, gi = np.asarray(gd), np.asarray(gi)
+    assert gd.shape == (g, k) and gi.shape == (g, k)
+    assert (gi[:, :c] >= 0).all() and (gi[:, c:] == -1).all()
+
+
+def test_topk_masked_duplicate_distances():
+    """Duplicated candidate points (exactly tied distances): distances
+    must match the ref merge, returned indices must be unique, valid,
+    and consistent with their reported distance."""
+    g, c, d, k = 3, 64, 5, 10
+    q = _arr((g, d), np.float32)
+    base = np.asarray(_arr((g, c // 2, d), np.float32))
+    p = jnp.asarray(np.concatenate([base, base], axis=1))  # every point x2
+    v = jnp.asarray(np.ones((g, c), bool))
+    gd, gi = topk_l2_masked_pallas(q, p, v, k, bg=2, bc=16,
+                                   interpret=True)
+    wd, wi = ref.topk_l2_masked(q, p, v, k)
+    gd, gi, wd, wi = map(np.asarray, (gd, gi, wd, wi))
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    pn = np.asarray(p)
+    for i in range(g):
+        ids = gi[i][gi[i] >= 0]
+        assert len(set(ids.tolist())) == len(ids)  # no duplicate slots
+        d2 = ((pn[i, ids] - np.asarray(q)[i]) ** 2).sum(1)
+        np.testing.assert_allclose(d2, gd[i][gi[i] >= 0],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c,bc", [(37, 16), (129, 32), (100, 64),
+                                  (5, 64)])
+def test_topk_masked_ragged_tile_counts(c, bc):
+    """Candidate counts that are not a multiple of the block width:
+    padding rows never leak into the result."""
+    g, d, k = 5, 7, 6
+    q = _arr((g, d), np.float32)
+    p = _arr((g, c, d), np.float32)
+    v = jnp.asarray(RNG.random((g, c)) < 0.6)
+    gd, gi = topk_l2_masked_pallas(q, p, v, k, bg=2, bc=bc,
+                                   interpret=True)
+    wd, wi = ref.topk_l2_masked(q, p, v, k)
+    gd, gi, wd, wi = map(np.asarray, (gd, gi, wd, wi))
+    assert (np.isfinite(gd) == np.isfinite(wd)).all()
+    fin = np.isfinite(wd)
+    np.testing.assert_allclose(gd[fin], wd[fin], rtol=1e-4, atol=1e-4)
+    assert (gi < c).all()
+    for i in range(g):
+        assert set(gi[i][fin[i]].tolist()) == set(wi[i][fin[i]].tolist())
+
+
 @pytest.mark.parametrize("n,d", [(90, 11), (200, 5), (64, 33), (33, 2)])
 @pytest.mark.parametrize("r,g", [(2.5, 0.7), (10.0, 1.5)])
 def test_lpgf_sweep(n, d, r, g):
