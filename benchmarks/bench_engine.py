@@ -9,10 +9,14 @@ with the KNN beam loop run both ways:
   * device loop (``device_loop=True``) — the whole beam loop as one
     ``lax.while_loop`` call, V.R routed through the tile planner.
 
-Not a paper figure: this measures the serving-path refactors (ISSUE 1-2);
+Not a paper figure: this measures the serving-path refactors (ISSUE 1-3);
 the acceptance bars are >= 5x QPS batched-vs-scalar and >= 1.5x QPS
 device-vs-host loop at n >= 20k rows, exact results, with per-mode beam
-round counts reported.
+round counts reported. The MOAPI v2 planner is measured too:
+plan-cache-cold (fresh Session: normalize + plannability + grouping +
+first QBS lookup) versus plan-cache-warm (same batch archetype replanned
+through the cached LogicalPlan) QPS, with the warm bar required to be
+>= the deprecated ``execute_batch`` shim's QPS.
 
 ``--smoke`` (also via ``benchmarks.run --smoke``): toy n / batch,
 repeat=1 — keeps this module executed in CI.
@@ -81,7 +85,11 @@ def run(csv: Csv):
         return p.execute_batch(queries, device_loop=True)[0]
 
     # warm the compiled rounds / the while_loop (one-time cost, excluded)
-    # and keep one stats snapshot per mode for the round-count report
+    # and keep one stats snapshot per mode for the round-count report.
+    # Two passes per mode: the first records QBS convergence widths, the
+    # second compiles the QBS-seeded round shapes the timed runs will use
+    p.execute_batch(queries, device_loop=False)
+    p.execute_batch(queries, device_loop=True)
     _, host_stats = p.execute_batch(queries, device_loop=False)
     _, dev_stats = p.execute_batch(queries, device_loop=True)
     t_scalar, r_scalar = timeit(scalar_all, repeat=2)
@@ -133,6 +141,39 @@ def run(csv: Csv):
             t_loop_host / max(t_loop_dev, 1e-12),
             f"loop_host_us={us(t_loop_host):.0f} "
             f"loop_device_us={us(t_loop_dev):.0f} jobs={len(jobs)}")
+
+    # ---- MOAPI v2 planner: plan-cache cold vs warm -----------------------
+    # cold = a FRESH Session planning this batch archetype for the first
+    # time (normalize + signatures + plannability + job layout + KNN
+    # grouping); warm = the same archetype replanned through the cached
+    # LogicalPlan. Execution work is identical, so the delta is pure
+    # planning overhead; warm end-to-end QPS must stay >= the deprecated
+    # execute_batch shim's QPS (which itself rides the warm path).
+    from repro.core.planner import Session
+
+    def plan_cold():
+        return Session(p, interpret=True).plan(queries)
+
+    sess = Session(p, interpret=True)
+    sess.plan(queries)  # warm the cache
+
+    def plan_warm():
+        return sess.plan(queries)
+
+    t_plan_cold, _ = timeit(plan_cold, repeat=3)
+    t_plan_warm, _ = timeit(plan_warm, repeat=5)
+    t_warm_exec, r_warm = timeit(
+        lambda: sess.plan(queries).execute()[0], repeat=5)
+    warm_exact = same(r_warm, r_scalar)
+    qps_warm = len(queries) / t_warm_exec
+    csv.add("engine/plan_cold_per_query", us(t_plan_cold / len(queries)),
+            f"plan_cold_us={us(t_plan_cold):.0f} cache_misses>=1")
+    csv.add("engine/plan_warm_per_query", us(t_plan_warm / len(queries)),
+            f"plan_warm_us={us(t_plan_warm):.0f} "
+            f"overhead_ratio={t_plan_cold / max(t_plan_warm, 1e-12):.1f}x")
+    csv.add("engine/session_warm_per_query", us(t_warm_exec / len(queries)),
+            f"qps={qps_warm:.0f} exact={warm_exact} "
+            f"warm_vs_execute_batch={qps_warm / max(qps_dev, 1e-12):.2f}x")
 
 
 if __name__ == "__main__":

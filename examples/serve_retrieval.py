@@ -1,8 +1,10 @@
 """Retrieval serving: batched rich hybrid queries against a prepared
 platform + LM generation serving for the answer text — both engines of a
 production deployment. The retrieval half runs end-to-end through the
-device-resident hybrid engine: EmbeddingServer -> RetrievalServer ->
-MQRLD.execute_batch -> Pallas fused_topk leaf scans.
+MOAPI v2 planned path: EmbeddingServer -> RetrievalServer ->
+MQRLD.session().plan().execute() -> Pallas fused_topk leaf scans, with
+the plan cache and QBS-seeded beam widths amortizing planning across
+same-shaped request batches (plan.explain() shows the chosen paths).
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -43,17 +45,24 @@ def main():
     print(f"batched KNN: 64 queries x top-10 in {dt*1e3:.1f} ms "
           f"({dt/64*1e6:.0f} us/query), buckets touched {stats.buckets_touched}")
 
-    # -------- batched rich hybrid queries through the engine layer
+    # -------- batched rich hybrid queries through the MOAPI v2 planner
+    sess = p.session()
     hybrid = [Q.And.of(Q.NR("price", 25, 75),
                        Q.VK.of("v", table.vector["v"][i], 5))
               for i in rng.integers(0, n, 64)]
-    p.execute_batch(hybrid)  # compile the full-batch round shapes once
+    plan = sess.plan(hybrid)   # cold: normalize + group + compile shapes
+    plan.execute()
     t0 = time.time()
-    results, est = p.execute_batch(hybrid)
+    plan = sess.plan(hybrid)   # warm: cached LogicalPlan, QBS-seeded beams
+    results, est = plan.execute()
     dt = time.time() - t0
+    ex = plan.explain()
     print(f"engine: 64 hybrid queries in {dt*1e3:.1f} ms "
           f"({dt/64*1e6:.0f} us/query), {est.knn_rounds} beam rounds, "
           f"{est.rows_scanned} rows scanned")
+    print(f"plan: cache={ex['cache']} paths="
+          f"{ex['n_engine']} engine/{ex['n_scalar']} scalar, "
+          f"knn groups={[(g['archetype'], g['beam_seed']) for g in ex['knn_groups']]}")
 
     # -------- scalar path for QBS recording (stats parity)
     t0 = time.time()

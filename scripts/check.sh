@@ -7,10 +7,25 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# repo cleanliness: compiled bytecode must never be committed (.gitignore
+# covers __pycache__/ and *.pyc; this guards against force-adds)
+if git ls-files '*.pyc' | grep -q .; then
+  echo "ERROR: committed .pyc files found:" >&2
+  git ls-files '*.pyc' >&2
+  exit 1
+fi
+
 python -m pip install -q -r requirements-dev.txt \
   || echo "WARN: dev-requirement install failed (offline?); continuing" >&2
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# bench_engine also runs inside benchmarks.run below; the explicit step
+# is deliberate — it keeps the planner cold/warm QPS rows greppable under
+# a stable heading even if the full smoke suite is ever trimmed
+echo "== planner smoke benchmark (plan-cache cold vs warm) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m benchmarks.bench_engine --smoke
 
 echo "== benchmarks (--smoke) =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke

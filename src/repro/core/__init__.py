@@ -1,4 +1,5 @@
 # MQRLD core: the paper's contribution as a composable system.
 from repro.core.lake import DataLake, MMOTable  # noqa: F401
 from repro.core.platform import MQRLD  # noqa: F401
+from repro.core.planner import ExecutablePlan, Session  # noqa: F401
 from repro.core import query  # noqa: F401

@@ -55,6 +55,14 @@ bound is unselective (surviving tiles cover more than
 full-column mask (also the oracle path's behavior), which is cheaper
 than a near-total gather.
 
+Planner integration (MOAPI v2): ``execute_batch`` accepts a pre-built
+``EnginePlan`` from ``repro.core.planner`` — the cached-per-archetype job
+layout, KNN grouping (``KnnGroupSpec``), and QBS-seeded first-round beam
+widths — instead of re-deriving them per batch; every executed KNN group
+reports its converged width back through ``EngineStats.knn_group_widths``
+(keyed by ``knn_archetype``), closing the paper's query-aware feedback
+loop over execution parameters.
+
 Execution contract (scalar vs batched): ``execute_batch`` returns exactly
 the rows of scalar ``execute`` for every query archetype whose V.K
 candidate masks are derivable from predicate-only subtrees — V.K at top
@@ -73,7 +81,7 @@ from __future__ import annotations
 import functools
 import time
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -180,6 +188,9 @@ class EngineStats:
     vr_tiles_pruned: int = 0     # tiles dropped by the V.R triangle bound
     vr_dense_fallbacks: int = 0  # V.R groups that took the dense column path
     time_s: float = 0.0
+    # (archetype, converged width in tiles) per executed KNN group — the
+    # feedback signal Session records into QBS for query-aware seeding
+    knn_group_widths: List[Tuple[str, int]] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +252,8 @@ def _knn_prologue(qs, centroid, radius, masks_tiles=None):
 def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
                 masks: Optional[jax.Array] = None, beam: int = 8,
                 interpret: bool = True,
-                stats: Optional[EngineStats] = None
+                stats: Optional[EngineStats] = None,
+                conv_out: Optional[list] = None
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact batched (optionally row-masked) KNN.
 
@@ -257,6 +269,11 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
     (each scans only the newly admitted buckets and merges with the carry),
     queries whose bound is met leave the batch, and straggler subsets are
     padded to powers of two so compiled round shapes stay bounded.
+
+    ``conv_out``: when a list is passed, one (g,) int64 array is appended
+    with each query's converged beam width — the number of sorted-bound
+    tiles admitted when its stopping rule fired (granularity: the round
+    widths actually scanned). The QBS convergence signal.
     """
     t0 = time.time()
     qs = jnp.asarray(qs, jnp.float32)
@@ -265,11 +282,17 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
         masks_tiles = _tile_masks(jnp.asarray(masks), geom.bucket_rows)
     g = int(qs.shape[0])
     l = geom.n_leaves
-    order, lb_sorted = _knn_prologue(qs, geom.centroid, geom.radius,
-                                     masks_tiles)
+    # same packed int32 single-key bound sort as the device path (several
+    # times faster than XLA's variadic argsort on CPU); the truncated
+    # bound only ever LOWERS lb, so the stopping rule stays conservative
+    # and the loop exact. Reference argsort kept for > 4096 tiles.
+    prologue = _knn_prologue_fast if l <= 4096 else _knn_prologue
+    order, lb_sorted = prologue(qs, geom.centroid, geom.radius,
+                                masks_tiles)
     lb_sorted = np.asarray(lb_sorted)
     best_d2 = np.full((g, k), np.inf, np.float32)
     best_r = np.full((g, k), -1, np.int64)
+    conv = np.zeros(g, np.int64)
     active = np.arange(g)
     w0, w = 0, max(1, min(beam, l))
     while len(active):
@@ -300,10 +323,13 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
         kth = np.sqrt(merged_d[:, -1])
         nxt = lb_sorted[active, w] if w < l else np.full(na, np.inf)
         done = (kth <= nxt) | (w >= l)
+        conv[active[done]] = w
         active = active[~done]
         w0, w = w, min(2 * w, l)
     if stats is not None:
         stats.time_s += time.time() - t0
+    if conv_out is not None:
+        conv_out.append(conv)
     return np.sqrt(best_d2), best_r
 
 
@@ -327,7 +353,7 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
     remaining visit order (columns past ``w1``), padded to the loop's
     static budget*w width with 0-columns whose +inf lower bound kills
     them. Returns (best_d2, best_rows, [rounds, buckets_scanned,
-    rows_scanned])."""
+    rows_scanned], per-query retirement round)."""
     l = order.shape[1]
     qs = jnp.take(qs_full, idx, axis=0)
     bd0 = jnp.take(d2_full, idx, axis=0)
@@ -346,7 +372,7 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         return (r < budget) & jnp.any(active)
 
     def body(st):
-        r, active, bd, br, nbuck, nrows = st
+        r, active, bd, br, nbuck, nrows, rr = st
         start = r * w
         sel = jax.lax.dynamic_slice_in_dim(order_pad, start, w, axis=1)
         # columns whose lower bound is +inf are padding, or real tiles
@@ -378,14 +404,18 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         nxt = jax.lax.dynamic_slice_in_dim(lb_pad, start + w, 1,
                                            axis=1)[:, 0]
         active2 = active & ~(kth <= nxt)
+        # per-query retirement round (for QBS convergence widths)
+        rr = jnp.where(active & ~active2, r + 1, rr)
         nbuck = nbuck + jnp.sum(jnp.where(active[:, None], colv, False))
         nrows = nrows + jnp.sum(valid)
-        return r + 1, active2, md, mr, nbuck, nrows
+        return r + 1, active2, md, mr, nbuck, nrows, rr
 
     st0 = (jnp.int32(0), active0, bd0, br0,
-           jnp.int32(0), jnp.int32(0))
-    r, _, bd, br, nbuck, nrows = jax.lax.while_loop(cond, body, st0)
-    return bd, br, jnp.stack([r, nbuck, nrows])
+           jnp.int32(0), jnp.int32(0), jnp.zeros(g, jnp.int32))
+    r, act_f, bd, br, nbuck, nrows, rr = \
+        jax.lax.while_loop(cond, body, st0)
+    rr = jnp.where(act_f, r, rr)  # budget-exhausted: scanned everything
+    return bd, br, jnp.stack([r, nbuck, nrows]), rr
 
 
 @jax.jit
@@ -444,7 +474,8 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
                        masks: Optional[jax.Array] = None, beam: int = 8,
                        interpret: bool = True,
                        w1: Optional[int] = None, ws: Optional[int] = None,
-                       stats: Optional[EngineStats] = None
+                       stats: Optional[EngineStats] = None,
+                       conv_out: Optional[list] = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact batched (optionally row-masked) KNN with the beam loop on
     device: same contract (and identical rows) as ``batched_knn``, which
@@ -467,6 +498,9 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
     budget ceil(remaining / W) makes the loop exact even when the
     stopping rule never fires (k > matching rows), while the per-round
     bound check retires queries exactly like the scalar executor.
+    ``conv_out`` (see ``batched_knn``) receives per-query converged
+    widths: w1 for queries the fused round finished, w1 + r*W for a
+    straggler retired in loop round r (capped at the tile count).
     Versus the host loop's 2-4 full transfers + host merges per batch,
     this path transfers one bool per query mid-batch and never computes
     a straggler round at full batch width."""
@@ -485,6 +519,7 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
         stats.knn_rounds += 1
         stats.knn_buckets += g * w1
         stats.rows_scanned += int(nvalid)
+    conv = np.full(g, w1, np.int64)
     act = np.nonzero(np.asarray(active))[0]
     if len(act) and w1 < l:
         na = len(act)
@@ -495,7 +530,7 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
         active0 = jnp.asarray(np.arange(gp) < na)
         w = max(1, ws if ws else beam)
         budget = -(-(l - w1) // w)
-        bd, br, loop_stats = _knn_device_loop(
+        bd, br, loop_stats, retire_round = _knn_device_loop(
             idx, active0, qs, d2, rows, order, lb_sorted, masks_tiles,
             data_tiles, geom.bucket_rows, w1=w1, w=w, budget=budget,
             k=k, interpret=interpret)
@@ -503,6 +538,8 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
         rows = np.asarray(rows).copy()
         d2[act] = np.asarray(bd)[:na]
         rows[act] = np.asarray(br)[:na]
+        conv[act] = np.minimum(
+            w1 + np.asarray(retire_round)[:na].astype(np.int64) * w, l)
         if stats is not None:
             rounds, nbuck, nrows = np.asarray(loop_stats)
             stats.knn_rounds += int(rounds)
@@ -510,6 +547,8 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
             stats.rows_scanned += int(nrows)
     if stats is not None:
         stats.time_s += time.time() - t0
+    if conv_out is not None:
+        conv_out.append(conv)
     return np.sqrt(np.asarray(d2)), np.asarray(rows).astype(np.int64)
 
 
@@ -619,6 +658,74 @@ def plannable(q: Q.Query) -> bool:
     if isinstance(q, Q.Or):
         return all(plannable(p) for p in q.parts)
     return False
+
+
+def knn_archetype(attr: str, kmax: int, masked: bool,
+                  device_loop: bool) -> str:
+    """QBS convergence key for one KNN job group. Widths are in tiles of
+    the layout the loop actually scans, which differs between the device
+    (finer ``device_tile``) and host layouts — hence the loop tag."""
+    return (f"VK:{attr}:k{kmax}:{'masked' if masked else 'plain'}"
+            f":{'dl' if device_loop else 'hl'}")
+
+
+@dataclass(frozen=True)
+class KnnGroupSpec:
+    """One KNN job group: which jobs run together through the beam loop.
+    Derived by the engine per batch, or handed in pre-built (and cached)
+    by the planner via ``EnginePlan``."""
+    attr: str
+    jobs: Tuple[int, ...]   # job indices, masked jobs first
+    kmax: int
+    n_masked: int
+    archetype: str          # ``knn_archetype`` key for QBS feedback
+
+
+def group_job_specs(job_specs: Sequence[Tuple[str, int, bool]],
+                    device_loop: bool) -> Tuple[KnnGroupSpec, ...]:
+    """THE grouping policy, shared by the engine (per batch, from live
+    jobs) and the planner (cached, from shape specs) so the two can
+    never drift apart.
+
+    Device path: ONE group per attribute — masked and unmasked jobs
+    share a single compiled program (unmasked jobs get an all-true
+    mask); straggler compaction retires finished queries, so mixing no
+    longer drags unmasked queries through extra full-width rounds, and
+    the per-call fixed cost is paid once. Oracle path: masked jobs are
+    kept apart — filtered candidates push the kth bound up, so masked
+    groups need deeper beams and mixing would drag unmasked queries
+    through extra rounds. Within a group, masked jobs order first (the
+    all-true rows of the unmasked tail are built on device instead of
+    being staged and uploaded)."""
+    by_grp: Dict[Tuple, List[int]] = defaultdict(list)
+    for i, (attr, k, masked) in enumerate(job_specs):
+        key = attr if device_loop else (attr, masked)
+        by_grp[key].append(i)
+    specs: List[KnnGroupSpec] = []
+    for key, idxs in by_grp.items():
+        attr = key if device_loop else key[0]
+        idxs = sorted(idxs, key=lambda i: not job_specs[i][2])
+        kmax = max(job_specs[i][1] for i in idxs)
+        n_masked = sum(1 for i in idxs if job_specs[i][2])
+        specs.append(KnnGroupSpec(
+            attr=attr, jobs=tuple(idxs), kmax=kmax, n_masked=n_masked,
+            archetype=knn_archetype(attr, kmax, n_masked > 0,
+                                    device_loop)))
+    return tuple(specs)
+
+
+@dataclass
+class EnginePlan:
+    """Pre-derived execution structure for one batch archetype, built by
+    ``repro.core.planner`` and cached across batches with the same
+    signature: the V.K job layout (walk registration order), the KNN
+    grouping, and QBS-seeded first-round beam widths. ``execute_batch``
+    validates the job layout against its own walk (shape mismatches fail
+    loudly instead of mis-assigning rows) and skips re-deriving the rest."""
+    device_loop: bool
+    job_specs: Tuple[Tuple[str, int, bool], ...]  # (attr, k, masked)/job
+    groups: Tuple[KnnGroupSpec, ...]
+    seeds: Optional[Dict[str, int]] = None        # archetype -> width
 
 
 class HybridEngine:
@@ -848,33 +955,59 @@ class HybridEngine:
             return None if any_unknown else out
         raise TypeError(q)
 
-    def _run_jobs(self, jobs, stats: EngineStats,
-                  device_loop: bool) -> List[np.ndarray]:
-        """Run every V.K job as one beam-loop masked KNN per group
-        through the fused kernel.
+    def _group_jobs(self, jobs, device_loop: bool) -> List[KnnGroupSpec]:
+        """Derive the KNN grouping for one batch of live jobs (policy:
+        ``group_job_specs``, shared with the planner's cached path)."""
+        specs = tuple((vk.attr, vk.k, m is not None) for vk, m in jobs)
+        return list(group_job_specs(specs, device_loop))
 
-        Device path: ONE group per attribute — masked and unmasked jobs
-        share a single compiled program (unmasked jobs get an all-true
-        mask); straggler compaction retires finished queries, so
-        mixing no longer drags unmasked queries through extra full-width
-        rounds, and the per-call fixed cost is paid once. Oracle path:
-        masked jobs are kept apart, as originally — filtered candidates
-        push the kth bound up, so masked groups need deeper beams and
-        mixing would drag unmasked queries through extra rounds."""
+    def _run_jobs(self, jobs, stats: EngineStats, device_loop: bool,
+                  groups: Optional[Sequence[KnnGroupSpec]] = None,
+                  seeds: Optional[Dict[str, int]] = None
+                  ) -> List[np.ndarray]:
+        """Run every V.K job as one beam-loop masked KNN per group
+        through the fused kernel (grouping policy: ``_group_jobs``;
+        ``groups`` hands in a planner-cached grouping instead).
+
+        ``seeds`` maps group archetypes to QBS-recorded convergence
+        widths (the p90 of per-query converged widths from past runs of
+        the archetype). Application differs per loop, matching each
+        loop's cost model:
+
+        On BOTH loops the recorded signal is each query's width BEYOND
+        the first round it actually ran (zero when round one finished
+        it): widths observed below the current first-round width are
+        unobservable, so recording absolute widths under an applied
+        seed would floor at the seed and ratchet forever. Tail-relative
+        recording lets a seed decay: once seeded runs stop producing
+        tails, zeros fill the QBS ring and the p90 falls back toward
+        the default.
+
+          * device loop — the seed sizes the STRAGGLER round width
+            ``ws`` (which also shrinks the static round budget
+            ceil(remaining/ws)); the fused first round keeps its narrow
+            default, because widening it charges the whole batch for
+            the tail's worst case.
+          * host loop — default first beam + seed tail becomes the
+            initial doubling beam: most queries then retire in one
+            synced round instead of two.
+
+        Seeds are quantized to powers of two before use (round widths
+        are static jit args; raw p90s drift by a few tiles between
+        batches and would re-trace per drift) and clamped to at least
+        the engine default. Seeding shifts work between rounds but
+        never affects results — both loops stop on the same exact
+        bound. Every group's recorded tail width is appended to
+        ``stats.knn_group_widths`` so the caller can close the QBS
+        feedback loop."""
         knn = batched_knn_device if device_loop else batched_knn
         out: List[Optional[np.ndarray]] = [None] * len(jobs)
-        by_grp: Dict[Tuple, List[int]] = defaultdict(list)
-        for i, (vk, mask) in enumerate(jobs):
-            key = vk.attr if device_loop else (vk.attr, mask is not None)
-            by_grp[key].append(i)
-        for key, idxs in by_grp.items():
-            attr = key if device_loop else key[0]
-            # masked jobs first: the all-true rows of the unmasked tail
-            # are built on device instead of being staged and uploaded
-            idxs = sorted(idxs, key=lambda i: jobs[i][1] is None)
+        if groups is None:
+            groups = self._group_jobs(jobs, device_loop)
+        for grp in groups:
+            idxs = list(grp.jobs)
+            attr, kmax, n_masked = grp.attr, grp.kmax, grp.n_masked
             qs = jnp.asarray(np.stack([jobs[i][0].vec() for i in idxs]))
-            kmax = max(jobs[i][0].k for i in idxs)
-            n_masked = sum(jobs[i][1] is not None for i in idxs)
             masks = None
             if n_masked:
                 masks = jnp.asarray(np.stack(
@@ -886,37 +1019,86 @@ class HybridEngine:
             geom = self.geom_dev[attr] if device_loop else self.geom[attr]
             tiles = self.vec_tiles_dev[attr] if device_loop \
                 else self.vec_tiles[attr]
-            _, rows = knn(geom, tiles, qs, kmax, masks=masks,
-                          beam=self.beam, interpret=self.interpret,
-                          stats=stats)
+            seed = seeds.get(grp.archetype) if seeds else None
+            l = geom.n_leaves
+            conv: list = []
+            if device_loop:
+                ws = max(self.beam, _next_pow2(seed)) if seed else None
+                _, rows = knn(geom, tiles, qs, kmax, masks=masks,
+                              beam=self.beam, interpret=self.interpret,
+                              ws=ws, stats=stats, conv_out=conv)
+                w1_eff = max(1, min(max(1, self.beam // 2), l))
+                signal = np.maximum(conv[0] - w1_eff, 0)  # tail widths
+            else:
+                beam_eff = max(self.beam, _next_pow2(self.beam + seed)) \
+                    if seed else self.beam
+                _, rows = knn(geom, tiles, qs, kmax, masks=masks,
+                              beam=beam_eff, interpret=self.interpret,
+                              stats=stats, conv_out=conv)
+                w_start = max(1, min(beam_eff, l))
+                signal = np.maximum(conv[0] - w_start, 0)
+            width = int(np.ceil(np.quantile(signal, 0.9))) if len(signal) \
+                else 0
+            stats.knn_group_widths.append((grp.archetype, width))
             for pos, i in enumerate(idxs):
                 out[i] = rows[pos, :jobs[i][0].k]
         return out  # type: ignore[return-value]
 
+    # -------------------------------------------------------------- explain
+    def vr_tile_estimate(self, vr: Q.VR) -> Tuple[int, int]:
+        """(surviving, total) tile counts under the V.R triangle bound —
+        the planner's pruned-tile estimate for ``explain()``; the same
+        bound ``_vr_masks`` executes, evaluated for one query."""
+        g = self.geom[vr.attr]
+        ok = np.asarray(_vr_leaf_plan(
+            jnp.asarray(vr.vec()[None, :], jnp.float32),
+            jnp.asarray([vr.radius], jnp.float32), g.centroid, g.radius))
+        return int(ok.sum()), self.n_tiles
+
     # -------------------------------------------------------------- execute
     def execute_batch(self, queries: Sequence[Q.Query], *,
-                      device_loop: Optional[bool] = None
+                      device_loop: Optional[bool] = None,
+                      plan: Optional[EnginePlan] = None
                       ) -> Tuple[List[np.ndarray], EngineStats]:
         """Execute a batch of plannable query trees. Returns one row array
         per query (see module docstring for the ordering contract).
         ``device_loop`` overrides the engine default per call (None =
-        use the constructor flag) without rebuilding device state."""
-        if device_loop is None:
+        use the constructor flag) without rebuilding device state.
+
+        ``plan`` (built by ``repro.core.planner`` and cached per batch
+        archetype) supplies the pre-derived job layout, KNN grouping, and
+        QBS beam seeds: plannability checks and grouping are skipped, and
+        the job layout is cross-checked against this batch's walk."""
+        if plan is not None:
+            device_loop = plan.device_loop
+        elif device_loop is None:
             device_loop = self.device_loop
         t0 = time.time()
         stats = EngineStats(queries=len(queries))
-        for q in queries:
-            if not plannable(q):
-                raise ValueError(
-                    f"query not plannable for the batched engine "
-                    f"(use MQRLD.execute_batch for scalar fallback): {q!r}")
+        if plan is None:
+            for q in queries:
+                if not plannable(q):
+                    raise ValueError(
+                        f"query not plannable for the batched engine "
+                        f"(use MQRLD.execute_batch for scalar fallback): "
+                        f"{q!r}")
         pred_masks = self._predicate_masks(queries, stats,
                                            tile_route=device_loop)
         jobs: List[Tuple[Q.VK, Optional[jax.Array]]] = []
         ctr = [0]
         for q in queries:
             self._walk(q, None, pred_masks, jobs, None, ctr)
-        job_rows = self._run_jobs(jobs, stats, device_loop)
+        groups = seeds = None
+        if plan is not None:
+            got = tuple((vk.attr, vk.k, m is not None) for vk, m in jobs)
+            if got != plan.job_specs:
+                raise ValueError(
+                    f"EnginePlan job layout does not match this batch "
+                    f"(stale or mis-keyed plan cache): plan expects "
+                    f"{plan.job_specs}, walk produced {got}")
+            groups, seeds = plan.groups, plan.seeds
+        job_rows = self._run_jobs(jobs, stats, device_loop,
+                                  groups=groups, seeds=seeds)
         out: List[np.ndarray] = []
         ctr = [0]
         for q in queries:

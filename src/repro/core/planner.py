@@ -1,0 +1,307 @@
+"""MOAPI v2 query planner: ``Session.plan(queries) -> ExecutablePlan``.
+
+Planning is a first-class, cached, QBS-informed step instead of a side
+effect of execution (the paper's query-aware claim, §4.3 / Alg. 3,
+applied to execution parameters; TAIJI-style declarative interface over
+the lake). The pipeline per batch:
+
+  query ASTs
+    -> ``Q.normalize``      (flatten/dedupe, explicit V.K postfilter)
+    -> ``Q.signature``      (stable archetype: shape+types+attrs+k)
+    -> ``LogicalPlan``      (per-query fragment: engine vs scalar path,
+                             V.K job layout, KNN group structure)
+    -> ``ExecutablePlan``   (bound to this batch's constants; executes
+                             through ``HybridEngine`` + scalar fallback)
+
+Caching: ``Session`` keeps one ``LogicalPlan`` per (batch signature
+tuple, loop kind, platform build id). A repeated query *shape* — the
+common case in serving, where templates differ only in constants — skips
+plannability analysis, walk/job-layout derivation, and KNN grouping, and
+reuses the same compiled-shape universe (identical group sizes -> jit
+cache hits instead of re-tracing). ``prepare()`` bumps the platform
+build id, invalidating every cached plan.
+
+QBS-driven plan parameters: each KNN group carries a
+``knn_archetype`` key; at execute time the plan seeds the group's beam
+widths from ``QBSTable.convergence_width`` (p90 of per-query converged
+widths from past runs of the archetype — the device loop seeds its
+straggler round width / round budget, the host loop its initial
+doubling beam; see ``HybridEngine._run_jobs``) and records the achieved
+widths back — the query-aware beam seeding item from the ROADMAP.
+Seeds shift work between beam rounds only; exactness never depends on
+them.
+
+EXPLAIN: ``ExecutablePlan.explain()`` returns a structured description —
+per query: chosen path, signature, cache hit/miss, per-V.K beam seed and
+archetype, per-V.R pruned-tile estimates from the triangle bound.
+
+The v1 entry points (``MQRLD.execute_batch``, ``serve.RetrievalServer``)
+are thin wrappers over a ``Session`` and return identical results.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.engine import (EnginePlan, EngineStats, KnnGroupSpec,
+                               group_job_specs, plannable)
+
+
+# ---------------------------------------------------------------------------
+# Logical plan (cached skeleton, constants elided)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FragmentPlan:
+    """Plan for one query of the batch."""
+    signature: str
+    path: str                       # "device-loop" | "host-loop" | "scalar"
+    job_slots: Tuple[int, ...]      # this query's V.K job indices
+
+
+@dataclass(frozen=True)
+class LogicalPlan:
+    """The cached, constants-free plan skeleton for one batch archetype:
+    everything ``Session.plan`` derives that depends only on query
+    *shapes* (signatures), not on the constants bound per batch."""
+    signatures: Tuple[str, ...]
+    device_loop: bool
+    fragments: Tuple[FragmentPlan, ...]
+    engine_idx: Tuple[int, ...]     # positions routed to the engine
+    scalar_idx: Tuple[int, ...]     # positions falling back to scalar
+    job_specs: Tuple[Tuple[str, int, bool], ...]   # (attr, k, masked)/job
+    groups: Tuple[KnnGroupSpec, ...]
+
+
+def _collect_job_specs(q: Q.Query, ambient: bool,
+                       out: List[Tuple[str, int, bool]]):
+    """Mirror of ``HybridEngine._walk``'s V.K registration order over an
+    engine-plannable tree, shape-only: records (attr, k, masked) per job.
+    ``ambient`` is True when an enclosing And contributed a predicate
+    mask (the only way a job acquires a mask in the plannable fragment)."""
+    if isinstance(q, Q.VK):
+        out.append((q.attr, q.k, ambient))
+        return
+    if isinstance(q, (Q.NE, Q.NR, Q.VR)):
+        return
+    if isinstance(q, Q.And):
+        vks = [p for p in q.parts if isinstance(p, Q.VK)]
+        preds = [p for p in q.parts if not isinstance(p, Q.VK)]
+        amb = ambient or bool(preds)
+        for p in preds:   # VK-free in the plannable fragment: no jobs,
+            _collect_job_specs(p, ambient, out)  # kept for symmetry
+        for p in vks:
+            out.append((p.attr, p.k, amb))
+        return
+    if isinstance(q, Q.Or):
+        for p in q.parts:
+            _collect_job_specs(p, ambient, out)
+        return
+    raise TypeError(q)
+
+
+def build_logical_plan(norm: Sequence[Q.Query], device_loop: bool
+                       ) -> LogicalPlan:
+    """Derive the plan skeleton for one batch of normalized queries."""
+    sigs = tuple(Q.signature(q) for q in norm)
+    engine_idx, scalar_idx = [], []
+    fragments: List[FragmentPlan] = []
+    job_specs: List[Tuple[str, int, bool]] = []
+    loop_name = "device-loop" if device_loop else "host-loop"
+    for i, q in enumerate(norm):
+        if plannable(q):
+            engine_idx.append(i)
+            n0 = len(job_specs)
+            _collect_job_specs(q, False, job_specs)
+            fragments.append(FragmentPlan(
+                signature=sigs[i], path=loop_name,
+                job_slots=tuple(range(n0, len(job_specs)))))
+        else:
+            scalar_idx.append(i)
+            fragments.append(FragmentPlan(
+                signature=sigs[i], path="scalar", job_slots=()))
+    return LogicalPlan(
+        signatures=sigs, device_loop=device_loop,
+        fragments=tuple(fragments), engine_idx=tuple(engine_idx),
+        scalar_idx=tuple(scalar_idx), job_specs=tuple(job_specs),
+        groups=group_job_specs(tuple(job_specs), device_loop))
+
+
+# ---------------------------------------------------------------------------
+# Executable plan (skeleton bound to one batch's constants)
+# ---------------------------------------------------------------------------
+class ExecutablePlan:
+    """A ``LogicalPlan`` bound to one batch of queries, ready to run.
+
+    ``execute()`` returns (results, EngineStats) with exactly the
+    contract of the v1 ``MQRLD.execute_batch``: one row array per query
+    in submission order, engine fragments through ``HybridEngine`` (with
+    the cached grouping and QBS beam seeds), the rest through the scalar
+    executor. Achieved KNN widths are recorded back into QBS after every
+    run, so later plans of the same archetype seed tighter."""
+
+    def __init__(self, session: "Session", logical: LogicalPlan,
+                 queries: Sequence[Q.Query], norm: Sequence[Q.Query],
+                 cache_hit: bool):
+        self.session = session
+        self.logical = logical
+        self.queries = list(queries)
+        self.norm = list(norm)
+        self.cache_hit = cache_hit
+
+    # ------------------------------------------------------------- execute
+    def _seeds(self) -> Dict[str, int]:
+        """Current QBS convergence seeds for this plan's KNN groups —
+        looked up at execute time (not baked at plan time) so a cached
+        plan keeps learning from QBS between runs."""
+        qbs = self.session.platform.qbs
+        seeds: Dict[str, int] = {}
+        for grp in self.logical.groups:
+            w = qbs.convergence_width(grp.archetype)
+            if w is not None:
+                seeds[grp.archetype] = w
+        return seeds
+
+    def execute(self) -> Tuple[List[np.ndarray], EngineStats]:
+        lp = self.logical
+        p = self.session.platform
+        t0 = time.time()
+        results: List[Optional[np.ndarray]] = [None] * len(self.norm)
+        if lp.engine_idx:
+            eng_plan = EnginePlan(
+                device_loop=lp.device_loop, job_specs=lp.job_specs,
+                groups=lp.groups, seeds=self._seeds())
+            eng = self.session.engine()
+            rows, stats = eng.execute_batch(
+                [self.norm[i] for i in lp.engine_idx], plan=eng_plan)
+            for i, r in zip(lp.engine_idx, rows):
+                results[i] = r
+            for arch, width in stats.knn_group_widths:
+                p.qbs.record_convergence(arch, width)
+        else:
+            stats = EngineStats()
+        stats.queries = len(self.norm)  # incl. scalar fallbacks (their
+        for i in lp.scalar_idx:         # work is not in engine counters)
+            results[i] = p.execute(self.norm[i], record=False)[0]
+        stats.time_s = time.time() - t0
+        return results, stats  # type: ignore[return-value]
+
+    # ------------------------------------------------------------- explain
+    def explain(self) -> dict:
+        """Structured plan description (no execution): chosen path per
+        query, cache hit/miss, per-V.K group/archetype/beam seed, and
+        per-V.R pruned-tile estimates from the triangle bound."""
+        lp = self.logical
+        seeds = self._seeds()
+        eng = self.session.engine() if lp.engine_idx else None
+        job_of_group = {}
+        for gi, grp in enumerate(lp.groups):
+            for j in grp.jobs:
+                job_of_group[j] = gi
+        frags = []
+        for frag, q in zip(lp.fragments, self.norm):
+            knn = []
+            for slot in frag.job_slots:
+                gi = job_of_group[slot]
+                grp = lp.groups[gi]
+                attr, k, masked = lp.job_specs[slot]
+                knn.append({
+                    "attr": attr, "k": k, "masked": masked,
+                    "group": gi,
+                    "archetype": grp.archetype,
+                    "beam_seed": seeds.get(grp.archetype),
+                })
+            vr = []
+            if eng is not None and frag.path != "scalar":
+                for b in Q.basic_queries(q):
+                    if isinstance(b, Q.VR):
+                        survive, total = eng.vr_tile_estimate(b)
+                        vr.append({"attr": b.attr,
+                                   "tiles_surviving": survive,
+                                   "tiles_pruned": total - survive,
+                                   "tiles_total": total})
+            frags.append({"query": frag.signature, "path": frag.path,
+                          "knn": knn, "vr": vr})
+        return {
+            "cache": "hit" if self.cache_hit else "miss",
+            "device_loop": lp.device_loop,
+            "build_id": self.session.platform.build_id,
+            "n_queries": len(self.norm),
+            "n_engine": len(lp.engine_idx),
+            "n_scalar": len(lp.scalar_idx),
+            "knn_groups": [
+                {"attr": g.attr, "kmax": g.kmax, "jobs": len(g.jobs),
+                 "masked": g.n_masked, "archetype": g.archetype,
+                 "beam_seed": seeds.get(g.archetype)}
+                for g in lp.groups],
+            "fragments": frags,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+class Session:
+    """One planning/execution context over a prepared ``MQRLD`` platform.
+
+    Holds the plan cache (keyed on batch signature tuple + loop kind +
+    platform build id) and the engine configuration. Obtain via
+    ``MQRLD.session()``; a session stays valid across ``prepare()`` calls
+    (cached plans and device state are invalidated automatically through
+    the build id / engine rebuild)."""
+
+    def __init__(self, platform, *, interpret: bool = True,
+                 device_loop: bool = True, beam: int = 16,
+                 tile: int = 128):
+        self.platform = platform
+        self.interpret = interpret
+        self.device_loop = device_loop
+        self.beam = beam
+        self.tile = tile
+        self._cache: Dict[Tuple, LogicalPlan] = {}
+        self._cache_build = platform.build_id
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    def engine(self):
+        return self.platform.engine(interpret=self.interpret,
+                                    beam=self.beam, tile=self.tile)
+
+    # ---------------------------------------------------------------- plan
+    def plan(self, queries: Sequence[Q.Query], *,
+             device_loop: Optional[bool] = None) -> ExecutablePlan:
+        """Normalize + sign the batch, then return an ``ExecutablePlan``
+        — cached skeleton when this batch archetype was planned before
+        (same signatures, same loop kind, same index build)."""
+        norm = [Q.normalize(q) for q in queries]
+        dl = self.device_loop if device_loop is None else device_loop
+        if self._cache_build != self.platform.build_id:
+            # prepare() rebuilt the index: every cached plan is stale,
+            # and keeping dead-build entries would grow without bound
+            # in a long-lived serving process
+            self._cache.clear()
+            self._cache_build = self.platform.build_id
+        key = (tuple(Q.signature(q) for q in norm), dl,
+               self.platform.build_id)
+        logical = self._cache.get(key)
+        hit = logical is not None
+        if hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            logical = build_logical_plan(norm, dl)
+            self._cache[key] = logical
+        return ExecutablePlan(self, logical, queries, norm, hit)
+
+    # --------------------------------------------------------- conveniences
+    def execute(self, queries: Sequence[Q.Query], *,
+                device_loop: Optional[bool] = None
+                ) -> Tuple[List[np.ndarray], EngineStats]:
+        return self.plan(queries, device_loop=device_loop).execute()
+
+    def explain(self, queries: Sequence[Q.Query], *,
+                device_loop: Optional[bool] = None) -> dict:
+        return self.plan(queries, device_loop=device_loop).explain()

@@ -13,20 +13,35 @@ attribute and per-leaf [min, max] boxes per numeric attribute. The paper's
 performance claim — better layout => fewer buckets touched => faster —
 shows up as lower CBR, not as approximation error.
 
-Execution paths (scalar vs batched): ``execute`` is the paper-faithful
-scalar path — host-side tree walk per query, the only path that records
-QBS rows, per-query ``QueryStats`` and Algorithm-3 access counts.
-``execute_batch`` routes a batch of query trees through the device-resident
-``repro.core.engine.HybridEngine`` (vectorized leaf pruning, grouped
-predicate masks, masked KNN through the Pallas fused_topk kernel) and
-returns exactly the same rows per query; queries outside the engine's
-plannable fragment transparently fall back to the scalar path. The
-engine itself has two beam-loop implementations behind the
-``device_loop`` flag — the on-device ``lax.while_loop`` path with
-V.R routed through the tile beam (the serving default), and the
-host-driven doubling loop with dense V.R kept as the exactness oracle —
-see ``repro.core.engine``. All paths are exact; use the scalar one for
-QBS/stats parity and the batched one for serving throughput.
+MOAPI v2 (the query-plan API): batched execution goes through a planner —
+``MQRLD.session()`` returns a ``repro.core.planner.Session`` whose
+``plan(queries)`` canonicalizes the ASTs (``Q.normalize``), derives stable
+archetype signatures, chooses scalar / host-loop / device-loop per
+fragment, seeds KNN beam widths from QBS convergence statistics, and
+returns an ``ExecutablePlan`` with ``execute()`` and ``explain()``.
+Plans are cached per (batch signature, loop kind, index build id):
+repeated query *shapes* — serving templates differing only in constants —
+skip plannability analysis, job-layout derivation, and KNN grouping, and
+reuse the same compiled-shape universe. ``prepare()`` bumps ``build_id``,
+invalidating every cached plan along with the device state.
+
+Execution paths: ``execute`` is the paper-faithful scalar path —
+host-side tree walk per query, the only path that records QBS rows,
+per-query ``QueryStats`` and Algorithm-3 access counts. Engine fragments
+run on the device-resident ``repro.core.engine.HybridEngine``
+(vectorized leaf pruning, grouped predicate masks, masked KNN through
+the Pallas fused_topk kernel) and return exactly the same rows; queries
+outside the engine's plannable fragment transparently fall back to the
+scalar path. The engine keeps two beam-loop implementations — the
+on-device ``lax.while_loop`` path with V.R routed through the tile beam
+(the serving default), and the host-driven doubling loop with dense V.R
+kept as the exactness oracle. All paths are exact; use the scalar one
+for QBS/stats parity and a ``Session`` for serving throughput.
+
+Deprecated v1 surface: ``execute_batch`` (with its ``interpret`` /
+``device_loop`` flags) is kept as a thin shim over ``session()`` with
+identical results; new code should hold a ``Session`` and use
+``plan()/execute()/explain()``.
 """
 from __future__ import annotations
 
@@ -70,8 +85,10 @@ class MQRLD:
         self.meta: Optional[LeafMeta] = None
         self.enhanced: Optional[np.ndarray] = None
         self.seed = seed
+        self.build_id = 0  # bumped by prepare(); keys plan caches
         self._oracle_cache: Dict = {}
         self._engine = None
+        self._sessions: Dict = {}
 
     # ------------------------------------------------------------ build
     def prepare(self, columns: Optional[List[str]] = None, *,
@@ -116,6 +133,7 @@ class MQRLD:
         self._build_meta()
         self._oracle_cache.clear()
         self._engine = None  # device state is stale after a rebuild
+        self.build_id += 1   # cached ExecutablePlans are keyed on this
         return report
 
     def _build_meta(self):
@@ -304,10 +322,28 @@ class MQRLD:
             self._engine.device_loop = device_loop
         return self._engine
 
+    def session(self, *, interpret: bool = True,
+                device_loop: bool = True, beam: int = 16,
+                tile: int = 128):
+        """The MOAPI v2 entry point: a ``repro.core.planner.Session``
+        over this platform (cached per configuration). Use
+        ``session().plan(queries)`` for an ``ExecutablePlan`` with
+        ``execute()`` / ``explain()``; the session's plan cache
+        survives across batches and is invalidated by ``prepare()``
+        through ``build_id``."""
+        from repro.core.planner import Session
+        key = (interpret, device_loop, beam, tile)
+        if key not in self._sessions:
+            self._sessions[key] = Session(
+                self, interpret=interpret, device_loop=device_loop,
+                beam=beam, tile=tile)
+        return self._sessions[key]
+
     def execute_batch(self, queries: Sequence[Q.Query], *,
                       interpret: bool = True,
                       device_loop: bool = True):
-        """Execute a batch of rich hybrid queries on the batched engine.
+        """DEPRECATED v1 shim — ``session().plan(queries).execute()``
+        with identical results and stats.
 
         Returns (results, EngineStats): one row array per query, exactly
         the rows scalar ``execute`` returns (top-level V.K results are
@@ -316,25 +352,12 @@ class MQRLD:
         ``repro.core.engine.plannable``) fall back to the scalar path.
         ``device_loop=False`` routes V.K beams through the host-driven
         loop (the exactness oracle) instead of the on-device
-        ``lax.while_loop``. No QBS recording happens here — replay on
-        ``execute`` for that.
+        ``lax.while_loop``. No QBS *row* recording happens here (replay
+        on ``execute`` for that); KNN convergence widths are recorded
+        for query-aware beam seeding, like every planned execution.
         """
-        from repro.core.engine import EngineStats, plannable
-        eng = self.engine(interpret=interpret)
-        results: List[Optional[np.ndarray]] = [None] * len(queries)
-        planned = [i for i, q in enumerate(queries) if plannable(q)]
-        if planned:
-            rows, stats = eng.execute_batch([queries[i] for i in planned],
-                                            device_loop=device_loop)
-            for i, r in zip(planned, rows):
-                results[i] = r
-        else:
-            stats = EngineStats()
-        stats.queries = len(queries)  # incl. scalar fallbacks (whose work
-        for i, q in enumerate(queries):  # is not in the engine counters)
-            if results[i] is None:  # scalar fallback
-                results[i] = self.execute(q, record=False)[0]
-        return results, stats
+        return self.session(interpret=interpret).plan(
+            queries, device_loop=device_loop).execute()
 
     # ------------------------------------------------------------- oracle
     def oracle(self, query: Q.Query) -> np.ndarray:

@@ -4,10 +4,16 @@
 Every executed query appends a row:
   statement | object set | attributes | types | Recall@K | CBR | time | acc
 
-The table feeds three consumers:
+The table feeds four consumers:
   1. feature measurement (extrinsic S1 score, §5.1.2)
   2. hyperspace-transformation optimization objectives (§5.2.2 Step 4)
   3. index sibling-reordering (§6.2)
+  4. query-aware plan parameters (MOAPI v2): the batched engine records,
+     per KNN *archetype* (attr + k + masked/plain + loop kind), the beam
+     width at which its bound-ordered scan converged; ``Session.plan``
+     seeds the next plan's first-round width from ``convergence_width``
+     instead of the fixed default — Alg. 3's feedback loop applied to
+     execution parameters rather than tree order.
 """
 from __future__ import annotations
 
@@ -33,9 +39,15 @@ class QBSRow:
     ts: float = 0.0
 
 
+_CONVERGENCE_KEEP = 64  # recent widths kept per archetype (ring buffer)
+
+
 class QBSTable:
     def __init__(self, sample_rate: float = 1.0, seed: int = 0):
         self.rows: List[QBSRow] = []
+        # archetype -> recent converged beam widths (tiles), most recent
+        # last; bounded so a long-lived serving process tracks drift
+        self.convergence: Dict[str, List[int]] = {}
         self.sample_rate = sample_rate
         self._rng = np.random.default_rng(seed)
 
@@ -60,6 +72,26 @@ class QBSTable:
                      accuracy=float(accuracy), task=task, ts=time.time())
         self.rows.append(row)
         return row
+
+    # ------------------------------------------- plan-parameter feedback
+    def record_convergence(self, archetype: str, width: int):
+        """Record the beam width (in tiles) at which one executed KNN
+        group's bound-ordered scan converged."""
+        ws = self.convergence.setdefault(archetype, [])
+        ws.append(int(max(1, width)))
+        if len(ws) > _CONVERGENCE_KEEP:
+            del ws[:len(ws) - _CONVERGENCE_KEEP]
+
+    def convergence_width(self, archetype: str,
+                          default: Optional[int] = None) -> Optional[int]:
+        """Suggested first-round beam width for an archetype: the p90 of
+        recorded converged widths (conservative — seeding short of the
+        true width only moves work into straggler rounds, never breaks
+        exactness). ``default`` when the archetype was never seen."""
+        ws = self.convergence.get(archetype)
+        if not ws:
+            return default
+        return int(np.ceil(np.quantile(np.asarray(ws, np.float64), 0.9)))
 
     # ------------------------------------------------------------ consumers
     def extrinsic_score(self, task: Optional[str] = None,
@@ -92,14 +124,21 @@ class QBSTable:
     # ---------------------------------------------------------- persistence
     def save(self, path: str):
         with open(path, "w") as f:
-            json.dump([asdict(r) for r in self.rows], f, indent=1)
+            json.dump({"rows": [asdict(r) for r in self.rows],
+                       "convergence": self.convergence}, f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "QBSTable":
         t = cls()
         with open(path) as f:
-            for r in json.load(f):
-                t.rows.append(QBSRow(**r))
+            data = json.load(f)
+        if isinstance(data, list):  # legacy format: bare row list
+            rows, conv = data, {}
+        else:
+            rows, conv = data["rows"], data.get("convergence", {})
+        for r in rows:
+            t.rows.append(QBSRow(**r))
+        t.convergence = {k: [int(w) for w in v] for k, v in conv.items()}
         return t
 
 

@@ -10,10 +10,27 @@ Semantics (result = set of row indices):
   * V.K returns the k nearest rows *among the candidate set implied by the
     sibling predicates under an intersection* (post-filter semantics — this
     is what "top-k products under $20" means); under a union it is the
-    global top-k.
+    global top-k. ``normalize`` makes that implicit rule explicit: it
+    stamps every V.K node's ``postfilter`` attribute (None = not yet
+    normalized) so downstream planning never re-derives it from context.
 
-``execute_bruteforce`` is the exact oracle used by tests/benchmarks;
-``Platform.execute`` (core/platform.py) routes through the learned index.
+Execution (MOAPI v2): the query AST is *declarative* — callers hand trees
+to ``MQRLD.session().plan(queries)`` (core/planner.py), which canonicalizes
+them here (``normalize``: flatten VK-free nested And / nested Or, dedupe
+parts where idempotence holds, annotate V.K postfilter), derives a stable
+``signature`` (the *archetype*: shape + types + attrs + k, constants
+elided) used as the plan-cache key, and compiles an ``ExecutablePlan``.
+``execute_bruteforce`` below is the exact oracle used by tests/benchmarks;
+the scalar learned-index walk lives in ``MQRLD.execute``
+(core/platform.py), the batched device path in core/engine.py.
+
+Normalization is semantics-preserving for EVERY tree, including the
+scalar executor's order-dependent corner (a V.K inside a combiner that
+is itself a sibling of other And parts): flattening stops at And
+children that contain a V.K, single-part collapse applies to VK-free
+parts only (set-valued, so row order is unaffected), and And-part
+dedupe skips VK-containing combiner children (their second evaluation
+sees a different threaded mask and is NOT idempotent).
 """
 from __future__ import annotations
 
@@ -47,6 +64,11 @@ class VK:
     attr: str
     query: tuple   # query vector (hashable: tuple of floats)
     k: int
+    # post-filter semantics, made explicit by ``normalize``: True = top-k
+    # among the candidate set of sibling predicates (direct child of an
+    # And that has predicate parts), False = global top-k (top level,
+    # under Or, or an And with no predicate parts), None = unnormalized.
+    postfilter: Optional[bool] = None
 
     @staticmethod
     def of(attr, vec, k):
@@ -106,6 +128,87 @@ def query_types(q: Query) -> List[str]:
 
 def query_attrs(q: Query) -> List[str]:
     return sorted({b.attr for b in basic_queries(q)})
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization (MOAPI v2 planner front end)
+# ---------------------------------------------------------------------------
+def _contains_vk(q: Query) -> bool:
+    return any(isinstance(b, VK) for b in basic_queries(q))
+
+
+def normalize(q: Query) -> Query:
+    """Canonical, semantics-preserving form of a rich hybrid query.
+
+    * nested combiners are flattened into their parent (And-in-And only
+      when the child is VK-free — an inner And(pred, VK) scopes its V.K
+      to the inner candidate set and must keep its own node; Or-in-Or
+      always, unions are associative for every node type);
+    * duplicate parts are removed where evaluation is idempotent: all Or
+      parts, and And parts that are predicates or direct V.K children
+      (VK-containing combiner children of an And see a threaded mask in
+      the scalar executor, so their duplicates are kept);
+    * single-part combiners collapse when the part is VK-free (VK parts
+      keep their wrapper: And(VK)/Or(VK) return ascending row-id sets
+      while a top-level VK is distance-ordered);
+    * every V.K gets its ``postfilter`` attribute stamped (True iff it is
+      a direct child of an And that has at least one non-VK part).
+
+    Idempotent: ``normalize(normalize(q)) == normalize(q)``.
+    """
+    if isinstance(q, (NE, NR, VR)):
+        return q
+    if isinstance(q, VK):
+        # bare / under-Or context: global top-k
+        return q if q.postfilter is False \
+            else VK(q.attr, q.query, q.k, False)
+    if isinstance(q, (And, Or)):
+        is_and = isinstance(q, And)
+        parts: List[Query] = []
+        for p in q.parts:
+            p = normalize(p)
+            if is_and and isinstance(p, And) and not _contains_vk(p):
+                parts.extend(p.parts)
+            elif not is_and and isinstance(p, Or):
+                parts.extend(p.parts)
+            else:
+                parts.append(p)
+        seen, ded = set(), []
+        for p in parts:
+            dedupable = (not is_and or isinstance(p, (NE, NR, VR, VK))
+                         or not _contains_vk(p))
+            if dedupable and p in seen:
+                continue
+            seen.add(p)
+            ded.append(p)
+        if len(ded) == 1 and not _contains_vk(ded[0]):
+            return ded[0]
+        if is_and and any(not isinstance(p, VK) for p in ded):
+            ded = [VK(p.attr, p.query, p.k, True) if isinstance(p, VK)
+                   and p.postfilter is not True else p for p in ded]
+        return And(tuple(ded)) if is_and else Or(tuple(ded))
+    raise TypeError(q)
+
+
+def signature(q: Query) -> str:
+    """Stable archetype signature of a (normalized) query: tree shape,
+    node types, attributes, k, and V.K postfilter context — constants
+    (values, bounds, query vectors, radii) elided. Two queries with equal
+    signatures share grouping structure, job layout, and execution path,
+    which is what the Session plan cache keys on."""
+    if isinstance(q, NE):
+        return f"NE:{q.attr}"
+    if isinstance(q, NR):
+        return f"NR:{q.attr}"
+    if isinstance(q, VR):
+        return f"VR:{q.attr}"
+    if isinstance(q, VK):
+        ctx = {True: "post", False: "global", None: "?"}[q.postfilter]
+        return f"VK:{q.attr}:k{q.k}:{ctx}"
+    if isinstance(q, (And, Or)):
+        name = "And" if isinstance(q, And) else "Or"
+        return f"{name}({','.join(signature(p) for p in q.parts)})"
+    raise TypeError(q)
 
 
 # ---------------------------------------------------------------------------

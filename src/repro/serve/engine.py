@@ -10,8 +10,12 @@ replacement worker resumes from the request queue with no handoff.
 pads a batch of token prompts into one embedding forward pass, turns each
 request into a MOAPI query (V.K, optionally And-ed with a caller-supplied
 predicate tree), and executes the whole batch through the platform's
-device-resident hybrid engine (``MQRLD.execute_batch``) — one compiled
-path from request queue to Pallas kernels.
+planned path (``MQRLD.session().plan(...).execute()``) — one compiled
+path from request queue to Pallas kernels, with the Session's plan cache
+amortizing planning across batches of the same request shape. Requests
+can also be enqueued asynchronously: ``submit()`` returns a
+``RetrievalFuture`` and batches flush either when ``batch_size`` requests
+are pending or on ``flush()`` / ``result()``.
 """
 from __future__ import annotations
 
@@ -142,14 +146,48 @@ class RetrievalResult:
     query: Q.Query                       # the MOAPI query that was run
 
 
-class RetrievalServer:
-    """Batched retrieval serving over a prepared ``MQRLD`` platform.
+class RetrievalFuture:
+    """Handle for one submitted retrieval request. ``result()`` blocks
+    only in the sense that it flushes the server's pending batch when
+    this request has not run yet — execution is synchronous batched
+    compute, not threads; the future exists so callers can enqueue
+    requests as they arrive and let the server pick the batch boundary."""
 
-    Each ``serve`` call is two compiled stages: one padded embedding
-    forward pass for all prompts, then one ``execute_batch`` through the
-    hybrid engine for all queries. Prompts are right-padded with
-    ``pad_token`` to the batch max length (mean-pooled embeddings shift
-    slightly versus unpadded prompts; real deployments bucket by length).
+    def __init__(self, server: "RetrievalServer"):
+        self._server = server
+        self._result: Optional[RetrievalResult] = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> RetrievalResult:
+        if not self._done:
+            self._server.flush()
+        if not self._done or self._result is None:
+            raise RuntimeError(
+                "retrieval future did not resolve: its batch failed "
+                "before results were set (the request is still pending "
+                "and will be retried by the next flush)")
+        return self._result
+
+    def _set(self, res: RetrievalResult):
+        self._result = res
+        self._done = True
+
+
+class RetrievalServer:
+    """Batched retrieval serving over a prepared ``MQRLD`` platform,
+    running on the MOAPI v2 planned path.
+
+    Each flushed batch is two compiled stages: one padded embedding
+    forward pass for all prompts, then one ``Session.plan(...).execute()``
+    for all queries — the session's plan cache means a steady stream of
+    same-shaped requests plans once and executes many times, with KNN
+    beam widths seeded from QBS convergence stats. Prompts are
+    right-padded with ``pad_token`` to the batch max length (mean-pooled
+    embeddings shift slightly versus unpadded prompts; real deployments
+    bucket by length).
 
     ``project`` maps the embedder's output onto the searched vector
     column's space (identity by default) — the supported hook when the
@@ -157,16 +195,22 @@ class RetrievalServer:
 
     ``device_loop`` picks the engine's KNN beam-loop implementation
     (True = on-device ``lax.while_loop``, the serving default; False =
-    the host-driven exactness oracle) and is forwarded to
-    ``MQRLD.execute_batch`` unchanged.
+    the host-driven exactness oracle); it configures the server's
+    ``Session``.
+
+    Async surface: ``submit(request)`` enqueues and returns a
+    ``RetrievalFuture``; a batch flushes automatically once
+    ``batch_size`` requests are pending, explicitly via ``flush()``, or
+    lazily when a future's ``result()`` is read. ``serve`` is
+    submit-all + flush + gather.
 
     Ordering contract: results come back in SUBMISSION order — one
     ``RetrievalResult`` per request, positionally — regardless of how
     the planner groups, reorders, or scalar-fallbacks queries inside
-    ``execute_batch``. Within each result, rows are ALWAYS
-    distance-ordered: ``execute_batch`` returns filtered-KNN (And)
-    results as ascending row ids, so ``serve`` re-ranks them by
-    distance to the request embedding before returning.
+    the engine. Within each result, rows are ALWAYS distance-ordered:
+    the planned path returns filtered-KNN (And) results as ascending
+    row ids, so the server re-ranks them by distance to the request
+    embedding before returning.
     """
 
     def __init__(self, platform, embedder: EmbeddingServer, *,
@@ -178,6 +222,8 @@ class RetrievalServer:
         self.pad_token = pad_token
         self.project = project
         self.device_loop = device_loop
+        self.session = platform.session(device_loop=device_loop)
+        self._pending: List[tuple] = []   # (request, future) FIFO
 
     def _queries(self, reqs: Sequence[RetrievalRequest],
                  emb: np.ndarray) -> List[Q.Query]:
@@ -196,22 +242,50 @@ class RetrievalServer:
         d2 = ((col - emb[None, :]) ** 2).sum(1)
         return rows[np.argsort(d2, kind="stable")]
 
+    # ------------------------------------------------------------- async
+    def submit(self, request: RetrievalRequest) -> RetrievalFuture:
+        """Enqueue one request; flushes a batch once ``batch_size`` are
+        pending. The returned future resolves on that flush (or on an
+        explicit ``flush()`` / its own ``result()``)."""
+        fut = RetrievalFuture(self)
+        self._pending.append((request, fut))
+        if len(self._pending) >= self.batch_size:
+            self.flush()
+        return fut
+
+    def result(self, future: RetrievalFuture) -> RetrievalResult:
+        """Resolve a future (flushing pending work if needed)."""
+        return future.result()
+
+    def flush(self):
+        """Run every pending request, in ``batch_size`` chunks. A chunk
+        is dequeued only after it executed: if the embedder or engine
+        raises, the exception propagates but the chunk's requests stay
+        pending (their futures unresolved) and the next flush retries
+        them instead of silently dropping them."""
+        while self._pending:
+            self._run_chunk(self._pending[:self.batch_size])
+            del self._pending[:self.batch_size]
+
+    def _run_chunk(self, chunk: Sequence[tuple]):
+        reqs = [r for r, _ in chunk]
+        plen = max(len(r.tokens) for r in reqs)
+        toks = np.full((len(reqs), plen), self.pad_token, np.int32)
+        for j, r in enumerate(reqs):
+            toks[j, :len(r.tokens)] = r.tokens
+        emb = self.embedder.embed(toks)
+        if self.project is not None:
+            emb = np.asarray(self.project(emb))
+        queries = self._queries(reqs, emb)
+        rows, _ = self.session.plan(
+            queries, device_loop=self.device_loop).execute()
+        for (req, fut), e, r, q in zip(chunk, emb, rows, queries):
+            fut._set(RetrievalResult(rows=self._ranked(req, e, r),
+                                     query=q))
+
+    # ------------------------------------------------------------- sync
     def serve(self, requests: Sequence[RetrievalRequest]
               ) -> List[RetrievalResult]:
-        results: List[RetrievalResult] = []
-        for i in range(0, len(requests), self.batch_size):
-            chunk = requests[i:i + self.batch_size]
-            plen = max(len(r.tokens) for r in chunk)
-            toks = np.full((len(chunk), plen), self.pad_token, np.int32)
-            for j, r in enumerate(chunk):
-                toks[j, :len(r.tokens)] = r.tokens
-            emb = self.embedder.embed(toks)
-            if self.project is not None:
-                emb = np.asarray(self.project(emb))
-            queries = self._queries(chunk, emb)
-            rows, _ = self.platform.execute_batch(
-                queries, device_loop=self.device_loop)
-            results.extend(
-                RetrievalResult(rows=self._ranked(req, e, r), query=q)
-                for req, e, r, q in zip(chunk, emb, rows, queries))
-        return results
+        futures = [self.submit(r) for r in requests]
+        self.flush()
+        return [f.result() for f in futures]

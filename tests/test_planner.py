@@ -1,0 +1,407 @@
+"""MOAPI v2 planner: Q.normalize semantics, archetype signatures, the
+Session plan cache (hit/miss keying incl. rebuild invalidation), EXPLAIN
+structure, QBS-driven beam seeding, shim equivalence, the async
+RetrievalServer futures, and a seeded fuzz suite — 200 random plannable
+hybrid batches through ``Session.plan().execute()`` must equal the
+brute-force oracle exactly."""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.engine import knn_archetype, plannable
+from repro.core.lake import MMOTable
+from repro.core.planner import Session, build_logical_plan
+from repro.core.platform import MQRLD
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+
+@pytest.fixture(scope="module")
+def platform():
+    rng = np.random.default_rng(21)
+    n = 900
+    centers = rng.normal(size=(5, 8)).astype(np.float32) * 5
+    lab = rng.integers(0, 5, n)
+    img = (centers[lab] + rng.normal(size=(n, 8))).astype(np.float32)
+    audio = rng.normal(size=(n, 5)).astype(np.float32) * 2
+    t = (MMOTable("plan")
+         .add_vector("img", img)
+         .add_vector("audio", audio)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32))
+         .add_numeric("stock", rng.integers(0, 50, n).astype(np.float32)))
+    p = MQRLD(t, seed=4)
+    p.prepare(min_leaf=8, max_leaf=64, dpc_max_clusters=5)
+    return p
+
+
+def _sorted(rows):
+    return np.sort(np.asarray(rows, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# normalize: canonicalization rules
+# ---------------------------------------------------------------------------
+def test_normalize_flattens_and_dedupes():
+    a, b, c = Q.NR("p", 0, 1), Q.NR("p", 2, 3), Q.NE("q", 5.0)
+    nq = Q.normalize(Q.And.of(Q.And.of(a, b), c, a))
+    assert nq == Q.And.of(a, b, c)          # flattened + deduped
+    nq = Q.normalize(Q.Or.of(Q.Or.of(a, b), Q.Or.of(b, c)))
+    assert nq == Q.Or.of(a, b, c)
+    # single VK-free part collapses
+    assert Q.normalize(Q.And.of(a)) == a
+    assert Q.normalize(Q.Or.of(Q.Or.of(a))) == a
+
+
+def test_normalize_vk_postfilter_annotation():
+    vk = Q.VK.of("v", [1.0, 2.0], 5)
+    assert vk.postfilter is None            # unnormalized
+    top = Q.normalize(vk)
+    assert top.postfilter is False          # global top-k
+    under_and = Q.normalize(Q.And.of(Q.NR("p", 0, 1), vk))
+    assert under_and.parts[1].postfilter is True
+    under_or = Q.normalize(Q.Or.of(vk, Q.NR("p", 0, 1)))
+    assert under_or.parts[0].postfilter is False
+    # And with only VK parts has no candidate set: stays global
+    vk2 = Q.VK.of("v", [3.0, 4.0], 2)
+    both = Q.normalize(Q.And.of(vk, vk2))
+    assert all(p.postfilter is False for p in both.parts)
+
+
+def test_normalize_keeps_vk_scoping():
+    """An inner And(pred, VK) scopes its V.K to the inner candidate set:
+    it must NOT be flattened into the outer And, and a VK-containing
+    single part must not collapse (order contract: And/Or results are
+    ascending ids, top-level VK is distance-ordered)."""
+    vk = Q.VK.of("v", [1.0, 0.0], 3)
+    inner = Q.And.of(Q.NR("p", 0, 1), vk)
+    nq = Q.normalize(Q.And.of(inner, Q.NR("p", 2, 3)))
+    assert isinstance(nq.parts[0], Q.And)   # inner And kept
+    single = Q.normalize(Q.And.of(vk))
+    assert isinstance(single, Q.And)        # no VK collapse
+    # duplicate VK-containing combiner children of an And are kept: the
+    # scalar executor threads masks, so their evaluation is not idempotent
+    dup = Q.And(parts=(inner, inner))
+    assert len(Q.normalize(dup).parts) == 2
+
+
+def test_normalize_idempotent_and_semantics_preserving(platform):
+    p = platform
+    rng = np.random.default_rng(5)
+    for _ in range(40):
+        q = _rand_query(rng, p.table)
+        nq = Q.normalize(q)
+        assert Q.normalize(nq) == nq
+        assert _sorted(Q.execute_bruteforce(p.table, q)).tolist() == \
+            _sorted(Q.execute_bruteforce(p.table, nq)).tolist(), q
+        # scalar path too (covers the order-dependent corner)
+        assert _sorted(p.execute(q, record=False)[0]).tolist() == \
+            _sorted(p.execute(nq, record=False)[0]).tolist(), q
+
+
+def test_signature_stable_under_constants():
+    v1, v2 = [1.0, 2.0], [9.0, -3.0]
+    a = Q.normalize(Q.And.of(Q.NR("p", 0, 1), Q.VK.of("v", v1, 5)))
+    b = Q.normalize(Q.And.of(Q.NR("p", 40, 90), Q.VK.of("v", v2, 5)))
+    assert Q.signature(a) == Q.signature(b)
+    c = Q.normalize(Q.And.of(Q.NR("p", 0, 1), Q.VK.of("v", v1, 6)))
+    assert Q.signature(a) != Q.signature(c)   # k is part of the archetype
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def _template_batch(p, seed):
+    rng = np.random.default_rng(seed)
+    col = p.table.vector["img"]
+    v = col[rng.integers(0, len(col))]
+    lo = float(rng.uniform(0, 50))
+    return [
+        Q.VK.of("img", v, 7),
+        Q.And.of(Q.NR("price", lo, lo + 30), Q.VK.of("img", v, 5)),
+        Q.VR.of("img", v, float(rng.uniform(2, 4))),
+    ]
+
+
+def test_plan_cache_hit_on_same_archetype(platform):
+    sess = Session(platform, interpret=True)
+    p1 = sess.plan(_template_batch(platform, 1))
+    assert not p1.cache_hit
+    # same shapes, different constants -> hit
+    p2 = sess.plan(_template_batch(platform, 2))
+    assert p2.cache_hit
+    assert p2.logical is p1.logical
+    assert sess.cache_hits == 1 and sess.cache_misses == 1
+    # different k -> different archetype -> miss
+    p3 = sess.plan([Q.VK.of("img", platform.table.vector["img"][0], 9)])
+    assert not p3.cache_hit
+    # loop kind is part of the key
+    p4 = sess.plan(_template_batch(platform, 3), device_loop=False)
+    assert not p4.cache_hit
+    # cached plans still execute correctly
+    for pl in (p2, p4):
+        res, _ = pl.execute()
+        for q, rows in zip(pl.queries, res):
+            assert _sorted(rows).tolist() == \
+                _sorted(platform.oracle(q)).tolist(), q
+
+
+def test_plan_cache_invalidated_by_prepare():
+    rng = np.random.default_rng(9)
+    vec = rng.normal(size=(400, 6)).astype(np.float32)
+    p = MQRLD(MMOTable("t").add_vector("v", vec), seed=1)
+    p.prepare(min_leaf=8, max_leaf=64)
+    sess = p.session()
+    q = [Q.VK.of("v", vec[0], 5)]
+    assert not sess.plan(q).cache_hit
+    assert sess.plan(q).cache_hit
+    p.prepare(min_leaf=8, max_leaf=128)   # rebuild bumps build_id
+    pl = sess.plan(q)
+    assert not pl.cache_hit
+    (rows,), _ = pl.execute()
+    assert _sorted(rows).tolist() == _sorted(p.oracle(q[0])).tolist()
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN
+# ---------------------------------------------------------------------------
+def test_explain_structure(platform):
+    sess = Session(platform, interpret=True)
+    v = platform.table.vector["img"][17]
+    batch = [
+        Q.And.of(Q.NR("price", 10, 60), Q.VK.of("img", v, 6)),
+        Q.VR.of("img", v, 3.0),
+        # unplannable -> scalar fragment
+        Q.And.of(Q.Or.of(Q.VK.of("img", v, 4), Q.NR("price", 0, 1)),
+                 Q.NR("price", 0, 60)),
+    ]
+    ex = sess.plan(batch).explain()
+    assert ex["cache"] == "miss"
+    assert ex["n_queries"] == 3
+    assert ex["n_engine"] == 2 and ex["n_scalar"] == 1
+    paths = [f["path"] for f in ex["fragments"]]
+    assert paths == ["device-loop", "device-loop", "scalar"]
+    # every fragment reports its signature and per-VK seed slot
+    knn = ex["fragments"][0]["knn"]
+    assert len(knn) == 1
+    assert knn[0]["attr"] == "img" and knn[0]["k"] == 6
+    assert knn[0]["masked"] is True
+    assert knn[0]["archetype"] == knn_archetype("img", 6, True, True)
+    assert "beam_seed" in knn[0]
+    # V.R fragments report triangle-bound pruning estimates
+    vr = ex["fragments"][1]["vr"]
+    assert vr and vr[0]["tiles_total"] == \
+        vr[0]["tiles_surviving"] + vr[0]["tiles_pruned"]
+    assert ex["knn_groups"] and ex["knn_groups"][0]["jobs"] == 1
+    # warm explain flips the cache flag
+    assert sess.plan(batch).explain()["cache"] == "hit"
+
+
+# ---------------------------------------------------------------------------
+# QBS-driven beam seeding
+# ---------------------------------------------------------------------------
+def test_convergence_recorded_and_seeded():
+    rng = np.random.default_rng(13)
+    n = 1500
+    centers = rng.normal(size=(6, 8)).astype(np.float32) * 6
+    lab = rng.integers(0, 6, n)
+    vec = (centers[lab] + rng.normal(size=(n, 8))).astype(np.float32)
+    p = MQRLD(MMOTable("cv").add_vector("v", vec), seed=2)
+    p.prepare(min_leaf=16, max_leaf=128)
+    sess = p.session()
+    batch = [Q.VK.of("v", vec[i], 5) for i in (3, 44, 301)]
+    pl = sess.plan(batch)
+    arch = knn_archetype("v", 5, False, True)
+    assert pl.explain()["knn_groups"][0]["beam_seed"] is None  # cold
+    res1, stats = pl.execute()
+    assert stats.knn_group_widths and stats.knn_group_widths[0][0] == arch
+    assert p.qbs.convergence[arch]  # recorded
+    seed = p.qbs.convergence_width(arch)
+    assert seed is not None and seed >= 1
+    pl2 = sess.plan(batch)
+    assert pl2.cache_hit
+    assert pl2.explain()["knn_groups"][0]["beam_seed"] == seed
+    res2, _ = pl2.execute()   # seeded run stays exact
+    for q, a, b in zip(batch, res1, res2):
+        assert np.array_equal(a, b), q
+        assert _sorted(a).tolist() == _sorted(p.oracle(q)).tolist()
+
+
+def test_qbs_convergence_persistence_roundtrip(tmp_path):
+    from repro.core.qbs import QBSTable
+    t = QBSTable()
+    t.record_convergence("VK:v:k5:plain:dl", 12)
+    t.record_convergence("VK:v:k5:plain:dl", 20)
+    path = str(tmp_path / "qbs.json")
+    t.save(path)
+    back = QBSTable.load(path)
+    assert back.convergence == {"VK:v:k5:plain:dl": [12, 20]}
+    assert back.convergence_width("VK:v:k5:plain:dl") >= 12
+    assert back.convergence_width("unseen") is None
+
+
+# ---------------------------------------------------------------------------
+# shim equivalence + fuzz parity vs the brute-force oracle
+# ---------------------------------------------------------------------------
+def _rand_basic(rng, tab, allow_vk=True):
+    kind = rng.integers(0, 4 if allow_vk else 3)
+    if kind == 0:
+        attr = ("price", "stock")[rng.integers(0, 2)]
+        col = tab.numeric[attr]
+        v = float(col[rng.integers(0, len(col))])
+        return Q.NE(attr, v, float(rng.choice([1e-6, 0.5, 5.0])))
+    if kind == 1:
+        attr = ("price", "stock")[rng.integers(0, 2)]
+        lo = float(rng.uniform(-10, 100))
+        return Q.NR(attr, lo, lo + float(rng.uniform(0, 60)))
+    attr = ("img", "audio")[rng.integers(0, 2)]
+    col = tab.vector[attr]
+    v = col[rng.integers(0, len(col))] + \
+        rng.normal(size=col.shape[1]).astype(np.float32) \
+        * float(rng.uniform(0, 0.5))
+    if kind == 2:
+        anchor = col[rng.integers(0, len(col))]
+        r = float(np.sqrt(((anchor - v) ** 2).sum()) * rng.uniform(0.3, 1.5))
+        return Q.VR.of(attr, v, max(r, 1e-3))
+    return Q.VK.of(attr, v, int(rng.choice((1, 5, 17))))
+
+
+def _rand_query(rng, tab, depth=2):
+    if depth == 0 or rng.random() < 0.45:
+        return _rand_basic(rng, tab)
+    parts = tuple(_rand_query(rng, tab, depth - 1)
+                  for _ in range(rng.integers(2, 4)))
+    return Q.And(parts) if rng.random() < 0.5 else Q.Or(parts)
+
+
+def _rand_plannable(rng, tab):
+    while True:
+        q = _rand_query(rng, tab)
+        if plannable(Q.normalize(q)):
+            return q
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_session_matches_bruteforce(platform, seed):
+    """The acceptance bar: 8 seeds x 25 = 200 random plannable hybrid
+    batches through ``Session.plan().execute()`` equal the brute-force
+    oracle exactly (sorted row arrays, not just sets)."""
+    p = platform
+    sess = p.session()
+    rng = np.random.default_rng(3000 + seed)
+    for _ in range(25):
+        batch = [_rand_plannable(rng, p.table) for _ in range(3)]
+        got, _ = sess.plan(batch).execute()
+        for q, rows in zip(batch, got):
+            want = Q.execute_bruteforce(p.table, q)
+            assert _sorted(rows).tolist() == _sorted(want).tolist(), q
+
+
+def test_fuzz_explain_covers_every_fragment(platform):
+    """explain() reports a path for every fragment and a beam-seed slot
+    for every V.K job, on arbitrary (incl. unplannable) batches."""
+    p = platform
+    sess = p.session()
+    rng = np.random.default_rng(99)
+    for _ in range(10):
+        batch = [_rand_query(rng, p.table) for _ in range(3)]
+        ex = sess.plan(batch).explain()
+        assert len(ex["fragments"]) == len(batch)
+        for frag in ex["fragments"]:
+            assert frag["path"] in ("device-loop", "host-loop", "scalar")
+            for j in frag["knn"]:
+                assert "beam_seed" in j and "archetype" in j
+
+
+def test_execute_batch_is_session_shim(platform):
+    """The deprecated v1 entry point returns exactly what the session
+    returns (results and stats.queries contract)."""
+    p = platform
+    rng = np.random.default_rng(55)
+    batch = [_rand_query(rng, p.table) for _ in range(6)]
+    shim, shim_stats = p.execute_batch(batch)
+    sess_res, _ = p.session().plan(batch).execute()
+    assert shim_stats.queries == len(batch)
+    for q, a, b in zip(batch, shim, sess_res):
+        assert _sorted(a).tolist() == _sorted(b).tolist(), q
+
+
+# ---------------------------------------------------------------------------
+# async retrieval serving over the planned path
+# ---------------------------------------------------------------------------
+class _StubEmbedder:
+    def __init__(self, table):
+        self.table = table
+
+    def embed(self, tokens):
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["img"][rows] + 0.01
+
+
+def test_retrieval_server_futures(platform):
+    p = platform
+    server = RetrievalServer(p, _StubEmbedder(p.table), batch_size=3)
+    reqs = [RetrievalRequest(tokens=np.asarray([i, 1], np.int32),
+                             attr="img", k=4 + i % 3,
+                             predicate=Q.NR("price", 5, 95))
+            for i in range(7)]
+    futs = [server.submit(r) for r in reqs]
+    # batch_size=3: two full batches auto-flushed, one request pending
+    assert [f.done() for f in futs] == [True] * 6 + [False]
+    # reading the pending future flushes the tail
+    res_last = futs[-1].result()
+    assert futs[-1].done()
+    results = [server.result(f) for f in futs]
+    assert results[-1] is res_last
+    # parity with the sync path, positionally
+    sync = RetrievalServer(p, _StubEmbedder(p.table), batch_size=3) \
+        .serve(reqs)
+    for i, (req, a, b) in enumerate(zip(reqs, results, sync)):
+        assert np.array_equal(a.rows, b.rows), i
+        assert _sorted(a.rows).tolist() == \
+            _sorted(p.oracle(a.query)).tolist(), i
+
+
+def test_retrieval_server_failed_flush_keeps_requests(platform):
+    """A flush that raises leaves its chunk pending (futures unresolved)
+    instead of silently dropping the requests; the next flush retries."""
+    class _FlakyEmbedder(_StubEmbedder):
+        def __init__(self, table):
+            super().__init__(table)
+            self.fail = True
+
+        def embed(self, tokens):
+            if self.fail:
+                self.fail = False
+                raise RuntimeError("transient embedder failure")
+            return super().embed(tokens)
+
+    p = platform
+    server = RetrievalServer(p, _FlakyEmbedder(p.table), batch_size=4)
+    fut = server.submit(RetrievalRequest(
+        tokens=np.asarray([5, 1], np.int32), attr="img", k=3))
+    with pytest.raises(RuntimeError, match="transient"):
+        server.flush()
+    assert not fut.done()          # not resolved, not dropped
+    res = fut.result()             # result() flushes again -> retry works
+    assert fut.done() and len(res.rows) == 3
+    assert _sorted(res.rows).tolist() == \
+        _sorted(p.oracle(res.query)).tolist()
+
+
+def test_logical_plan_groups_match_engine(platform):
+    """The planner's cached grouping is byte-identical to what the
+    engine would derive per batch (walk order, masked-first, kmax)."""
+    p = platform
+    eng = p.engine()
+    rng = np.random.default_rng(31)
+    from repro.core.engine import EngineStats
+    for _ in range(10):
+        batch = [Q.normalize(_rand_plannable(rng, p.table))
+                 for _ in range(4)]
+        lp = build_logical_plan(batch, True)
+        pred = eng._predicate_masks(batch, EngineStats())
+        jobs, ctr = [], [0]
+        for q in batch:
+            eng._walk(q, None, pred, jobs, None, ctr)
+        got = tuple((vk.attr, vk.k, m is not None) for vk, m in jobs)
+        assert got == lp.job_specs
+        assert tuple(eng._group_jobs(jobs, True)) == lp.groups
