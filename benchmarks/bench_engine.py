@@ -18,6 +18,11 @@ first QBS lookup) versus plan-cache-warm (same batch archetype replanned
 through the cached LogicalPlan) QPS, with the warm bar required to be
 >= the deprecated ``execute_batch`` shim's QPS.
 
+Async ingest (ISSUE 4): QPS on the planned device path with 0% / 10% /
+50% un-folded delta rows (acceptance: 10% delta >= 0.8x the folded
+QPS), plus append latency, ``fold()`` latency, and a cold
+``prepare()`` of base+delta for comparison (fold must be cheaper).
+
 ``--smoke`` (also via ``benchmarks.run --smoke``): toy n / batch,
 repeat=1 — keeps this module executed in CI.
 """
@@ -174,6 +179,71 @@ def run(csv: Csv):
     csv.add("engine/session_warm_per_query", us(t_warm_exec / len(queries)),
             f"qps={qps_warm:.0f} exact={warm_exact} "
             f"warm_vs_execute_batch={qps_warm / max(qps_dev, 1e-12):.2f}x")
+
+    # ---- async ingest: un-folded delta QPS + fold vs cold prepare --------
+    # QPS on the planned device path with 0% / 10% / 50% of the table
+    # sitting un-folded in the delta region (the engine unions delta
+    # tiles into every beam round), then fold() versus a cold prepare()
+    # of base+delta. Every measured batch is oracle-checked over the
+    # base+delta view.
+    rng = np.random.default_rng(7)
+    # same mixture as _platform (seed 0 draws its centers first): the
+    # ingest stream continues the base distribution, so the delta rows
+    # land where the learned layout expects data
+    centers = np.random.default_rng(0).normal(
+        size=(12, 32)).astype(np.float32) * 6
+
+    def _delta_rows(m):
+        cat = rng.integers(0, 12, m)
+        return {"v": (centers[cat]
+                      + rng.normal(size=(m, 32))).astype(np.float32)}, \
+               {"price": rng.uniform(0, 100, m).astype(np.float32)}
+
+    def _ingest_qps():
+        sess.plan(queries).execute()          # warm the union shapes
+        t, rows = timeit(lambda: sess.plan(queries).execute()[0],
+                         repeat=3)
+        view = p.view()
+        ok = all(set(np.asarray(r).tolist())
+                 == set(np.asarray(Q.execute_bruteforce(
+                     view, Q.normalize(q))).tolist())
+                 for r, q in zip(rows, queries))
+        return len(queries) / t, ok
+
+    qps_d0, ok0 = _ingest_qps()
+    vec10, num10 = _delta_rows(max(1, n // 10))
+    t_append, _ = timeit(
+        lambda: p.append(numeric=num10, vector=vec10, fold=False),
+        repeat=1)
+    qps_d10, ok10 = _ingest_qps()
+    frac10 = p.n_delta / n
+    vec40, num40 = _delta_rows(max(1, n * 2 // 5))
+    p.append(numeric=num40, vector=vec40, fold=False)
+    qps_d50, ok50 = _ingest_qps()
+    frac50 = p.n_delta / n
+    t_fold, _ = timeit(p.fold, repeat=1)
+    qps_folded, okf = _ingest_qps()
+    # cold prepare of base+delta (the thing fold() must undercut)
+    merged = MMOTable("merged")
+    for k_, v_ in p.raw_table.vector.items():
+        merged.add_vector(k_, v_)
+    for k_, v_ in p.raw_table.numeric.items():
+        merged.add_numeric(k_, v_)
+    pc = MQRLD(merged, seed=0)
+    t_cold, _ = timeit(lambda: pc.prepare(min_leaf=64, max_leaf=1024),
+                       repeat=1)
+    csv.add("engine/ingest_qps_delta0", qps_d0, f"exact={ok0}")
+    csv.add("engine/ingest_qps_delta10", qps_d10,
+            f"exact={ok10} frac={frac10:.2f} "
+            f"vs_folded={qps_d10 / max(qps_d0, 1e-12):.2f}x "
+            f"append_us={us(t_append):.0f}")
+    csv.add("engine/ingest_qps_delta50", qps_d50,
+            f"exact={ok50} frac={frac50:.2f} "
+            f"vs_folded={qps_d50 / max(qps_d0, 1e-12):.2f}x")
+    csv.add("engine/ingest_fold_s", t_fold,
+            f"exact_after={okf} qps_after={qps_folded:.0f} "
+            f"cold_prepare_s={t_cold:.3f} "
+            f"fold_vs_cold={t_cold / max(t_fold, 1e-12):.1f}x")
 
 
 if __name__ == "__main__":

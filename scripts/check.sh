@@ -21,9 +21,10 @@ python -m pip install -q -r requirements-dev.txt \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
 # bench_engine also runs inside benchmarks.run below; the explicit step
-# is deliberate — it keeps the planner cold/warm QPS rows greppable under
-# a stable heading even if the full smoke suite is ever trimmed
-echo "== planner smoke benchmark (plan-cache cold vs warm) =="
+# is deliberate — it keeps the planner cold/warm QPS rows and the async
+# ingest rows (QPS at 0/10/50% un-folded delta, fold vs cold prepare)
+# greppable under a stable heading even if the full smoke suite is trimmed
+echo "== planner + ingest smoke benchmark (plan cache, delta QPS) =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m benchmarks.bench_engine --smoke
 

@@ -89,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import query as Q
+from repro.core.lake import _next_pow2
 from repro.kernels import ops
 
 
@@ -143,12 +144,6 @@ def bucket_tiles(starts: np.ndarray, ends: np.ndarray, tile: int = 0
     for i, c in enumerate(chunks):
         rows[i, :len(c)] = c
     return rows, tile, np.asarray(leaf_of_tile, np.int32)
-
-
-def _next_pow2(n: int) -> int:
-    """Smallest power of two >= n (>= 1): pads variable-size subsets so
-    the compiled-shape universe stays logarithmic."""
-    return 1 << max(0, n - 1).bit_length()
 
 
 def _tile_geometry(col: np.ndarray, rows_np: np.ndarray, bucket_rows,
@@ -420,8 +415,9 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
 
 @jax.jit
 def _knn_prologue_fast(qs, centroid, radius, masks_tiles=None):
-    """``_knn_prologue`` with a packed single-key sort (device path
-    only; the host oracle keeps the reference prologue).
+    """``_knn_prologue`` with a packed single-key sort (both loops use
+    it below 4096 tiles; the reference prologue above is kept for
+    larger tile counts).
 
     The fp32 lower bound's bit pattern is order-preserving for
     non-negative floats (+inf included), so bound and tile index can
@@ -729,7 +725,19 @@ class EnginePlan:
 
 
 class HybridEngine:
-    """Batched executor over one prepared MQRLD table (see module doc)."""
+    """Batched executor over one prepared MQRLD table (see module doc).
+
+    Delta union (async ingest): ``sync_delta`` splices a platform
+    ``DeltaRegion`` into the device state — delta rows get their own
+    tiles (both layouts) with exact per-tile balls/boxes, appended after
+    the base tiles, so both beam loops, the V.R tile planner, and the
+    grouped predicate masks see ONE tile universe and stay exact over
+    base+delta with no per-path special casing. Empty delta slots carry
+    ``-1`` row ids and ``-inf`` ball radii (lower bound +inf: never
+    scanned, never survive the triangle bound). Union state is cached
+    per write epoch; delta capacities are pow2 so shapes re-trace only
+    on capacity doublings.
+    """
 
     def __init__(self, tree, table, meta, *, interpret: bool = True,
                  beam: int = 16, tile: int = 128,
@@ -782,7 +790,9 @@ class HybridEngine:
         # coarse layout. Both are exact — tiling never affects results.
         rows_dev, cap_dev, _ = bucket_tiles(starts, ends,
                                             self.device_tile)
+        self.cap_dev = cap_dev
         br_dev = jnp.asarray(rows_dev)
+        self.bucket_rows_dev = br_dev
         self.vec_tiles_dev = {a: jnp.asarray(tile_data(c, rows_dev))
                               for a, c in table.vector.items()}
         self.geom_dev = {a: _tile_geometry(c, rows_dev, br_dev, cap_dev)
@@ -794,6 +804,180 @@ class HybridEngine:
                 np.where(valid, cv, np.inf).min(axis=1), jnp.float32)
             self.num_hi[a] = jnp.asarray(
                 np.where(valid, cv, -np.inf).max(axis=1), jnp.float32)
+        # base-state snapshot: sync_delta swaps the attributes above
+        # between "base only" and "base (+) delta-union" views
+        self._base = {k: getattr(self, k) for k in (
+            "n", "n_tiles", "bucket_rows", "bucket_rows_np", "row_leaf",
+            "vec", "vec_np", "vec_tiles", "vec_tile_pp", "num",
+            "num_lo", "num_hi", "geom", "geom_dev", "vec_tiles_dev")}
+        self.n_base = self.n
+        self.delta_epoch = 0
+        self.delta_rows = 0
+        self.delta_tiles = 0
+
+    # --------------------------------------------------------- delta union
+    def _delta_group_count(self, delta) -> int:
+        """One grouping center per device-tile-worth of capacity —
+        deterministic in the capacity, so tile budgets (and compiled
+        shapes) never depend on the data distribution."""
+        return max(1, delta.capacity // self.cap_dev)
+
+    def _delta_groups(self, delta) -> List[np.ndarray]:
+        """Layout heuristic: cluster live delta rows (k-means-lite over
+        the primary vector attribute, k = ``_delta_group_count``) and
+        sort each group by distance to its center. Delta tiles are then
+        cut WITHIN groups ("annulus" chunks, the base layout's recipe),
+        so their balls are as tight as base tiles' and prune honestly —
+        arrival-order tiles are grab-bags whose lb ~ 0 everywhere,
+        which displaces true nearest tiles from the first beam round
+        and multiplies straggler rounds. Ids stay stable (a tile slot
+        holds any global id); only tile membership changes, so
+        exactness never depends on this grouping."""
+        m = delta.m
+        k = self._delta_group_count(delta)
+        a = next(iter(delta.vector_dims), None)
+        if a is None or m <= 1 or k <= 1:
+            return [np.arange(m, dtype=np.int64)]
+        pts_np = delta.vector[a][:m]
+        pts = jnp.asarray(pts_np, jnp.float32)
+        cen = pts_np[np.linspace(0, m - 1, k).astype(int)].copy()
+        for _ in range(4):
+            d2 = np.asarray(ops.pairwise_sq_l2(pts, jnp.asarray(cen)))
+            asg = d2.argmin(axis=1)
+            sums = np.zeros_like(cen)
+            np.add.at(sums, asg, pts_np)
+            cnt = np.bincount(asg, minlength=k)
+            nz = cnt > 0
+            cen[nz] = sums[nz] / cnt[nz][:, None]
+        dist = d2[np.arange(m), asg]
+        groups = []
+        for j in range(k):
+            sel = np.nonzero(asg == j)[0]
+            if len(sel):
+                groups.append(sel[np.argsort(dist[sel], kind="stable")]
+                              .astype(np.int64))
+        return groups
+
+    def _delta_layout(self, delta, cap: int, groups: List[np.ndarray]):
+        """Delta tiling at ``cap`` rows/tile: (global row ids (Td, cap),
+        clipped local index, validity, per-row tile map). Chunks are
+        aligned to group boundaries; the tile budget carries one slack
+        tile per group (sum ceil(|g|/cap) <= ceil(capacity/cap) +
+        n_groups), so Td is fixed by the capacity alone and compiled
+        shapes never depend on the data."""
+        td = delta.n_tiles(cap) + self._delta_group_count(delta)
+        slots = np.full((td, cap), -1, np.int64)
+        row_tile = np.zeros(delta.capacity, np.int64)
+        t = 0
+        for g in groups:
+            for c0 in range(0, len(g), cap):
+                chunk = g[c0:c0 + cap]
+                slots[t, :len(chunk)] = chunk
+                row_tile[chunk] = t
+                t += 1
+        assert t <= td, (t, td)
+        valid = slots >= 0
+        rows = np.where(valid, self.n_base + slots, -1).astype(np.int32)
+        # pad rows keep tile 0: their NaN columns fail every predicate,
+        # so the gate value is irrelevant
+        return rows, np.maximum(slots, 0), valid, row_tile
+
+    @staticmethod
+    def _delta_geom(pts: np.ndarray, valid: np.ndarray):
+        """Exact per-tile balls over the live slots; empty tiles get
+        radius -inf (lower bound +inf: sorted last, pruned by V.R)."""
+        cnt = valid.sum(1)
+        cen = pts.sum(1) / np.maximum(cnt, 1)[:, None]
+        d2 = ((pts - cen[:, None, :]) ** 2).sum(2)
+        rad = np.where(cnt > 0,
+                       np.sqrt(np.max(np.where(valid, d2, 0.0), axis=1)),
+                       -np.inf)
+        return (np.where(cnt[:, None] > 0, cen, 0.0).astype(np.float32),
+                rad.astype(np.float32))
+
+    def sync_delta(self, delta, epoch: int):
+        """Bring the device state up to the platform's write epoch:
+        no-op when unchanged, base-only when the delta is empty, else
+        rebuild the base(+)delta union arrays (one host->device upload
+        of the delta tiles plus concatenations; queries between appends
+        reuse the cached union)."""
+        if epoch == self.delta_epoch:
+            return
+        self.delta_epoch = epoch
+        live = 0 if delta is None else delta.m
+        if live == 0:
+            for k, v in self._base.items():
+                setattr(self, k, v)
+            self.delta_rows = 0
+            self.delta_tiles = 0
+            return
+        base = self._base
+        nb = self.n_base
+        self.n = nb + delta.capacity      # pad rows included: NaN columns
+        #                                   fail every predicate, -1 tile
+        #                                   slots never reach a kernel
+        self.delta_rows = live
+        groups = self._delta_groups(delta)
+        rows_h, local_h, valid_h, row_tile_h = self._delta_layout(
+            delta, self.cap, groups)
+        self.delta_tiles = len(rows_h)
+        self.n_tiles = base["n_tiles"] + len(rows_h)
+        self.bucket_rows_np = np.concatenate(
+            [np.asarray(base["bucket_rows_np"]), rows_h])
+        self.bucket_rows = jnp.asarray(self.bucket_rows_np)
+        self.row_leaf = jnp.concatenate(
+            [base["row_leaf"],
+             jnp.asarray(base["n_tiles"] + row_tile_h, jnp.int32)])
+        rows_d, local_d, valid_d, _ = self._delta_layout(
+            delta, self.cap_dev, groups)
+        br_dev_u = jnp.concatenate(
+            [self.bucket_rows_dev, jnp.asarray(rows_d)])
+        vec, vec_np, vt, vpp, geom = {}, {}, {}, {}, {}
+        vt_dev, geom_dev = {}, {}
+        for a in delta.vector_dims:
+            dcol = delta.vector[a]                       # (capn, d), NaN pads
+            full = np.concatenate([base["vec_np"][a], dcol])
+            vec_np[a] = full
+            vec[a] = jnp.asarray(full)
+            # tile gathers clip to live data then zero pad slots: tiles
+            # stay NaN-free (pads are excluded by -1 row ids anyway)
+            pts_h = np.where(valid_h[:, :, None], dcol[local_h], 0.0
+                             ).astype(np.float32)
+            vt[a] = jnp.concatenate([base["vec_tiles"][a],
+                                     jnp.asarray(pts_h)])
+            vpp[a] = jnp.concatenate([base["vec_tile_pp"][a],
+                                      jnp.asarray((pts_h ** 2).sum(-1))])
+            cen, rad = self._delta_geom(pts_h, valid_h)
+            g0 = base["geom"][a]
+            geom[a] = LeafGeometry(
+                centroid=jnp.concatenate([g0.centroid, jnp.asarray(cen)]),
+                radius=jnp.concatenate([g0.radius, jnp.asarray(rad)]),
+                bucket_rows=self.bucket_rows, cap=self.cap)
+            pts_d = np.where(valid_d[:, :, None], dcol[local_d], 0.0
+                             ).astype(np.float32)
+            vt_dev[a] = jnp.concatenate([base["vec_tiles_dev"][a],
+                                         jnp.asarray(pts_d)])
+            cen_d, rad_d = self._delta_geom(pts_d, valid_d)
+            gd0 = base["geom_dev"][a]
+            geom_dev[a] = LeafGeometry(
+                centroid=jnp.concatenate([gd0.centroid,
+                                          jnp.asarray(cen_d)]),
+                radius=jnp.concatenate([gd0.radius, jnp.asarray(rad_d)]),
+                bucket_rows=br_dev_u, cap=self.cap_dev)
+        self.vec, self.vec_np = vec, vec_np
+        self.vec_tiles, self.vec_tile_pp, self.geom = vt, vpp, geom
+        self.vec_tiles_dev, self.geom_dev = vt_dev, geom_dev
+        num, num_lo, num_hi = {}, {}, {}
+        for a in delta.numeric_keys:
+            dcol = delta.numeric[a]
+            num[a] = jnp.concatenate([base["num"][a], jnp.asarray(dcol)])
+            dval = dcol[local_h]
+            num_lo[a] = jnp.concatenate([base["num_lo"][a], jnp.asarray(
+                np.where(valid_h, dval, np.inf).min(axis=1), jnp.float32)])
+            num_hi[a] = jnp.concatenate([base["num_hi"][a], jnp.asarray(
+                np.where(valid_h, dval, -np.inf).max(axis=1),
+                jnp.float32)])
+        self.num, self.num_lo, self.num_hi = num, num_lo, num_hi
 
     # ------------------------------------------------------------ stage 1+2
     def _predicate_masks(self, queries: Sequence[Q.Query],

@@ -240,6 +240,80 @@ def build_index(features: np.ndarray, *, delta: float = 0.951,
 
 
 # ---------------------------------------------------------------------------
+# Incremental fold (async-ingest merge path)
+# ---------------------------------------------------------------------------
+def fold_into_tree(tree: ClusterTree, enhanced: np.ndarray,
+                   delta_enh: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Merge delta rows into an existing tree's leaf buckets in place.
+
+    The cheap half of the offline build: instead of re-running transform
+    init + DPC clustering over base+delta (a cold ``prepare``), each
+    delta row is assigned to the nearest leaf centroid in the enhanced
+    space, spliced into that leaf's bucket (re-sorted by
+    distance-to-centroid key so the last-mile CDF model stays valid,
+    and refit), and leaf + ancestor radii are widened so the tree stays
+    a correct bounding hierarchy. Exactness of every query path never
+    depends on the assignment — only layout quality does (per-leaf meta
+    and engine tiles are rebuilt exactly from the merged table).
+
+    ``enhanced`` is the PERMUTED base feature matrix (tree bucket ranges
+    index it), ``delta_enh`` the delta rows in the same space. Mutates
+    ``tree`` (bucket ranges, radii, last-mile fits) and returns
+    ``(perm, bucket_id, bucket_starts)`` over the combined
+    [base-physical; delta] row order, ready for
+    ``MMOTable.apply_permutation``.
+    """
+    nb, m = len(enhanced), len(delta_enh)
+    leaves = tree.leaf_ids
+    cen = tree.centroid[leaves].astype(np.float32)
+    d2 = np.asarray(ops.pairwise_sq_l2(
+        np.asarray(delta_enh, np.float32), cen))
+    assign = d2.argmin(axis=1)                      # leaf position per row
+    # widen ancestor balls so C/R pruning stays conservative
+    for j in range(m):
+        node = int(leaves[assign[j]])
+        x = delta_enh[j]
+        while node >= 0:
+            dist = float(np.linalg.norm(x - tree.centroid[node]))
+            if dist > tree.radius[node]:
+                tree.radius[node] = dist
+            node = int(tree.parent[node])
+    comb = np.concatenate([np.asarray(enhanced, np.float32),
+                           np.asarray(delta_enh, np.float32)])
+    # splice per leaf, walking leaves in their current physical order
+    order = np.argsort(tree.bucket_start[leaves], kind="stable")
+    segs: List[np.ndarray] = []
+    cursor = 0
+    for pos in order:
+        lid = int(leaves[pos])
+        s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+        extra = np.nonzero(assign == pos)[0]
+        rows = np.concatenate([np.arange(s, e, dtype=np.int64),
+                               nb + extra.astype(np.int64)])
+        if len(extra) and len(rows):
+            keys = np.sqrt(np.maximum(
+                ((comb[rows] - tree.centroid[lid][None]) ** 2).sum(1),
+                0.0)).astype(np.float32)
+            srt = np.argsort(keys, kind="stable")
+            rows = rows[srt]
+            a, b = _fit_last_mile(keys[srt])
+            tree.lm_a[lid], tree.lm_b[lid] = a, b
+        tree.bucket_start[lid] = cursor
+        tree.bucket_end[lid] = cursor + len(rows)
+        segs.append(rows)
+        cursor += len(rows)
+    perm = np.concatenate(segs) if segs else np.array([], np.int64)
+    bucket_id = np.zeros(len(perm), np.int32)
+    for b, lid in enumerate(leaves):
+        s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+        bucket_id[s:e] = b
+    bucket_starts = np.concatenate(
+        [tree.bucket_start[leaves], [len(perm)]]).astype(np.int32)
+    return perm, bucket_id, bucket_starts
+
+
+# ---------------------------------------------------------------------------
 # Host executor (paper-faithful traversal)
 # ---------------------------------------------------------------------------
 class HostExecutor:

@@ -13,6 +13,16 @@ Physical layout adaptation (Spark/Hudi -> TPU):
     "bucket"; ``apply_permutation`` physically clusters bucket members so a
     bucket is a contiguous, padded slab (static shapes for TPU scans)
   * persistence = npz shards + a JSON manifest (the lake directory)
+
+Write path (async ingest): a prepared table absorbs new rows without a
+rebuild through a ``DeltaRegion`` — a pow2-capacity append buffer that
+mirrors the table's schema. The delta lifecycle is append -> union ->
+fold: ``MQRLD.append`` lands rows here (queries union them in from the
+next execute on, exactly), and ``MQRLD.fold`` / the next ``prepare()``
+merges them into the learned index. Pad rows are NaN-filled so every
+predicate evaluates False on them without extra masking; capacities grow
+in powers of two so the compiled-shape universe of the batched engine
+stays logarithmic in the number of appends.
 """
 from __future__ import annotations
 
@@ -170,6 +180,129 @@ class MMOTable:
             t.bucket_starts = z["bucket_starts"]
             t.row_ids = z["row_ids"]
         return t
+
+
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1): pads variable-size subsets —
+    delta capacities here, compiled batch/union shapes in the engine —
+    so the compiled-shape universe stays logarithmic."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class DeltaRegion:
+    """Pow2-capacity append buffer over one MMOTable's schema.
+
+    Freshly ingested rows live here — padded columnar buffers sized to a
+    power-of-two capacity — until ``fold()``/``prepare()`` merges them
+    into the learned index. Row ``j`` of the region is addressed globally
+    as ``n_base + j`` by every query path. Slots past ``m`` (the live
+    count) are NaN so predicates evaluate False on them; the engine
+    additionally masks them out of KNN tiles via ``-1`` row ids.
+
+    ``epoch`` increments on every mutation (append/clear): device-state
+    and view caches key on it. ``append`` validates the batch completely
+    before touching any buffer, so a failed append leaves the region —
+    and everything unioned over it — unchanged.
+    """
+
+    def __init__(self, numeric_dims: Dict[str, int],
+                 vector_dims: Dict[str, int], has_raw: bool):
+        self.vector_dims = dict(vector_dims)
+        self.numeric_keys = list(numeric_dims)
+        self.numeric: Dict[str, np.ndarray] = {}
+        self.vector: Dict[str, np.ndarray] = {}
+        self.raw_uri: Optional[List[str]] = [] if has_raw else None
+        self.m = 0
+        self.capacity = 0
+        self.epoch = 0
+
+    @classmethod
+    def for_table(cls, table: "MMOTable") -> "DeltaRegion":
+        return cls({k: 1 for k in table.numeric},
+                   {k: int(v.shape[1]) for k, v in table.vector.items()},
+                   table.raw_uri is not None)
+
+    # ------------------------------------------------------------- append
+    def _validate(self, numeric, vector, n_new: int):
+        if n_new <= 0:
+            raise ValueError("append needs at least one row")
+        if set(numeric) != set(self.numeric_keys):
+            raise ValueError(
+                f"append must supply every numeric column: got "
+                f"{sorted(numeric)}, schema {sorted(self.numeric_keys)}")
+        if set(vector) != set(self.vector_dims):
+            raise ValueError(
+                f"append must supply every vector column: got "
+                f"{sorted(vector)}, schema {sorted(self.vector_dims)}")
+        for k, v in numeric.items():
+            if v.shape != (n_new,):
+                raise ValueError(f"numeric {k!r}: shape {v.shape} != "
+                                 f"({n_new},)")
+        for k, v in vector.items():
+            if v.ndim != 2 or v.shape != (n_new, self.vector_dims[k]):
+                raise ValueError(
+                    f"vector {k!r}: shape {v.shape} != "
+                    f"({n_new}, {self.vector_dims[k]})")
+
+    def _grow(self, cap: int):
+        for k in self.numeric_keys:
+            col = np.full(cap, np.nan, np.float32)
+            if k in self.numeric:
+                col[:self.m] = self.numeric[k][:self.m]
+            self.numeric[k] = col
+        for k, d in self.vector_dims.items():
+            col = np.full((cap, d), np.nan, np.float32)
+            if k in self.vector:
+                col[:self.m] = self.vector[k][:self.m]
+            self.vector[k] = col
+        self.capacity = cap
+
+    def append(self, numeric: Dict[str, np.ndarray],
+               vector: Dict[str, np.ndarray],
+               raw_uri: Optional[Sequence[str]] = None) -> int:
+        """Validate-then-write: returns the new live row count."""
+        numeric = {k: np.asarray(v, np.float32) for k, v in numeric.items()}
+        vector = {k: np.asarray(v, np.float32) for k, v in vector.items()}
+        n_new = 0
+        for v in list(numeric.values()) + list(vector.values()):
+            n_new = max(n_new, len(v))
+        self._validate(numeric, vector, n_new)
+        if raw_uri is not None and len(raw_uri) != n_new:
+            raise ValueError("raw_uri length != appended row count")
+        if self.m + n_new > self.capacity:
+            self._grow(_next_pow2(self.m + n_new))
+        s = self.m
+        for k, v in numeric.items():
+            self.numeric[k][s:s + n_new] = v
+        for k, v in vector.items():
+            self.vector[k][s:s + n_new] = v
+        if self.raw_uri is not None:
+            uris = list(raw_uri) if raw_uri is not None else [""] * n_new
+            self.raw_uri.extend(str(u) for u in uris)
+        self.m += n_new
+        self.epoch += 1
+        return self.m
+
+    # -------------------------------------------------------------- reads
+    def live_numeric(self, attr: str) -> np.ndarray:
+        return self.numeric[attr][:self.m]
+
+    def live_vector(self, attr: str) -> np.ndarray:
+        return self.vector[attr][:self.m]
+
+    def n_tiles(self, cap: int) -> int:
+        """Tile count of the delta at ``cap`` rows per tile (fixed by the
+        capacity, not the live count, so tile shapes survive appends)."""
+        return 0 if self.capacity == 0 else -(-self.capacity // cap)
+
+    def clear(self):
+        self.numeric = {}
+        self.vector = {}
+        if self.raw_uri is not None:
+            self.raw_uri = []
+        self.m = 0
+        self.capacity = 0
+        self.epoch += 1
 
 
 class DataLake:

@@ -16,7 +16,8 @@ from repro.core.transform import HyperspaceTransform
 
 def save_index(directory: str, tree: ClusterTree,
                enhanced: np.ndarray,
-               transform: Optional[HyperspaceTransform] = None):
+               transform: Optional[HyperspaceTransform] = None,
+               columns: Optional[list] = None):
     os.makedirs(directory, exist_ok=True)
     flat_children = []
     child_offsets = [0]
@@ -37,7 +38,11 @@ def save_index(directory: str, tree: ClusterTree,
     np.savez_compressed(os.path.join(directory, "index.npz"), **arrays)
     with open(os.path.join(directory, "index.json"), "w") as f:
         json.dump({"n_nodes": tree.n_nodes,
-                   "has_transform": transform is not None}, f)
+                   "has_transform": transform is not None,
+                   # the feature-column order the build used — fold()
+                   # after a reload must assemble delta features in
+                   # exactly this order (and only these columns)
+                   "columns": columns}, f)
 
 
 def load_index(directory: str):
@@ -63,15 +68,31 @@ def load_index(directory: str):
 
 
 def save_platform(platform, directory: str):
-    """Lake table + index + transform in one place."""
+    """Lake table + index + transform in one place; live (un-folded)
+    delta rows are persisted alongside so a restart keeps serving the
+    freshest data without a fold."""
     platform.table.save(os.path.join(directory, "table"))
     save_index(os.path.join(directory, "index"), platform.tree,
-               platform.enhanced, platform.transform)
+               platform.enhanced, platform.transform,
+               columns=list(platform.layout))
     platform.qbs.save(os.path.join(directory, "qbs.json"))
+    delta_path = os.path.join(directory, "delta.npz")
+    d = platform.delta
+    if d is not None and d.m:
+        arrays = {f"num__{k}": d.live_numeric(k) for k in d.numeric_keys}
+        arrays.update({f"vec__{k}": d.live_vector(k)
+                       for k in d.vector_dims})
+        if d.raw_uri is not None:
+            arrays["raw_uri"] = np.asarray(d.raw_uri, dtype=np.str_)
+        np.savez_compressed(delta_path, **arrays)
+    elif os.path.exists(delta_path):   # overwrite of a dirtier snapshot
+        os.remove(delta_path)
 
 
 def load_platform(directory: str):
-    """Reconstruct a ready-to-query MQRLD without rebuilding the index."""
+    """Reconstruct a ready-to-query MQRLD without rebuilding the index
+    (un-folded delta rows, when present, are re-appended — folding is
+    left to the caller / the auto-fold policy)."""
     from repro.core.platform import MQRLD
     from repro.core.qbs import QBSTable
     table = MMOTable.load(os.path.join(directory, "table"))
@@ -81,8 +102,23 @@ def load_platform(directory: str):
     p.tree = tree
     p.enhanced = enhanced
     p.transform = transform
+    # fold() assembles delta features in the column order the build
+    # used; restore it from the manifest (older snapshots without the
+    # field fall back to the default order)
+    with open(os.path.join(directory, "index", "index.json")) as f:
+        cols = json.load(f).get("columns")
+    _, p.layout = table.concat_features(cols)
     qbs_path = os.path.join(directory, "qbs.json")
     if os.path.exists(qbs_path):
         p.qbs = QBSTable.load(qbs_path)
     p._build_meta()
+    delta_path = os.path.join(directory, "delta.npz")
+    if os.path.exists(delta_path):
+        z = np.load(os.path.join(directory, "delta.npz"),
+                    allow_pickle=False)
+        numeric = {k: z[f"num__{k}"] for k in table.numeric}
+        vector = {k: z[f"vec__{k}"] for k in table.vector}
+        uri = (z["raw_uri"].astype(object).tolist()
+               if "raw_uri" in z.files else None)
+        p.append(numeric=numeric, vector=vector, raw_uri=uri, fold=False)
     return p

@@ -21,6 +21,14 @@ reuses the same compiled-shape universe (identical group sizes -> jit
 cache hits instead of re-tracing). ``prepare()`` bumps the platform
 build id, invalidating every cached plan.
 
+Write semantics (async ingest): a cached plan stays VALID across
+``MQRLD.append`` — the delta region is execution state, not plan
+structure, and ``execute()`` unions whatever un-folded rows exist at its
+write epoch (the engine re-syncs per call). ``fold()``/``prepare()``
+bump ``build_id``, which invalidates every cached plan exactly like a
+rebuild. ``explain()`` reports the delta epoch / row / tile counts the
+next execution would see.
+
 QBS-driven plan parameters: each KNN group carries a
 ``knn_archetype`` key; at execute time the plan seeds the group's beam
 widths from ``QBSTable.convergence_width`` (p90 of per-query converged
@@ -192,8 +200,11 @@ class ExecutablePlan:
     # ------------------------------------------------------------- explain
     def explain(self) -> dict:
         """Structured plan description (no execution): chosen path per
-        query, cache hit/miss, per-V.K group/archetype/beam seed, and
-        per-V.R pruned-tile estimates from the triangle bound."""
+        query, cache hit/miss, per-V.K group/archetype/beam seed,
+        per-V.R pruned-tile estimates from the triangle bound, and the
+        un-folded delta state the execution would union in (epoch, live
+        rows, host-layout tile count) — read at explain time, like the
+        seeds, so a cached plan reports fresh write state."""
         lp = self.logical
         seeds = self._seeds()
         eng = self.session.engine() if lp.engine_idx else None
@@ -225,10 +236,19 @@ class ExecutablePlan:
                                    "tiles_total": total})
             frags.append({"query": frag.signature, "path": frag.path,
                           "knn": knn, "vr": vr})
+        p = self.session.platform
+        delta = {
+            "epoch": p.delta_epoch,
+            "rows": p.n_delta,
+            "tiles": (eng.delta_tiles if eng is not None
+                      else (0 if p.delta is None
+                            else p.delta.n_tiles(self.session.tile))),
+        }
         return {
             "cache": "hit" if self.cache_hit else "miss",
             "device_loop": lp.device_loop,
             "build_id": self.session.platform.build_id,
+            "delta": delta,
             "n_queries": len(self.norm),
             "n_engine": len(lp.engine_idx),
             "n_scalar": len(lp.scalar_idx),

@@ -42,6 +42,22 @@ Deprecated v1 surface: ``execute_batch`` (with its ``interpret`` /
 ``device_loop`` flags) is kept as a thin shim over ``session()`` with
 identical results; new code should hold a ``Session`` and use
 ``plan()/execute()/explain()``.
+
+Async ingest (freshness-exact writes): ``append(...)`` lands new rows in
+a ``repro.core.lake.DeltaRegion`` — pow2-capacity buffers with their own
+bucket tiles — WITHOUT rebuilding the index or invalidating cached
+plans. Every query path unions the delta in from the next execution on:
+the scalar executor scans it alongside the leaf walk, the batched engine
+splices delta tiles into both beam loops and the V.R tile planner
+(``HybridEngine.sync_delta``), so results always equal a brute-force
+oracle over base+delta (``view()``). The delta lifecycle is append ->
+union -> fold: ``fold()`` (or auto-fold past ``auto_fold_ratio``, or the
+next full ``prepare()``) merges the delta into the learned index —
+incremental nearest-leaf insertion through ``index.fold_into_tree``,
+far cheaper than a cold rebuild — and bumps ``build_id`` so cached
+``LogicalPlan``s invalidate cleanly. Un-folded appends only advance
+``delta_epoch``, which engine state and plan execution check at execute
+time; a warm plan stays warm across appends.
 """
 from __future__ import annotations
 
@@ -54,7 +70,7 @@ import numpy as np
 from repro.core import query as Q
 from repro.core.index import (BuildReport, ClusterTree, QueryStats,
                               build_index)
-from repro.core.lake import MMOTable
+from repro.core.lake import DeltaRegion, MMOTable
 from repro.core.lpgf import lpgf
 from repro.core.qbs import QBSTable, accuracy, recall_at_k
 from repro.core.reorder import reorder_siblings
@@ -85,7 +101,14 @@ class MQRLD:
         self.meta: Optional[LeafMeta] = None
         self.enhanced: Optional[np.ndarray] = None
         self.seed = seed
-        self.build_id = 0  # bumped by prepare(); keys plan caches
+        self.build_id = 0  # bumped by prepare()/fold(); keys plan caches
+        # async-ingest write path: un-folded appends live in the delta
+        # region; delta_epoch is monotone across appends AND folds (it
+        # never resets), so any state keyed on it can never alias
+        self.delta: Optional[DeltaRegion] = None
+        self.delta_epoch = 0
+        self.auto_fold_ratio = 0.5   # fold when delta rows > ratio * base
+        self._view_cache: Optional[Tuple[Tuple[int, int], MMOTable]] = None
         self._oracle_cache: Dict = {}
         self._engine = None
         self._sessions: Dict = {}
@@ -99,7 +122,17 @@ class MQRLD:
                 theta: Optional[Sequence[float]] = None,
                 dpc_sample: int = 4096,
                 delta_scales: Optional[Sequence[float]] = None) -> BuildReport:
-        """Feature representation + index build + physical re-layout."""
+        """Feature representation + index build + physical re-layout.
+
+        A pending delta region is folded into the rebuild: its rows join
+        ``raw_table`` before the transform/index build, so ``prepare()``
+        is the full-rebuild end of the append -> union -> fold
+        lifecycle (``fold()`` is the cheap incremental end)."""
+        if self.delta is not None and self.delta.m:
+            self.raw_table = self._merged_raw()
+            self.delta = None
+            self.delta_epoch += 1
+            self._view_cache = None
         d, self.layout = self.raw_table.concat_features(columns)
         feats = d
         if use_transform:
@@ -162,6 +195,135 @@ class MQRLD:
         self.meta = LeafMeta(vec_centroid=vc, vec_radius=vr,
                              num_lo=nlo, num_hi=nhi)
 
+    # ----------------------------------------------------- async ingest
+    @property
+    def n_base(self) -> int:
+        return self.table.n_rows
+
+    @property
+    def n_delta(self) -> int:
+        return 0 if self.delta is None else self.delta.m
+
+    def append(self, *, numeric: Optional[Dict] = None,
+               vector: Optional[Dict] = None,
+               raw_uri: Optional[Sequence[str]] = None,
+               fold: Optional[bool] = None) -> int:
+        """Ingest new rows into the delta region (freshness-exact).
+
+        The rows are queryable from the very next execution — scalar,
+        host-loop, and device-loop paths all union the delta — with ids
+        ``n_base + j`` (j = delta position) until a fold re-lays them
+        physically. Columns must cover the table schema exactly; the
+        call validates everything before mutating any state, so a
+        failed append changes nothing. Cached plans stay VALID (only
+        ``delta_epoch`` advances; plans re-read delta state at execute
+        time); ``fold`` controls merging into the learned index:
+        None = auto (fold once delta rows exceed ``auto_fold_ratio`` x
+        base rows), False = never, True = fold immediately. Returns the
+        number of live (un-folded) delta rows after the call."""
+        assert self.tree is not None, "call prepare() first"
+        if self.delta is None:
+            self.delta = DeltaRegion.for_table(self.table)
+        self.delta.append(dict(numeric or {}), dict(vector or {}), raw_uri)
+        self.delta_epoch += 1
+        self._view_cache = None
+        if fold is True or (fold is None and self.auto_fold_ratio
+                            and self.delta.m
+                            > self.auto_fold_ratio * self.table.n_rows):
+            self.fold()
+        return self.n_delta
+
+    def _concat_delta(self, t: MMOTable,
+                      row_ids: Optional[np.ndarray] = None) -> MMOTable:
+        """``t`` with the live delta rows appended column-wise — the one
+        concatenation recipe behind both ``view()`` (over the physical
+        table) and ``_merged_raw`` (over ``raw_table``)."""
+        d = self.delta
+        uri = None
+        if t.raw_uri is not None:
+            extra = d.raw_uri if d.raw_uri is not None else [""] * d.m
+            uri = np.concatenate([t.raw_uri,
+                                  np.asarray(list(extra), dtype=object)])
+        return MMOTable(
+            name=t.name,
+            numeric={k: np.concatenate([v, d.live_numeric(k)])
+                     for k, v in t.numeric.items()},
+            vector={k: np.concatenate([v, d.live_vector(k)])
+                    for k, v in t.vector.items()},
+            raw_uri=uri, embed_model=dict(t.embed_model), row_ids=row_ids)
+
+    def _merged_raw(self) -> MMOTable:
+        """raw_table + live delta rows appended (raw order)."""
+        return self._concat_delta(self.raw_table)
+
+    def fold(self) -> int:
+        """Merge the delta region into the learned index incrementally.
+
+        The cheap end of the append -> union -> fold lifecycle: delta
+        rows are pushed through the FROZEN feature representation
+        (transform applied, no re-fit; LPGF — a global build-time
+        movement — is skipped: it shapes layout quality, never
+        exactness), assigned to their nearest leaf in enhanced space
+        (``index.fold_into_tree``: bucket splice + key re-sort +
+        last-mile refit + radius widening), and the table is physically
+        re-laid. Per-leaf meta and engine tiles are rebuilt exactly
+        from the merged table, so every query path stays exact
+        regardless of assignment quality. Bumps ``build_id`` — cached
+        plans and device state invalidate cleanly — and advances
+        ``delta_epoch``. Far cheaper than a cold ``prepare()`` of
+        base+delta (no transform init, no DPC clustering). Returns the
+        number of rows folded (0 = nothing to do)."""
+        from repro.core.index import fold_into_tree
+        if self.delta is None or self.delta.m == 0:
+            return 0
+        d = self.delta
+        m = d.m
+        comb = self.view()           # before raw merge: ids stay consistent
+        self.raw_table = self._merged_raw()
+        # delta features through the frozen representation, in the
+        # column order prepare() used (self.layout preserves it)
+        parts = []
+        for c in self.layout:
+            a = (d.live_vector(c) if c in d.vector_dims
+                 else d.live_numeric(c)[:, None])
+            parts.append(a.astype(np.float32))
+        feats = np.concatenate(parts, axis=1)
+        if self.transform is not None:
+            feats = self.transform.apply(feats)
+        perm, bucket_id, bucket_starts = fold_into_tree(
+            self.tree, self.enhanced, feats)
+        self.table = comb.apply_permutation(perm, bucket_id, bucket_starts)
+        self.enhanced = np.concatenate([self.enhanced, feats])[perm]
+        self._build_meta()
+        self.delta = None
+        self.delta_epoch += 1
+        self._view_cache = None
+        self._oracle_cache.clear()
+        self._engine = None          # device tiles are stale
+        self.build_id += 1           # cached plans invalidate
+        return m
+
+    def view(self) -> MMOTable:
+        """The queryable table: base physical rows plus live delta rows
+        at ids ``n_base..n_base+m-1`` — what every query path (and the
+        brute-force oracle) answers over. Returns the base table
+        itself when the delta is empty; cached per write epoch."""
+        if self.delta is None or self.delta.m == 0:
+            return self.table
+        key = (self.build_id, self.delta_epoch)
+        if self._view_cache is not None and self._view_cache[0] == key:
+            return self._view_cache[1]
+        row_ids = None
+        if self.table.row_ids is not None:
+            # delta rows take the raw ids they will hold once folded
+            row_ids = np.concatenate([
+                self.table.row_ids,
+                self.raw_table.n_rows + np.arange(self.delta.m)]
+            ).astype(np.int64)
+        v = self._concat_delta(self.table, row_ids=row_ids)
+        self._view_cache = (key, v)
+        return v
+
     # ------------------------------------------------------------ leaves
     def _leaf_rows(self, leaf_pos: int) -> np.ndarray:
         lid = self.tree.leaf_ids[leaf_pos]
@@ -193,9 +355,22 @@ class MQRLD:
         raise TypeError(q)
 
     def _mask_from_predicate(self, q, stats: QueryStats) -> np.ndarray:
-        """Exact boolean mask over physical rows for NE/NR/VR."""
-        n = self.table.n_rows
-        mask = np.zeros(n, bool)
+        """Exact boolean mask over physical rows for NE/NR/VR (delta
+        rows, when present, occupy the tail ``n_base..n_base+m-1`` and
+        are scanned directly — the delta has no leaf metadata yet)."""
+        nb = self.table.n_rows
+        mask = np.zeros(nb + self.n_delta, bool)
+        if self.n_delta:
+            stats.rows_scanned += self.n_delta
+            if isinstance(q, Q.NE):
+                col = self.delta.live_numeric(q.attr)
+                mask[nb:] = np.abs(col - q.value) <= q.tol
+            elif isinstance(q, Q.NR):
+                col = self.delta.live_numeric(q.attr)
+                mask[nb:] = (col >= q.lo) & (col <= q.hi)
+            else:  # VR
+                col = self.delta.live_vector(q.attr)
+                mask[nb:] = ((col - q.vec()) ** 2).sum(1) <= q.radius ** 2
         for lp in self._predicate_leaves(q):
             stats.touch(lp)
             self._count_leaf(lp)
@@ -215,10 +390,15 @@ class MQRLD:
 
     def _knn(self, q: Q.VK, stats: QueryStats,
              row_mask: Optional[np.ndarray] = None) -> np.ndarray:
-        """Exact per-attribute KNN via leaf lower-bound ranking."""
+        """Exact per-attribute KNN via leaf lower-bound ranking, with
+        live delta rows brute-force merged in after the leaf scan (the
+        stable merge keeps base rows ahead of delta rows on exact
+        distance ties, matching the combined-view oracle's row
+        order)."""
         m = self.meta
         qv = q.vec()
         col = self.table.vector[q.attr]
+        nb = self.table.n_rows
         dc = np.sqrt(np.maximum(((m.vec_centroid[q.attr] - qv) ** 2)
                                 .sum(1), 0))
         lb = np.maximum(dc - m.vec_radius[q.attr], 0.0)
@@ -240,6 +420,17 @@ class MQRLD:
             alli = np.concatenate([best_i, rows])
             sel = np.argsort(alld, kind="stable")[:q.k]
             best_d, best_i = alld[sel], alli[sel]
+        if self.n_delta:
+            dcol = self.delta.live_vector(q.attr)
+            d2 = ((dcol - qv) ** 2).sum(1)
+            if row_mask is not None:
+                d2 = np.where(row_mask[nb:], d2, np.inf)
+            stats.rows_scanned += self.n_delta
+            alld = np.concatenate([best_d, np.sqrt(np.maximum(d2, 0))])
+            alli = np.concatenate([best_i, nb + np.arange(self.n_delta)])
+            sel = np.argsort(alld, kind="stable")[:q.k]
+            keep = np.isfinite(alld[sel])
+            best_d, best_i = alld[sel], np.where(keep, alli[sel], -1)
         return best_i[best_i >= 0]
 
     # ------------------------------------------------------------- execute
@@ -264,7 +455,7 @@ class MQRLD:
 
     def _exec(self, q, stats: QueryStats,
               row_mask: Optional[np.ndarray]) -> np.ndarray:
-        n = self.table.n_rows
+        n = self.table.n_rows + self.n_delta
         if isinstance(q, (Q.NE, Q.NR, Q.VR)):
             mask = self._mask_from_predicate(q, stats)
             if row_mask is not None:
@@ -320,6 +511,9 @@ class MQRLD:
                 device_loop=True if device_loop is None else device_loop)
         elif device_loop is not None:
             self._engine.device_loop = device_loop
+        # union any un-folded appends into the device state (no-op when
+        # the write epoch is unchanged)
+        self._engine.sync_delta(self.delta, self.delta_epoch)
         return self._engine
 
     def session(self, *, interpret: bool = True,
@@ -361,9 +555,13 @@ class MQRLD:
 
     # ------------------------------------------------------------- oracle
     def oracle(self, query: Q.Query) -> np.ndarray:
-        key = repr(query)
+        """Brute-force truth over the queryable view (base + live
+        delta); cached per (query, build, write epoch) so appends and
+        folds can never serve stale truths."""
+        key = (repr(query), self.build_id, self.delta_epoch)
         if key not in self._oracle_cache:
-            self._oracle_cache[key] = Q.execute_bruteforce(self.table, query)
+            self._oracle_cache[key] = Q.execute_bruteforce(self.view(),
+                                                           query)
         return self._oracle_cache[key]
 
     # -------------------------------------------------- query-aware tuning

@@ -76,9 +76,12 @@ class QBSTable:
     # ------------------------------------------- plan-parameter feedback
     def record_convergence(self, archetype: str, width: int):
         """Record the beam width (in tiles) at which one executed KNN
-        group's bound-ordered scan converged."""
+        group's bound-ordered scan converged. Zero is a real signal —
+        "no tail beyond the first round" — and must be stored as such:
+        clamping it up would put a floor under the p90 and the seed
+        could never decay (see ``HybridEngine._run_jobs``)."""
         ws = self.convergence.setdefault(archetype, [])
-        ws.append(int(max(1, width)))
+        ws.append(int(max(0, width)))
         if len(ws) > _CONVERGENCE_KEEP:
             del ws[:len(ws) - _CONVERGENCE_KEEP]
 
@@ -87,11 +90,16 @@ class QBSTable:
         """Suggested first-round beam width for an archetype: the p90 of
         recorded converged widths (conservative — seeding short of the
         true width only moves work into straggler rounds, never breaks
-        exactness). ``default`` when the archetype was never seen."""
+        exactness). ``default`` when the archetype was never seen, and
+        also when the p90 has decayed to zero — a ring full of
+        no-tail runs means the engine's unseeded widths already
+        suffice, so the engine should run unseeded rather than keep a
+        stale widened beam."""
         ws = self.convergence.get(archetype)
         if not ws:
             return default
-        return int(np.ceil(np.quantile(np.asarray(ws, np.float64), 0.9)))
+        w = int(np.ceil(np.quantile(np.asarray(ws, np.float64), 0.9)))
+        return w if w > 0 else default
 
     # ------------------------------------------------------------ consumers
     def extrinsic_score(self, task: Optional[str] = None,

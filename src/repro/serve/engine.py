@@ -202,7 +202,9 @@ class RetrievalServer:
     ``RetrievalFuture``; a batch flushes automatically once
     ``batch_size`` requests are pending, explicitly via ``flush()``, or
     lazily when a future's ``result()`` is read. ``serve`` is
-    submit-all + flush + gather.
+    submit-all + flush + gather. ``append(...)`` ingests new rows
+    between batches (freshness-exact; see its docstring for the
+    ordering and exception-safety contract).
 
     Ordering contract: results come back in SUBMISSION order — one
     ``RetrievalResult`` per request, positionally — regardless of how
@@ -225,6 +227,20 @@ class RetrievalServer:
         self.session = platform.session(device_loop=device_loop)
         self._pending: List[tuple] = []   # (request, future) FIFO
 
+    def _embed_tokens(self, token_lists: Sequence[np.ndarray]) -> np.ndarray:
+        """THE prompt -> vector recipe (right-pad to the batch max with
+        ``pad_token``, one forward pass, optional projection) — shared
+        by query serving and ``append`` so ingested embeddings always
+        live in the same space queries search."""
+        plen = max(len(t) for t in token_lists)
+        toks = np.full((len(token_lists), plen), self.pad_token, np.int32)
+        for j, t in enumerate(token_lists):
+            toks[j, :len(t)] = t
+        emb = self.embedder.embed(toks)
+        if self.project is not None:
+            emb = np.asarray(self.project(emb))
+        return emb
+
     def _queries(self, reqs: Sequence[RetrievalRequest],
                  emb: np.ndarray) -> List[Q.Query]:
         out = []
@@ -238,9 +254,47 @@ class RetrievalServer:
                 rows: np.ndarray) -> np.ndarray:
         if req.predicate is None or len(rows) == 0:
             return rows  # top-level V.K is already distance-ordered
-        col = self.platform.table.vector[req.attr][rows]
+        # view(): row ids may point into the un-folded delta region
+        col = self.platform.view().vector[req.attr][rows]
         d2 = ((col - emb[None, :]) ** 2).sum(1)
         return rows[np.argsort(d2, kind="stable")]
+
+    # ------------------------------------------------------------- writes
+    def append(self, *, numeric=None, vectors=None, tokens=None,
+               attr: Optional[str] = None,
+               raw_uri: Optional[Sequence[str]] = None,
+               fold: Optional[bool] = None) -> int:
+        """Ingest new MMOs into the serving platform without taking
+        queries offline (the platform's freshness-exact delta region).
+
+        ``vectors`` supplies embedding columns directly; ``tokens`` (a
+        list of int32 prompt arrays) is embedded through the server's
+        embedder — padded and projected exactly like query prompts —
+        into the ``attr`` vector column. Returns the number of live
+        (un-folded) delta rows; ``fold`` is forwarded to
+        ``MQRLD.append`` (None = the platform's auto-fold policy).
+
+        Ordering / concurrency contract: the append is applied
+        atomically BETWEEN batches. Futures already resolved are
+        immutable; requests still pending — including those submitted
+        before this call — observe the appended rows when their batch
+        flushes (freshness-exact: every flushed batch queries
+        base+delta at its flush epoch). There is no state in which an
+        in-flight batch sees a half-applied append, because execution
+        is synchronous batched compute and ``MQRLD.append`` validates
+        the whole batch of rows before mutating the region.
+
+        Exception safety: embedding or validation failures propagate
+        WITHOUT touching the platform, the pending queue, or any
+        future — the next ``flush()`` serves exactly what it would
+        have served before the failed call."""
+        vectors = dict(vectors or {})
+        if tokens is not None:
+            if attr is None:
+                raise ValueError("append(tokens=...) needs attr=")
+            vectors[attr] = self._embed_tokens(tokens)
+        return self.platform.append(numeric=numeric, vector=vectors,
+                                    raw_uri=raw_uri, fold=fold)
 
     # ------------------------------------------------------------- async
     def submit(self, request: RetrievalRequest) -> RetrievalFuture:
@@ -269,13 +323,7 @@ class RetrievalServer:
 
     def _run_chunk(self, chunk: Sequence[tuple]):
         reqs = [r for r, _ in chunk]
-        plen = max(len(r.tokens) for r in reqs)
-        toks = np.full((len(reqs), plen), self.pad_token, np.int32)
-        for j, r in enumerate(reqs):
-            toks[j, :len(r.tokens)] = r.tokens
-        emb = self.embedder.embed(toks)
-        if self.project is not None:
-            emb = np.asarray(self.project(emb))
+        emb = self._embed_tokens([r.tokens for r in reqs])
         queries = self._queries(reqs, emb)
         rows, _ = self.session.plan(
             queries, device_loop=self.device_loop).execute()

@@ -1,0 +1,442 @@
+"""Freshness-exact async ingest: delta-region writes unioned into every
+query path.
+
+The contract under test: after ANY interleaving of ``append`` /
+``plan().execute()`` / ``fold`` / ``save+load``, every query result —
+scalar, host-loop, and device-loop — equals the brute-force oracle over
+base+delta (``MQRLD.view()``). Plus the plan-cache write semantics
+(warm across append, invalidated by fold), the ``explain()`` delta
+block, and the ``RetrievalServer.append`` ordering / exception-safety
+contract.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import query as Q
+from repro.core.engine import plannable
+from repro.core.lake import MMOTable
+from repro.core.persist import load_platform, save_platform
+from repro.core.platform import MQRLD
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+_KS = (1, 5, 17)  # small static-k universe keeps compiles bounded
+
+
+def _make_platform(seed=0, n=500):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(5, 8)).astype(np.float32) * 5
+    lab = rng.integers(0, 5, n)
+    img = (centers[lab] + rng.normal(size=(n, 8))).astype(np.float32)
+    audio = rng.normal(size=(n, 5)).astype(np.float32) * 2
+    t = (MMOTable("ingest")
+         .add_vector("img", img)
+         .add_vector("audio", audio)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32))
+         .add_numeric("stock", rng.integers(0, 50, n).astype(np.float32)))
+    p = MQRLD(t, seed=seed)
+    p.prepare(min_leaf=8, max_leaf=64, dpc_max_clusters=5)
+    return p, centers
+
+
+def _rand_rows(rng, centers, m):
+    lab = rng.integers(0, 5, m)
+    return {
+        "numeric": {"price": rng.uniform(0, 100, m).astype(np.float32),
+                    "stock": rng.integers(0, 50, m).astype(np.float32)},
+        "vector": {"img": (centers[lab]
+                           + rng.normal(size=(m, 8))).astype(np.float32),
+                   "audio": rng.normal(size=(m, 5)).astype(np.float32) * 2},
+    }
+
+
+def _rand_basic(rng, tab):
+    kind = rng.integers(0, 4)
+    if kind == 0:
+        attr = ("price", "stock")[rng.integers(0, 2)]
+        col = tab.numeric[attr]
+        v = float(col[rng.integers(0, len(col))])
+        return Q.NE(attr, v, float(rng.choice([1e-6, 0.5, 5.0])))
+    if kind == 1:
+        attr = ("price", "stock")[rng.integers(0, 2)]
+        lo = float(rng.uniform(-10, 100))
+        return Q.NR(attr, lo, lo + float(rng.uniform(0, 60)))
+    attr = ("img", "audio")[rng.integers(0, 2)]
+    col = tab.vector[attr]
+    base = col[rng.integers(0, len(col))]
+    v = base + rng.normal(size=col.shape[1]).astype(np.float32) \
+        * float(rng.uniform(0, 0.5))
+    if kind == 2:
+        anchor = col[rng.integers(0, len(col))]
+        r = float(np.sqrt(((anchor - v) ** 2).sum()) * rng.uniform(0.3, 1.5))
+        return Q.VR.of(attr, v, max(r, 1e-3))
+    return Q.VK.of(attr, v, int(rng.choice(_KS)))
+
+
+def _rand_query(rng, tab, depth=2):
+    if depth == 0 or rng.random() < 0.5:
+        return _rand_basic(rng, tab)
+    parts = tuple(_rand_query(rng, tab, depth - 1)
+                  for _ in range(rng.integers(2, 4)))
+    return Q.And(parts) if rng.random() < 0.5 else Q.Or(parts)
+
+
+def _rowset(rows):
+    return set(np.asarray(rows).tolist())
+
+
+def _check_batch(p, sess, rng, batch_size=3):
+    """One random hybrid batch through the planned path, BOTH loops,
+    against brute force over the current base+delta view (unplannable
+    trees assert scalar parity, like the engine fuzz suite)."""
+    view = p.view()
+    batch = [_rand_query(rng, view) for _ in range(batch_size)]
+    truth = [Q.execute_bruteforce(view, Q.normalize(q)) if plannable(q)
+             else p.execute(q, record=False)[0] for q in batch]
+    for dl in (True, False):
+        got, _ = sess.plan(batch, device_loop=dl).execute()
+        for q, rows, want in zip(batch, got, truth):
+            assert _rowset(rows) == _rowset(want), (dl, p.n_delta, q)
+
+
+# ---------------------------------------------------------------------------
+# The interleaved ingest/query fuzz oracle suite
+# ---------------------------------------------------------------------------
+def _fuzz_session(seed, steps=25):
+    """append / query / fold / save+load interleaved, oracle-checked
+    after every step."""
+    p, centers = _make_platform(seed=3)
+    sess = p.session()
+    rng = np.random.default_rng(5000 + seed)
+    tmpdir = None
+    try:
+        for step in range(steps):
+            op = rng.random()
+            if op < 0.45:
+                rows = _rand_rows(rng, centers, int(rng.integers(1, 8)))
+                p.append(numeric=rows["numeric"], vector=rows["vector"],
+                         fold=False)
+            elif op < 0.55 and p.n_delta:
+                p.fold()
+            elif op < 0.62:
+                if tmpdir is None:
+                    tmpdir = tempfile.TemporaryDirectory()
+                save_platform(p, tmpdir.name)
+                nd = p.n_delta
+                p = load_platform(tmpdir.name)
+                sess = p.session()
+                assert p.n_delta == nd  # delta survived the round trip
+            _check_batch(p, sess, rng)
+    finally:
+        if tmpdir is not None:
+            tmpdir.cleanup()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_interleaved_ingest_query(seed):
+    """Seeded fuzz (no hypothesis needed): 8 seeds x 25 interleaved
+    steps = 200 cases, every step oracle-checked on both beam loops."""
+    _fuzz_session(seed)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_interleaved_ingest(seed):
+    """Hypothesis-driven variant (skips via the conftest shim when
+    hypothesis is unavailable)."""
+    _fuzz_session(seed % 997, steps=6)
+
+
+# ---------------------------------------------------------------------------
+# Append basics
+# ---------------------------------------------------------------------------
+def test_append_visible_to_all_paths_immediately():
+    p, centers = _make_platform(seed=1)
+    nb = p.table.n_rows
+    rng = np.random.default_rng(9)
+    rows = _rand_rows(rng, centers, 6)
+    # place one appended row right on top of an existing vector so it
+    # must show up in that vector's KNN
+    rows["vector"]["img"][0] = p.table.vector["img"][17] + 1e-3
+    assert p.append(numeric=rows["numeric"], vector=rows["vector"],
+                    fold=False) == 6
+    q = Q.VK.of("img", p.table.vector["img"][17], 3)
+    want = _rowset(p.oracle(q))
+    scalar, _ = p.execute(q, record=False)
+    assert _rowset(scalar) == want
+    for dl in (True, False):
+        (got,), _ = p.execute_batch([q], device_loop=dl)
+        assert _rowset(got) == want, dl
+    assert any(r >= nb for r in want), "delta row should be a neighbor"
+
+
+def test_append_validates_before_mutating():
+    p, centers = _make_platform(seed=2)
+    rng = np.random.default_rng(3)
+    rows = _rand_rows(rng, centers, 3)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    epoch = p.delta_epoch
+    with pytest.raises(ValueError):
+        p.append(numeric={"price": [1.0]}, vector={}, fold=False)
+    with pytest.raises(ValueError):
+        bad = _rand_rows(rng, centers, 2)
+        bad["vector"]["img"] = bad["vector"]["img"][:, :4]  # wrong dim
+        p.append(numeric=bad["numeric"], vector=bad["vector"], fold=False)
+    assert p.n_delta == 3 and p.delta_epoch == epoch  # untouched
+
+
+def test_auto_fold_past_ratio():
+    p, centers = _make_platform(seed=4, n=300)
+    p.auto_fold_ratio = 0.1
+    rng = np.random.default_rng(4)
+    rows = _rand_rows(rng, centers, 10)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    assert p.n_delta == 10
+    build0 = p.build_id
+    rows = _rand_rows(rng, centers, 25)  # 35 > 0.1 * 300
+    left = p.append(numeric=rows["numeric"], vector=rows["vector"])
+    assert left == 0 and p.n_delta == 0
+    assert p.build_id == build0 + 1  # fold bumped it
+    assert p.table.n_rows == 335
+
+
+def test_fold_preserves_logical_rows():
+    """Folding re-lays the physical order; the LOGICAL result set of a
+    query (by row_ids) must be identical before and after."""
+    p, centers = _make_platform(seed=5)
+    rng = np.random.default_rng(6)
+    rows = _rand_rows(rng, centers, 12)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    q = Q.And.of(Q.NR("price", 10, 90),
+                 Q.VK.of("img", p.table.vector["img"][5], 9))
+    before, _ = p.execute(q, record=False)
+    ids_before = set(p.view().row_ids[before].tolist())
+    folded = p.fold()
+    assert folded == 12 and p.n_delta == 0
+    after, _ = p.execute(q, record=False)
+    assert set(p.table.row_ids[after].tolist()) == ids_before
+    for dl in (True, False):
+        (got,), _ = p.execute_batch([q], device_loop=dl)
+        assert _rowset(got) == _rowset(after), dl
+
+
+def test_fold_keeps_tree_ball_invariant():
+    """fold() must widen leaf+ancestor radii so the enhanced-space tree
+    stays a correct bounding hierarchy for every inserted row."""
+    p, centers = _make_platform(seed=6)
+    rng = np.random.default_rng(7)
+    rows = _rand_rows(rng, centers, 20)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    p.fold()
+    tree = p.tree
+    for lid in tree.leaf_ids:
+        s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+        node = int(lid)
+        while node >= 0:
+            d = np.sqrt(((p.enhanced[s:e] - tree.centroid[node]) ** 2)
+                        .sum(1))
+            assert (d <= tree.radius[node] + 1e-3).all(), node
+            node = int(tree.parent[node])
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache semantics under writes
+# ---------------------------------------------------------------------------
+def test_plan_cache_warm_across_append_invalidated_by_fold():
+    p, centers = _make_platform(seed=7)
+    sess = p.session()
+    rng = np.random.default_rng(8)
+    batch = [Q.And.of(Q.NR("price", 20, 80),
+                      Q.VK.of("img", p.table.vector["img"][3], 5)),
+             Q.VR.of("img", p.table.vector["img"][9], 3.0)]
+    pl = sess.plan(batch)
+    assert not pl.cache_hit
+    pl.execute()
+    rows = _rand_rows(rng, centers, 5)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    pl2 = sess.plan(batch)
+    assert pl2.cache_hit, "append must NOT invalidate cached plans"
+    got, _ = pl2.execute()  # but execution must see the delta
+    for q, r in zip(batch, got):
+        assert _rowset(r) == _rowset(p.oracle(q)), q
+    p.fold()
+    pl3 = sess.plan(batch)
+    assert not pl3.cache_hit, "fold bumps build_id -> plans invalidate"
+    got, _ = pl3.execute()
+    for q, r in zip(batch, got):
+        assert _rowset(r) == _rowset(p.oracle(q)), q
+
+
+def test_explain_reports_delta_state():
+    """Pin the explain() delta block structure: epoch + live rows +
+    union tile count, fresh at explain time (not baked at plan time)."""
+    p, centers = _make_platform(seed=8)
+    sess = p.session()
+    batch = [Q.VK.of("img", p.table.vector["img"][2], 5)]
+    pl = sess.plan(batch)
+    ex0 = pl.explain()
+    assert ex0["delta"] == {"epoch": 0, "rows": 0, "tiles": 0}
+    rng = np.random.default_rng(11)
+    rows = _rand_rows(rng, centers, 7)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    ex1 = pl.explain()  # SAME plan object: delta read at explain time
+    assert ex1["delta"]["rows"] == 7
+    assert ex1["delta"]["epoch"] == p.delta_epoch
+    assert ex1["delta"]["tiles"] >= 1
+    assert set(ex1["delta"]) == {"epoch", "rows", "tiles"}
+    p.fold()
+    ex2 = sess.plan(batch).explain()
+    assert ex2["delta"]["rows"] == 0 and ex2["delta"]["tiles"] == 0
+    assert ex2["build_id"] == ex1["build_id"] + 1
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+def test_delta_survives_save_load():
+    p, centers = _make_platform(seed=9)
+    rng = np.random.default_rng(12)
+    rows = _rand_rows(rng, centers, 8)
+    p.append(numeric=rows["numeric"], vector=rows["vector"], fold=False)
+    q = Q.And.of(Q.NR("price", 5, 95),
+                 Q.VK.of("img", p.table.vector["img"][4], 6))
+    want = _rowset(p.oracle(q))
+    with tempfile.TemporaryDirectory() as dd:
+        save_platform(p, dd)
+        p2 = load_platform(dd)
+        assert p2.n_delta == 8
+        got, _ = p2.execute(q, record=False)
+        assert _rowset(got) == want
+        for dl in (True, False):
+            (gb,), _ = p2.execute_batch([q], device_loop=dl)
+            assert _rowset(gb) == want, dl
+        # the reloaded platform keeps ingesting and folding
+        more = _rand_rows(rng, centers, 3)
+        p2.append(numeric=more["numeric"], vector=more["vector"],
+                  fold=False)
+        assert p2.n_delta == 11
+        assert p2.fold() == 11
+        (gf,), _ = p2.execute_batch([q])
+        assert len(gf) == len(want)
+
+
+def test_fold_after_load_with_column_subset():
+    """A platform prepared over an explicit column subset must fold
+    correctly after save/load: the prepared column order round-trips
+    through the index manifest (regression: the default order would
+    feed wrong-dimension features to the frozen transform)."""
+    rng = np.random.default_rng(21)
+    n = 400
+    img = rng.normal(size=(n, 8)).astype(np.float32) * 4
+    audio = rng.normal(size=(n, 5)).astype(np.float32)
+    t = (MMOTable("subset").add_vector("img", img)
+         .add_vector("audio", audio)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32)))
+    p = MQRLD(t, seed=0)
+    p.prepare(columns=["img"], min_leaf=8, max_leaf=64)
+    with tempfile.TemporaryDirectory() as dd:
+        save_platform(p, dd)
+        p2 = load_platform(dd)
+        assert list(p2.layout) == ["img"]
+        p2.append(numeric={"price": [10.0, 20.0]},
+                  vector={"img": rng.normal(size=(2, 8)).astype(np.float32),
+                          "audio": rng.normal(size=(2, 5)).astype(np.float32)},
+                  fold=False)
+        assert p2.fold() == 2   # would raise a shape error before the fix
+        q = Q.VK.of("img", img[3], 5)
+        got, _ = p2.execute(q, record=False)
+        assert _rowset(got) == _rowset(p2.oracle(q))
+
+
+# ---------------------------------------------------------------------------
+# RetrievalServer.append: ordering + exception safety
+# ---------------------------------------------------------------------------
+class _StubEmbedder:
+    def __init__(self, table):
+        self.table = table
+
+    def embed(self, tokens):
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["img"][rows] + 0.01
+
+
+def test_server_append_between_submit_and_result():
+    """Appends between submit() and result() never corrupt in-flight
+    batches: pending futures resolve against base+delta at flush time
+    (freshness-exact), and a failing append leaves everything intact."""
+    p, centers = _make_platform(seed=10)
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=100)
+    futs = [srv.submit(RetrievalRequest(
+        tokens=np.asarray([i, 1], np.int32), attr="img", k=4,
+        predicate=Q.NR("price", 0, 100))) for i in (3, 77, 200)]
+    assert not any(f.done() for f in futs)
+    # rows that MUST become the nearest neighbors of request 0
+    target = _StubEmbedder(p.table).embed(
+        np.asarray([[3, 1]], np.int32))[0]
+    rng = np.random.default_rng(13)
+    srv.append(numeric={"price": np.full(3, 50.0, np.float32),
+                        "stock": np.full(3, 1.0, np.float32)},
+               vectors={"img": np.stack([target + 1e-4] * 3),
+                        "audio": rng.normal(size=(3, 5)).astype(np.float32)},
+               fold=False)
+    # a malformed append must not touch platform or pending queue
+    with pytest.raises(ValueError):
+        srv.append(numeric={"price": [1.0]}, vectors={}, fold=False)
+    with pytest.raises(ValueError):
+        srv.append(tokens=[np.asarray([1], np.int32)])  # attr missing
+    assert p.n_delta == 3
+    nb = p.table.n_rows
+    res = [f.result() for f in futs]
+    for r in res:
+        assert _rowset(r.rows) == _rowset(p.oracle(r.query))
+    assert any(i >= nb for i in res[0].rows.tolist()), \
+        "pending request must observe the append (freshness-exact)"
+
+
+def test_server_append_after_flush_does_not_mutate_results():
+    """Futures resolved BEFORE an append are immutable: their row
+    arrays do not change when the platform ingests more data."""
+    p, centers = _make_platform(seed=11)
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=2)
+    f1 = srv.submit(RetrievalRequest(tokens=np.asarray([5, 1], np.int32),
+                                     attr="img", k=3))
+    f2 = srv.submit(RetrievalRequest(tokens=np.asarray([9, 1], np.int32),
+                                     attr="img", k=3))  # triggers flush
+    assert f1.done() and f2.done()
+    before = f1.result().rows.copy()
+    target = _StubEmbedder(p.table).embed(
+        np.asarray([[5, 1]], np.int32))[0]
+    rng = np.random.default_rng(14)
+    srv.append(numeric={"price": [50.0], "stock": [1.0]},
+               vectors={"img": target[None, :] + 1e-5,
+                        "audio": rng.normal(size=(1, 5)).astype(np.float32)},
+               fold=False)
+    np.testing.assert_array_equal(f1.result().rows, before)
+    # while a NEW identical request sees the fresher answer
+    f3 = srv.submit(RetrievalRequest(tokens=np.asarray([5, 1], np.int32),
+                                     attr="img", k=3))
+    srv.flush()
+    assert not np.array_equal(f3.result().rows, before)
+    assert _rowset(f3.result().rows) == _rowset(p.oracle(f3.result().query))
+
+
+def test_server_append_tokens_are_embedded():
+    p, centers = _make_platform(seed=12)
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4)
+    rng = np.random.default_rng(15)
+    srv.append(tokens=[np.asarray([42, 1], np.int32)], attr="img",
+               numeric={"price": [10.0], "stock": [2.0]},
+               vectors={"audio": rng.normal(size=(1, 5)).astype(np.float32)},
+               fold=False)
+    assert p.n_delta == 1
+    emb = _StubEmbedder(p.table).embed(np.asarray([[42, 1]], np.int32))[0]
+    np.testing.assert_allclose(p.delta.live_vector("img")[0], emb,
+                               atol=1e-6)
+    # the embedded row is immediately the top hit for its own prompt
+    out = srv.serve([RetrievalRequest(tokens=np.asarray([42, 1], np.int32),
+                                      attr="img", k=1)])
+    assert out[0].rows[0] == p.table.n_rows

@@ -162,6 +162,147 @@ def test_topk_masked_ragged_tile_counts(c, bc):
         assert set(gi[i][fin[i]].tolist()) == set(wi[i][fin[i]].tolist())
 
 
+# ---------------------------------------------------------------------------
+# Delta-union edge sweeps: the tiles the async-ingest path feeds to the
+# beam loops (and through them to topk_l2_masked) — empty delta,
+# delta-only hits, duplicate distances straddling the base/delta
+# boundary, and the partially-filled last delta tile
+# ---------------------------------------------------------------------------
+def _union_platform(seed=0, n=300, d=6):
+    from repro.core.lake import MMOTable
+    from repro.core.platform import MQRLD
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(4, d)).astype(np.float32) * 5
+    lab = rng.integers(0, 4, n)
+    vec = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    t = (MMOTable("union").add_vector("v", vec)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32)))
+    p = MQRLD(t, seed=seed)
+    p.prepare(min_leaf=8, max_leaf=64)
+    return p, rng, centers, lab
+
+
+def _union_knn(p, qs, k, masks=None):
+    """Run the union KNN through BOTH loops on the engine's layouts and
+    assert they agree; returns the device-loop rows."""
+    from repro.core.engine import batched_knn, batched_knn_device
+    eng = p.engine()
+    _, rh = batched_knn(eng.geom["v"], eng.vec_tiles["v"], qs, k,
+                        masks=masks, beam=4)
+    _, rd = batched_knn_device(eng.geom_dev["v"], eng.vec_tiles_dev["v"],
+                               qs, k, masks=masks, beam=4)
+    for i in range(len(qs)):
+        assert set(rh[i][rh[i] >= 0].tolist()) == \
+            set(rd[i][rd[i] >= 0].tolist()), i
+    return rd
+
+
+def test_union_empty_delta_is_base_identity():
+    """Empty delta: the union state IS the base state (no copies), and
+    an explicit sync back to empty restores base arrays exactly."""
+    from repro.core.engine import batched_knn
+    p, rng, centers, _ = _union_platform(seed=1)
+    eng = p.engine()
+    nb = p.table.n_rows
+    assert eng.n == nb and eng.delta_tiles == 0
+    base_tiles = eng.vec_tiles["v"]
+    base_n_tiles = eng.n_tiles
+    qs = p.table.vector["v"][:4]
+    _, want = batched_knn(eng.geom["v"], eng.vec_tiles["v"], qs, 5, beam=4)
+    m = 9
+    p.append(numeric={"price": rng.uniform(0, 100, m).astype(np.float32)},
+             vector={"v": (centers[rng.integers(0, 4, m)]
+                           + rng.normal(size=(m, 6))).astype(np.float32)},
+             fold=False)
+    eng = p.engine()
+    assert eng.n_tiles > base_n_tiles and eng.delta_rows == m
+    eng.sync_delta(None, epoch=p.delta_epoch + 1)  # force back to empty
+    assert eng.vec_tiles["v"] is base_tiles  # base refs restored
+    assert eng.n == nb and eng.n_tiles == base_n_tiles
+    _, got = batched_knn(eng.geom["v"], eng.vec_tiles["v"], qs, 5, beam=4)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_union_delta_only_hits_k_exceeds_base_survivors():
+    """A mask admitting ONLY delta rows with k > base survivors (zero):
+    every returned row is a delta row, exactly the top-k of the delta."""
+    p, rng, centers, _ = _union_platform(seed=2)
+    nb = p.table.n_rows
+    m = 7
+    dvec = (centers[rng.integers(0, 4, m)]
+            + rng.normal(size=(m, 6))).astype(np.float32)
+    p.append(numeric={"price": rng.uniform(0, 100, m).astype(np.float32)},
+             vector={"v": dvec}, fold=False)
+    eng = p.engine()
+    qs = dvec[:3]
+    masks = np.zeros((3, eng.n), bool)
+    masks[:, nb:nb + m] = True            # delta rows only
+    rows = _union_knn(p, qs, 10, masks=masks)  # k=10 > m=7 survivors
+    for i in range(3):
+        got = rows[i][rows[i] >= 0]
+        assert len(got) == m and (got >= nb).all()
+        d2 = ((dvec - qs[i]) ** 2).sum(1)
+        want = {nb + j for j in np.argsort(d2, kind="stable").tolist()}
+        assert set(got.tolist()) == want
+
+
+def test_union_duplicate_distances_straddle_boundary():
+    """Delta rows that are exact copies of base rows: tied distances
+    straddling the base/delta boundary must come back with the ref
+    distance multiset, unique ids, and no invalid slots."""
+    from repro.kernels import ref
+    p, rng, _, _ = _union_platform(seed=3)
+    nb = p.table.n_rows
+    src = np.asarray([5, 77, 123])
+    dvec = p.table.vector["v"][src].copy()     # exact duplicates
+    p.append(numeric={"price": p.table.numeric["price"][src].copy()},
+             vector={"v": dvec}, fold=False)
+    qs = dvec[:2] + np.float32(1e-5)
+    rows = _union_knn(p, qs, 4)
+    full = np.concatenate([p.table.vector["v"], dvec])
+    for i in range(2):
+        got = rows[i][rows[i] >= 0]
+        assert len(set(got.tolist())) == len(got) == 4
+        d2 = ((full[got] - qs[i]) ** 2).sum(1)
+        wd, _ = ref.topk_l2(qs[i][None], jnp.asarray(full), 4)
+        np.testing.assert_allclose(np.sort(d2), np.sort(np.asarray(wd)[0]),
+                                   rtol=1e-4, atol=1e-5)
+        # both copies of the duplicated point must appear before any
+        # farther row: the query's own base+delta pair is in the top-2
+        assert {int(src[i]), nb + i} <= set(got.tolist())
+
+
+def test_union_partially_filled_last_delta_tile():
+    """m chosen so the pow2 capacity leaves the last delta tile partly
+    empty: pad slots (NaN columns, -1 row ids) never leak into KNN
+    results or predicate masks."""
+    p, rng, centers, _ = _union_platform(seed=4)
+    nb = p.table.n_rows
+    m = 5                                     # capacity pads to 8
+    p.append(numeric={"price": np.full(m, 55.0, np.float32)},
+             vector={"v": (centers[rng.integers(0, 4, m)]
+                           + rng.normal(size=(m, 6))).astype(np.float32)},
+             fold=False)
+    assert p.delta.capacity == 8
+    eng = p.engine()
+    assert eng.n == nb + 8                    # pad rows in the id space
+    qs = p.delta.live_vector("v")[:3]
+    rows = _union_knn(p, qs, 6)
+    assert (rows < nb + m).all(), "pad slot leaked into KNN results"
+    # grouped predicate masks: pads fail every predicate
+    from repro.core import query as Q
+    from repro.core.engine import EngineStats
+    masks = eng._predicate_masks([Q.NR("price", 0, 100)], EngineStats())
+    mk = masks[Q.NR("price", 0, 100)]
+    assert mk[:nb + m].sum() > 0 and not mk[nb + m:].any()
+    # and the full batched path stays oracle-exact
+    q = Q.And.of(Q.NE("price", 55.0, 0.5),
+                 Q.VK.of("v", qs[0], 8))
+    for dl in (True, False):
+        (got,), _ = p.execute_batch([q], device_loop=dl)
+        assert set(got.tolist()) == set(p.oracle(q).tolist()), dl
+
+
 @pytest.mark.parametrize("n,d", [(90, 11), (200, 5), (64, 33), (33, 2)])
 @pytest.mark.parametrize("r,g", [(2.5, 0.7), (10.0, 1.5)])
 def test_lpgf_sweep(n, d, r, g):
