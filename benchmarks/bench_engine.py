@@ -23,9 +23,29 @@ Async ingest (ISSUE 4): QPS on the planned device path with 0% / 10% /
 QPS), plus append latency, ``fold()`` latency, and a cold
 ``prepare()`` of base+delta for comparison (fold must be cheaper).
 
+Sharded execution (ISSUE 5): end-to-end and beam-loop-only QPS per
+shard count {1, 2, 8} through the T-sharded multi-device path (shard
+counts above the backend's device count are skipped — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to sweep all of
+them, as scripts/check.sh does). Every sharded batch is verified exact
+against the scalar baseline. The acceptance intent is sharded(8) >=
+1.5x the single-shard device loop; NOTE the measured ratio is
+hardware-bound — shards execute as concurrently as the host allows, so
+on CI containers with fewer physical cores than shards the sweep
+reports parallel efficiency rather than the full-scale speedup (the
+JSON records cpu_count/device_count alongside, so trajectories across
+PRs compare like with like).
+
+Machine-readable output: every run (smoke included) rewrites
+``BENCH_engine.json`` at the repo root — QPS per path x shard count,
+beam-round counts, delta-ratio QPS, environment — so the perf
+trajectory is tracked across PRs by diffing one file.
+
 ``--smoke`` (also via ``benchmarks.run --smoke``): toy n / batch,
 repeat=1 — keeps this module executed in CI.
 """
+import json
+import os
 import sys
 
 import numpy as np
@@ -38,6 +58,9 @@ from repro.core.platform import MQRLD
 
 N_ROWS = 20_000
 BATCH = 64
+SHARD_COUNTS = (1, 2, 8)
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_engine.json")
 
 
 def _platform(n=N_ROWS, d=32, seed=0):
@@ -75,10 +98,18 @@ def _hybrid_batch(p, qn=BATCH, seed=1):
 
 
 def run(csv: Csv):
+    import jax
     n = common.smoke_n(N_ROWS, 2_000)
     qn = common.smoke_n(BATCH, 16)
     p = _platform(n=n)
     queries = _hybrid_batch(p, qn=qn)
+    bench = {
+        "smoke": bool(common.SMOKE), "n_rows": n, "batch": qn,
+        "cpu_count": os.cpu_count(),
+        "device_count": jax.device_count(),
+        "qps": {}, "loop_qps": {}, "rounds": {}, "sharded": {},
+        "delta": {},
+    }
 
     def scalar_all():
         return [p.execute(q, record=False)[0] for q in queries]
@@ -146,6 +177,13 @@ def run(csv: Csv):
             t_loop_host / max(t_loop_dev, 1e-12),
             f"loop_host_us={us(t_loop_host):.0f} "
             f"loop_device_us={us(t_loop_dev):.0f} jobs={len(jobs)}")
+    bench["qps"].update(scalar=qps_scalar, host_loop=qps_host,
+                        device_loop=qps_dev)
+    bench["loop_qps"].update(
+        host_loop=len(jobs) / max(t_loop_host, 1e-12),
+        device_loop=len(jobs) / max(t_loop_dev, 1e-12))
+    bench["rounds"].update(host_loop=host_stats.knn_rounds,
+                           device_loop=dev_stats.knn_rounds)
 
     # ---- MOAPI v2 planner: plan-cache cold vs warm -----------------------
     # cold = a FRESH Session planning this batch archetype for the first
@@ -179,6 +217,53 @@ def run(csv: Csv):
     csv.add("engine/session_warm_per_query", us(t_warm_exec / len(queries)),
             f"qps={qps_warm:.0f} exact={warm_exact} "
             f"warm_vs_execute_batch={qps_warm / max(qps_dev, 1e-12):.2f}x")
+    bench["qps"]["session_warm"] = qps_warm
+
+    # ---- sharded execution: QPS per path x shard count -------------------
+    # e2e (planned session) and beam-loop-only QPS through the T-sharded
+    # path at every available shard count, exactness-checked per count.
+    # Runs BEFORE the ingest section so the scalar baseline still
+    # matches the table state. sharded(1) is the one-device mesh — the
+    # "single-shard" control for the scaling ratio; the legacy
+    # single-device loop (device_loop above) is reported alongside.
+    from repro.core.engine import EngineStats
+    qps_sh = {}
+    for s_cnt in SHARD_COUNTS:
+        if s_cnt > jax.device_count():
+            csv.add(f"engine/sharded_qps_s{s_cnt}", 0.0,
+                    f"SKIPPED needs {s_cnt} devices "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{s_cnt})")
+            continue
+        sess_s = p.session(shards=s_cnt)
+        sess_s.plan(queries).execute()     # warm + record QBS widths
+        sess_s.plan(queries).execute()     # compile seeded shapes
+        t_s, rows_s = timeit(
+            lambda: sess_s.plan(queries).execute()[0], repeat=5)
+        _, st_s = sess_s.plan(queries).execute()
+        exact_s = same(rows_s, r_scalar)
+        qps_s = len(queries) / t_s
+        qps_sh[s_cnt] = qps_s
+        eng_s = p.engine(shards=s_cnt)
+        t_loop_s, _ = timeit(
+            lambda: eng_s._run_jobs(jobs, EngineStats(), True), repeat=5)
+        loop_qps_s = len(jobs) / max(t_loop_s, 1e-12)
+        bench["sharded"][str(s_cnt)] = {
+            "qps": qps_s, "loop_qps": loop_qps_s,
+            "rounds": st_s.knn_rounds, "exact": bool(exact_s),
+            "vs_device_loop": qps_s / max(qps_dev, 1e-12),
+            "vs_sharded1": qps_s / max(qps_sh.get(1, qps_s), 1e-12),
+        }
+        csv.add(f"engine/sharded_qps_s{s_cnt}", qps_s,
+                f"exact={exact_s} rounds={st_s.knn_rounds} "
+                f"loop_qps={loop_qps_s:.0f} "
+                f"vs_device_loop={qps_s / max(qps_dev, 1e-12):.2f}x "
+                f"vs_s1={qps_s / max(qps_sh.get(1, qps_s), 1e-12):.2f}x")
+    if 8 in qps_sh:
+        csv.add("engine/sharded8_vs_single_shard",
+                qps_sh[8] / max(qps_sh.get(1, qps_dev), 1e-12),
+                f"target>=1.5 (hardware-bound: cpu_count="
+                f"{os.cpu_count()}, see module docstring)")
 
     # ---- async ingest: un-folded delta QPS + fold vs cold prepare --------
     # QPS on the planned device path with 0% / 10% / 50% of the table
@@ -244,6 +329,17 @@ def run(csv: Csv):
             f"exact_after={okf} qps_after={qps_folded:.0f} "
             f"cold_prepare_s={t_cold:.3f} "
             f"fold_vs_cold={t_cold / max(t_fold, 1e-12):.1f}x")
+    bench["delta"] = {
+        "qps_delta0": qps_d0, "qps_delta10": qps_d10,
+        "qps_delta50": qps_d50, "qps_folded": qps_folded,
+        "frac10": frac10, "frac50": frac50,
+        "append_s": t_append, "fold_s": t_fold,
+        "cold_prepare_s": t_cold,
+    }
+    bench["csv"] = [[name, v, d] for name, v, d in csv.rows]
+    with open(_JSON_PATH, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.normpath(_JSON_PATH)}")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,23 @@ query paths that return identical rows.
     when the rule never fires. V.R predicates route through the same
     tile beam (below) instead of the full column.
 
+Sharded execution (``shards``): the tile-major layout shards along T
+over a ("shards",) device mesh (``repro.sharding.partitioning`` is the
+placement layer: strided tile assignment, pad tiles with -inf radii).
+``batched_knn_sharded`` mirrors the device loop — fused per-shard
+start, one active-mask transfer, compacted straggler ``while_loop`` —
+with each round's per-shard top-k heaps merged by an all-gather k-way
+merge and the stopping rule evaluated against the pmin of the shards'
+next local bounds; ``_sharded_vr_fns`` runs the V.R triangle bound and
+union GEMM per shard with a host count/concat epilogue. Delta tiles are
+replicated (live on shard 0 only), preserving freshness-exactness
+verbatim. Every shard count returns an exact top-k — row-identical to
+the single-device loop whenever kth-boundary distances are unique (an
+exact tie at the boundary may resolve to a different equally-distant
+row); the single-device paths remain the exactness oracle. See the
+"Sharded multi-device execution" section below for layout/merge
+contracts.
+
 V.R routing (device path): the tile-level planner ``_vr_leaf_plan``
 keeps only tiles satisfying the triangle bound |q - C| - R <= r (C, R
 the tile ball; r the query radius), distances are evaluated on the
@@ -91,6 +108,9 @@ import numpy as np
 from repro.core import query as Q
 from repro.core.lake import _next_pow2
 from repro.kernels import ops
+from repro.sharding.partitioning import (shard_put, strided_tile_layout,
+                                         tile_mesh)
+from repro.train.compression import shard_map_compat
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +202,7 @@ class EngineStats:
     vr_tiles_scanned: int = 0    # tiles gathered by the V.R tile planner
     vr_tiles_pruned: int = 0     # tiles dropped by the V.R triangle bound
     vr_dense_fallbacks: int = 0  # V.R groups that took the dense column path
+    shards: int = 0              # 0 = unsharded; else the mesh size used
     time_s: float = 0.0
     # (archetype, converged width in tiles) per executed KNN group — the
     # feedback signal Session records into QBS for query-aware seeding
@@ -370,10 +391,10 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         r, active, bd, br, nbuck, nrows, rr = st
         start = r * w
         sel = jax.lax.dynamic_slice_in_dim(order_pad, start, w, axis=1)
+        lb_col = jax.lax.dynamic_slice_in_dim(lb_pad, start, w, axis=1)
         # columns whose lower bound is +inf are padding, or real tiles
         # with no mask-surviving rows — neither can contribute a row
-        colv = ~jnp.isinf(jax.lax.dynamic_slice_in_dim(
-            lb_pad, start, w, axis=1))                   # (G, w)
+        colv = ~jnp.isinf(lb_col)                        # (G, w)
         cand = bucket_rows[sel].reshape(g, -1)           # (G, w*cap)
         valid = ((cand >= 0) & jnp.repeat(colv, bucket_rows.shape[1],
                                           axis=1) & active[:, None])
@@ -382,8 +403,13 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         if masks_tiles is not None:
             ma = jnp.take_along_axis(masks_tiles, sel[:, :, None], axis=1)
             valid = valid & ma.reshape(g, -1)
+        # per-candidate squared tile bounds: the kernel's tile early-out
+        # skips a block's distance+merge once every valid candidate in
+        # it is bound-refuted by the running kth (converged queries stop
+        # paying for straggler tiles)
+        lb2 = jnp.repeat(lb_col * lb_col, bucket_rows.shape[1], axis=1)
         d2, idx = ops.topk_l2_masked(qs, pts, valid, k,
-                                     interpret=interpret)
+                                     interpret=interpret, lb2=lb2)
         rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
         rows = jnp.where(idx >= 0, rows, -1)
         # merge with the carry: carry first, lax.top_k is stable, so
@@ -549,6 +575,442 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Sharded multi-device execution (tile-major layout sharded along T)
+# ---------------------------------------------------------------------------
+# The tile axis is the natural shard axis: tiles are self-contained (ball
+# metadata + row ids + data rows), so splitting T across a ("shards",)
+# device mesh gives shared-nothing partitions whose only cross-talk is a
+# per-round k-way merge of (G, k) heaps. Layout contract (see
+# repro.sharding.partitioning): the padded tile axis is permuted STRIDED
+# (tile t -> shard t mod S, each shard an even 1/S sample of the
+# tree-ordered tile sequence), pad tiles carry -1 rows and -inf radii
+# (lower bound +inf — invisible to every pruning rule). Delta tiles (async
+# ingest) are NOT sharded: they are replicated to every device and gated
+# by axis_index so only shard 0's copies are live (radius -inf elsewhere)
+# — the delta is small, re-uploading it per write epoch is cheap, and
+# keeping it whole preserves PR 4's freshness-exactness verbatim with no
+# cross-shard row duplication.
+#
+# Merge semantics (exactness): each shard keeps a LOCAL top-k heap over
+# only its own (disjoint) tiles; every round ends with an
+# all-reduce-style merge — all_gather the S local heaps, one stable
+# top_k over (G, S*k) — giving the replicated GLOBAL heap. A query
+# retires when its global kth distance <= pmin over shards of the next
+# unscanned LOCAL lower bound, which equals the next unscanned GLOBAL
+# bound — the scalar executor's stopping rule. Results match the
+# single-device loop row-for-row whenever the kth-boundary distance is
+# unique (carry-first + shard-order keeps the merge deterministic);
+# rows tied EXACTLY at the kth distance may resolve to a different
+# equally-distant row than the single-device visit-order tie-break —
+# the returned distance multiset is identical either way, so every
+# shard count returns AN exact top-k. Keeping local heaps local is what
+# makes the merge exact: merging the global heap back into shard carries
+# would duplicate rows across shards and let copies crowd out true
+# neighbors.
+@dataclass
+class ShardedTiles:
+    """One attribute's tile-major state laid out over a ("shards",) mesh:
+    base tiles sharded along T (strided placement), delta tiles
+    replicated (live on shard 0 only). ``rows_np`` keeps the permuted
+    host copy for mask staging and row decoding."""
+    mesh: object
+    shards: int
+    t_local: int            # padded base tiles per shard
+    cap: int
+    centroid: jax.Array     # (S*t_local, d)   P("shards", None)
+    radius: jax.Array       # (S*t_local,)     P("shards")
+    bucket_rows: jax.Array  # (S*t_local, cap) P("shards", None)
+    data_tiles: jax.Array   # (S*t_local, cap, d) P("shards", None, None)
+    rows_np: np.ndarray     # host copy of the permuted padded rows
+    perm: np.ndarray        # padded position -> original tile index
+    tile_pp: Optional[jax.Array] = None   # (S*t_local, cap) row sq-norms
+    # replicated delta extension (zero-width when no delta)
+    td: int = 0
+    d_centroid: Optional[jax.Array] = None
+    d_radius: Optional[jax.Array] = None
+    d_bucket_rows: Optional[jax.Array] = None
+    d_data_tiles: Optional[jax.Array] = None
+    d_rows_np: Optional[np.ndarray] = None
+    d_tile_pp: Optional[jax.Array] = None
+
+    @property
+    def t_total(self) -> int:
+        """Per-shard tile count the compiled bodies see (base + delta)."""
+        return self.t_local + self.td
+
+
+def make_sharded_tiles(mesh, shards: int, centroid: np.ndarray,
+                       radius: np.ndarray, rows_np: np.ndarray,
+                       tiles_np: np.ndarray, *, with_pp: bool = False
+                       ) -> ShardedTiles:
+    """Pad + permute one layout's tile arrays (strided placement) and
+    upload them pre-sharded — each device receives only its slice."""
+    from jax.sharding import PartitionSpec as P
+    t, cap = rows_np.shape
+    d = centroid.shape[1]
+    perm, t_local, t_pad = strided_tile_layout(t, shards)
+    src = np.minimum(perm, t - 1)
+    pad = perm >= t
+    cen = np.where(pad[:, None], 0.0, centroid[src]).astype(np.float32)
+    rad = np.where(pad, -np.inf, radius[src]).astype(np.float32)
+    rws = np.where(pad[:, None], -1, rows_np[src]).astype(np.int32)
+    dts = np.where(pad[:, None, None], 0.0, tiles_np[src]
+                   ).astype(np.float32)
+    st = ShardedTiles(
+        mesh=mesh, shards=shards, t_local=t_local, cap=cap,
+        centroid=shard_put(cen, mesh, P("shards", None)),
+        radius=shard_put(rad, mesh, P("shards")),
+        bucket_rows=shard_put(rws, mesh, P("shards", None)),
+        data_tiles=shard_put(dts, mesh, P("shards", None, None)),
+        rows_np=rws, perm=perm)
+    if with_pp:
+        st.tile_pp = shard_put((dts ** 2).sum(-1), mesh, P("shards", None))
+    st_clear_delta(st)
+    return st
+
+
+def st_clear_delta(st: ShardedTiles):
+    """Zero-width replicated delta arrays (the no-delta state)."""
+    from jax.sharding import PartitionSpec as P
+    cap, d = st.cap, st.centroid.shape[1]
+    rep = lambda x, spec: shard_put(x, st.mesh, spec)
+    st.td = 0
+    st.d_centroid = rep(np.zeros((0, d), np.float32), P(None, None))
+    st.d_radius = rep(np.zeros((0,), np.float32), P(None))
+    st.d_bucket_rows = rep(np.zeros((0, cap), np.int32), P(None, None))
+    st.d_data_tiles = rep(np.zeros((0, cap, d), np.float32),
+                          P(None, None, None))
+    st.d_rows_np = np.zeros((0, cap), np.int32)
+    if st.tile_pp is not None:
+        st.d_tile_pp = rep(np.zeros((0, cap), np.float32), P(None, None))
+
+
+def st_set_delta(st: ShardedTiles, rows_np: np.ndarray, tiles_np: np.ndarray,
+                 centroid: np.ndarray, radius: np.ndarray):
+    """Refresh the replicated delta extension (one small upload per
+    write epoch; shapes change only on pow2 capacity doublings, so the
+    compiled bodies re-trace rarely)."""
+    from jax.sharding import PartitionSpec as P
+    rep = lambda x, spec: shard_put(np.asarray(x), st.mesh, spec)
+    st.td = len(rows_np)
+    st.d_centroid = rep(centroid.astype(np.float32), P(None, None))
+    st.d_radius = rep(radius.astype(np.float32), P(None))
+    st.d_bucket_rows = rep(rows_np.astype(np.int32), P(None, None))
+    st.d_data_tiles = rep(tiles_np.astype(np.float32), P(None, None, None))
+    st.d_rows_np = rows_np.astype(np.int32)
+    if st.tile_pp is not None:
+        st.d_tile_pp = rep((tiles_np.astype(np.float32) ** 2).sum(-1),
+                           P(None, None))
+
+
+def _shard_heap_merge(lbd, lbr, k: int):
+    """The all-reduce-style k-way merge: gather every shard's local
+    heap (shard order = deterministic tie-break) and keep the global
+    best k with one stable top_k. Local heaps cover disjoint rows, so
+    the merged heap is the exact global top-k of everything scanned."""
+    ad = jax.lax.all_gather(lbd, "shards", axis=1, tiled=True)
+    ar = jax.lax.all_gather(lbr, "shards", axis=1, tiled=True)
+    negd, pick = jax.lax.top_k(-ad, k)
+    return -negd, jnp.take_along_axis(ar, pick, axis=1)
+
+
+def _sharded_local_scan(qs, sel, colv, act, lbd, lbr, br_all, dt_all,
+                        mt_all, k: int, interpret: bool, lb_col=None):
+    """One shard's beam scan of its selected local tiles, merged into
+    its LOCAL heap (stable: carry first, so earlier lower-bound tiles
+    keep the visit-order tie-break)."""
+    g = qs.shape[0]
+    cap = br_all.shape[1]
+    cand = br_all[sel].reshape(g, -1)
+    valid = (cand >= 0) & jnp.repeat(colv, cap, axis=1)
+    if act is not None:
+        valid = valid & act[:, None]
+    pts = jnp.take(dt_all, sel, axis=0).reshape(g, -1, dt_all.shape[-1])
+    ma = jnp.take_along_axis(mt_all, sel[:, :, None], axis=1)
+    valid = valid & ma.reshape(g, -1)
+    lb2 = None
+    if lb_col is not None:
+        lb2 = jnp.repeat(lb_col * lb_col, cap, axis=1)
+    d2, idx = ops.topk_l2_masked(qs, pts, valid, k, interpret=interpret,
+                                 lb2=lb2)
+    rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
+    rows = jnp.where(idx >= 0, rows, -1)
+    alld = jnp.concatenate([lbd, d2], axis=1)
+    allr = jnp.concatenate([lbr, rows], axis=1)
+    negd, pick = jax.lax.top_k(-alld, k)
+    return -negd, jnp.take_along_axis(allr, pick, axis=1), \
+        jnp.sum(valid)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
+                     w: int, budget: int, k: int, interpret: bool):
+    """Build (start_fn, loop_fn) — the two compiled shard_map dispatches
+    of the sharded beam loop, memoized per (mesh, layout, widths).
+
+    start_fn: per-shard mask relayout tail + prologue (local packed
+    bound sort) + first round of ``w1`` LOCAL tiles (global coverage
+    S*w1) + the cross-shard heap merge + the stopping rule. loop_fn:
+    the compacted straggler loop — per round each shard scans its next
+    ``w`` local tiles into its local heap, then the round's all-gather
+    merge recomputes the global heap and retires queries whose kth
+    distance <= pmin over shards of the next local bound."""
+    from jax.sharding import PartitionSpec as P
+    t_tot = t_local + td
+    prologue = _knn_prologue_fast if t_tot <= 4096 else _knn_prologue
+
+    def _assemble(n_masked, mtm, dmtm, g, cen_l, rad_l, br_l, dt_l,
+                  dcen, drad, dbr, ddt):
+        """Per-shard (local base + gated replicated delta) tile arrays
+        and the full (g, t_tot, cap) mask stack."""
+        sidx = jax.lax.axis_index("shards")
+        drad_g = jnp.where(sidx == 0, drad,
+                           jnp.full_like(drad, -jnp.inf))
+        cen = jnp.concatenate([cen_l, dcen])
+        rad = jnp.concatenate([rad_l, drad_g])
+        br = jnp.concatenate([br_l, dbr])
+        dt = jnp.concatenate([dt_l, ddt])
+        mt_m = jnp.concatenate([mtm, dmtm], axis=1)
+        tail = jnp.broadcast_to((br >= 0)[None],
+                                (g - n_masked, br.shape[0], cap))
+        mt = jnp.concatenate([mt_m, tail], axis=0)
+        return cen, rad, br, dt, mt
+
+    def start(qs, mtm, dmtm, cen_l, rad_l, br_l, dt_l,
+              dcen, drad, dbr, ddt):
+        g = qs.shape[0]
+        n_masked = mtm.shape[0]
+        cen, rad, br, dt, mt = _assemble(
+            n_masked, mtm, dmtm, g, cen_l, rad_l, br_l, dt_l,
+            dcen, drad, dbr, ddt)
+        order_l, lb_l = prologue(qs, cen, rad, mt)
+        l = lb_l.shape[1]
+        bd0 = jnp.full((g, k), jnp.inf, jnp.float32)
+        br0 = jnp.full((g, k), -1, jnp.int32)
+        colv = ~jnp.isinf(lb_l[:, :w1])
+        lbd, lbr, nvalid = _sharded_local_scan(
+            qs, order_l[:, :w1], colv, None, bd0, br0, br, dt, mt, k,
+            interpret)
+        gbd, gbr = _shard_heap_merge(lbd, lbr, k)
+        kth = jnp.sqrt(gbd[:, -1])
+        nxt = lb_l[:, w1] if w1 < l else jnp.full(g, jnp.inf, jnp.float32)
+        nxt = jax.lax.pmin(nxt, "shards")
+        return (order_l, lb_l, mt, lbd, lbr, gbd, gbr, kth > nxt,
+                jax.lax.psum(nvalid, "shards"))
+
+    start_fn = jax.jit(shard_map_compat(
+        start, mesh,
+        in_specs=(P(None, None), P(None, "shards", None), P(None, None,
+                                                            None),
+                  P("shards", None), P("shards"), P("shards", None),
+                  P("shards", None, None), P(None, None), P(None),
+                  P(None, None), P(None, None, None)),
+        out_specs=(P(None, "shards"), P(None, "shards"),
+                   P(None, "shards", None), P(None, "shards"),
+                   P(None, "shards"), P(None, None), P(None, None),
+                   P(None), P(None)),
+        manual_axes=("shards",)))
+
+    def loop(idx, active0, qs_f, lbd_f, lbr_f, order_f, lb_f, mt_f,
+             br_l, dt_l, dbr, ddt):
+        qs = jnp.take(qs_f, idx, axis=0)
+        lbd = jnp.take(lbd_f, idx, axis=0)
+        lbr = jnp.take(lbr_f, idx, axis=0)
+        mt = jnp.take(mt_f, idx, axis=0)
+        g = qs.shape[0]
+        br = jnp.concatenate([br_l, dbr])
+        dt = jnp.concatenate([dt_l, ddt])
+        l = order_f.shape[1]
+        order_pad = jnp.pad(jnp.take(order_f, idx, axis=0)[:, w1:],
+                            ((0, 0), (0, budget * w - (l - w1))))
+        lb_pad = jnp.pad(jnp.take(lb_f, idx, axis=0)[:, w1:],
+                         ((0, 0), (0, budget * w + 1 - (l - w1))),
+                         constant_values=jnp.inf)
+        gbd0, gbr0 = _shard_heap_merge(lbd, lbr, k)
+
+        def cond(st):
+            return (st[0] < budget) & jnp.any(st[1])
+
+        def body(st):
+            r, act, _, _, lbd, lbr, nbuck, nrows, rr = st
+            start_ = r * w
+            sel = jax.lax.dynamic_slice_in_dim(order_pad, start_, w,
+                                               axis=1)
+            lb_col = jax.lax.dynamic_slice_in_dim(lb_pad, start_, w,
+                                                  axis=1)
+            colv = ~jnp.isinf(lb_col)
+            lbd2, lbr2, nv = _sharded_local_scan(
+                qs, sel, colv, act, lbd, lbr, br, dt, mt, k, interpret,
+                lb_col=lb_col)
+            gbd2, gbr2 = _shard_heap_merge(lbd2, lbr2, k)
+            kth = jnp.sqrt(gbd2[:, -1])
+            nxt = jax.lax.pmin(jax.lax.dynamic_slice_in_dim(
+                lb_pad, start_ + w, 1, axis=1)[:, 0], "shards")
+            act2 = act & ~(kth <= nxt)
+            rr = jnp.where(act & ~act2, r + 1, rr)
+            nbuck = nbuck + jax.lax.psum(
+                jnp.sum(jnp.where(act[:, None], colv, False)), "shards")
+            nrows = nrows + jax.lax.psum(nv, "shards")
+            return (r + 1, act2, gbd2, gbr2, lbd2, lbr2, nbuck, nrows,
+                    rr)
+
+        st0 = (jnp.int32(0), active0, gbd0, gbr0, lbd, lbr,
+               jnp.int32(0), jnp.int32(0), jnp.zeros(g, jnp.int32))
+        r, act_f, gbd, gbr, _, _, nbuck, nrows, rr = \
+            jax.lax.while_loop(cond, body, st0)
+        rr = jnp.where(act_f, r, rr)
+        return gbd, gbr, jnp.stack([r, nbuck, nrows]), rr
+
+    loop_fn = jax.jit(shard_map_compat(
+        loop, mesh,
+        in_specs=(P(None), P(None), P(None, None), P(None, "shards"),
+                  P(None, "shards"), P(None, "shards"), P(None, "shards"),
+                  P(None, "shards", None), P("shards", None),
+                  P("shards", None, None), P(None, None),
+                  P(None, None, None)),
+        out_specs=(P(None, None), P(None, None), P(None), P(None)),
+        manual_axes=("shards",)))
+    return start_fn, loop_fn
+
+
+def batched_knn_sharded(st: ShardedTiles, qs, k: int, *,
+                        masks_np: Optional[np.ndarray] = None,
+                        beam: int = 8, interpret: bool = True,
+                        w1: Optional[int] = None, ws: Optional[int] = None,
+                        stats: Optional[EngineStats] = None,
+                        conv_out: Optional[list] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact batched (optionally row-masked) KNN over the T-sharded
+    layout: same contract (and identical rows) as ``batched_knn_device``.
+
+    Structure mirrors the single-device loop — one fused start dispatch
+    (per-shard prologue + first round + merge), one (G,) active-mask
+    transfer, one compacted straggler-loop dispatch — but every stage
+    runs per shard over 1/S of the tiles, and each round's per-shard
+    top-k heaps are merged with the all-gather k-way merge (module
+    section docstring). Round widths ``w1``/``ws`` are PER-SHARD tile
+    counts: defaults beam/2 and beam scaled down by the shard count, so
+    global first-round coverage (S * w1) matches the single-device
+    default and total per-round work stays flat while the latency is
+    split S ways. ``masks_np`` holds masks for the masked PREFIX of the
+    batch only (the unmasked tail's all-true tiles are built on device);
+    staging relayouts masks host-side into tile-major slabs uploaded
+    pre-sharded, so no (G, n) mask is ever broadcast to every device.
+    ``conv_out`` (see ``batched_knn``): per-query converged widths in
+    per-shard tiles of this layout."""
+    t0 = time.time()
+    s = st.shards
+    qs_np = np.asarray(qs, np.float32)
+    g = len(qs_np)
+    qs_j = jnp.asarray(qs_np)
+    l = st.t_total
+    w1 = max(1, min(w1 if w1 else max(1, -(-max(1, beam // 2) // s)), l))
+    w = max(1, ws if ws else max(1, -(-beam // s)))
+    budget = max(1, -(-(l - w1) // w)) if l > w1 else 1
+    start_fn, loop_fn = _sharded_knn_fns(
+        st.mesh, st.t_local, st.td, st.cap, w1, w, budget, k, interpret)
+    # host-side tile-major mask staging, uploaded pre-sharded
+    from jax.sharding import PartitionSpec as P
+    n_masked = 0 if masks_np is None else len(masks_np)
+    if n_masked:
+        mtm_np = (masks_np[:, np.maximum(st.rows_np, 0)]
+                  & (st.rows_np >= 0)[None])
+        dmtm_np = (masks_np[:, np.maximum(st.d_rows_np, 0)]
+                   & (st.d_rows_np >= 0)[None])
+    else:
+        mtm_np = np.zeros((0,) + st.rows_np.shape, bool)
+        dmtm_np = np.zeros((0,) + st.d_rows_np.shape, bool)
+    mtm = shard_put(mtm_np, st.mesh, P(None, "shards", None))
+    dmtm = shard_put(dmtm_np, st.mesh, P(None, None, None))
+    order_f, lb_f, mt_f, lbd, lbr, gbd, gbr, active, nvalid = start_fn(
+        qs_j, mtm, dmtm, st.centroid, st.radius, st.bucket_rows,
+        st.data_tiles, st.d_centroid, st.d_radius, st.d_bucket_rows,
+        st.d_data_tiles)
+    if stats is not None:
+        stats.knn_rounds += 1
+        stats.knn_buckets += g * w1 * s
+        stats.rows_scanned += int(nvalid)
+    conv = np.full(g, w1, np.int64)
+    act = np.nonzero(np.asarray(active))[0]
+    d2_out, rows_out = gbd, gbr
+    if len(act) and w1 < l:
+        na = len(act)
+        gp = _next_pow2(na)
+        padded = np.zeros(gp, np.int64)
+        padded[:na] = act
+        idx = jnp.asarray(padded, jnp.int32)
+        active0 = jnp.asarray(np.arange(gp) < na)
+        bd, br, loop_stats, retire_round = loop_fn(
+            idx, active0, qs_j, lbd, lbr, order_f, lb_f, mt_f,
+            st.bucket_rows, st.data_tiles, st.d_bucket_rows,
+            st.d_data_tiles)
+        d2_np = np.asarray(d2_out, dtype=np.float32).copy()
+        rows_np_out = np.asarray(rows_out).copy()
+        d2_np[act] = np.asarray(bd)[:na]
+        rows_np_out[act] = np.asarray(br)[:na]
+        d2_out, rows_out = d2_np, rows_np_out
+        conv[act] = np.minimum(
+            w1 + np.asarray(retire_round)[:na].astype(np.int64) * w, l)
+        if stats is not None:
+            rounds, nbuck, nrows = np.asarray(loop_stats)
+            stats.knn_rounds += int(rounds)
+            stats.knn_buckets += int(nbuck)
+            stats.rows_scanned += int(nrows)
+    if stats is not None:
+        stats.time_s += time.time() - t0
+    if conv_out is not None:
+        conv_out.append(conv)
+    return np.sqrt(np.asarray(d2_out)), \
+        np.asarray(rows_out).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Sharded V.R (tile planner + union evaluation per shard)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _sharded_vr_fns(mesh, t_local: int, td: int, cap: int):
+    """(plan_fn, eval_fn) for the sharded V.R route, memoized like the
+    KNN dispatches. plan_fn evaluates the triangle bound per shard over
+    local (+ shard-0-gated delta) tile balls; the (g, S*(t_local+td))
+    survival matrix is assembled by the output spec — the cross-shard
+    "count" epilogue is just host numpy over it. eval_fn runs the
+    union GEMM per shard over each shard's own surviving tiles (padded
+    to one uniform width); the packed int8 verdicts concatenate across
+    shards for the host decode — the "concat" epilogue."""
+    from jax.sharding import PartitionSpec as P
+
+    def plan(qs, r, cen_l, rad_l, dcen, drad):
+        sidx = jax.lax.axis_index("shards")
+        drad_g = jnp.where(sidx == 0, drad,
+                           jnp.full_like(drad, -jnp.inf))
+        cen = jnp.concatenate([cen_l, dcen])
+        rad = jnp.concatenate([rad_l, drad_g])
+        return _vr_leaf_plan(qs, r, cen, rad)
+
+    plan_fn = jax.jit(shard_map_compat(
+        plan, mesh,
+        in_specs=(P(None, None), P(None), P("shards", None), P("shards"),
+                  P(None, None), P(None)),
+        out_specs=P(None, "shards"), manual_axes=("shards",)))
+
+    def ueval(qs, r2, sel_u, member, br_l, dt_l, pp_l, dbr, ddt, dpp):
+        br = jnp.concatenate([br_l, dbr])
+        dt = jnp.concatenate([dt_l, ddt])
+        pp = jnp.concatenate([pp_l, dpp])
+        return _vr_union_eval(qs, r2, sel_u[0], member[0], dt, pp,
+                              br)[None]
+
+    eval_fn = jax.jit(shard_map_compat(
+        ueval, mesh,
+        in_specs=(P(None, None), P(None), P("shards", None),
+                  P("shards", None, None), P("shards", None),
+                  P("shards", None, None), P("shards", None),
+                  P(None, None), P(None, None, None), P(None, None)),
+        out_specs=P("shards", None, None), manual_axes=("shards",)))
+    return plan_fn, eval_fn
+
+
+# ---------------------------------------------------------------------------
 # Grouped predicate masks (one compiled call per (type, attr) group)
 # ---------------------------------------------------------------------------
 @jax.jit
@@ -657,12 +1119,21 @@ def plannable(q: Q.Query) -> bool:
 
 
 def knn_archetype(attr: str, kmax: int, masked: bool,
-                  device_loop: bool) -> str:
+                  device_loop: bool, shards: int = 0) -> str:
     """QBS convergence key for one KNN job group. Widths are in tiles of
     the layout the loop actually scans, which differs between the device
-    (finer ``device_tile``) and host layouts — hence the loop tag."""
+    (finer ``device_tile``) and host layouts — hence the loop tag; the
+    sharded loop's widths are PER-SHARD tile counts, so each shard
+    topology keys separately (``:sN``). Execution appends a ``:delta``
+    suffix while un-folded delta tiles are unioned in (see
+    ``HybridEngine._run_jobs``) — delta scans converge wider, and
+    folding them into one key would permanently inflate the archetype's
+    p90 after ``fold()``."""
+    tag = "dl" if device_loop else "hl"
+    if shards:
+        tag += f":s{shards}"
     return (f"VK:{attr}:k{kmax}:{'masked' if masked else 'plain'}"
-            f":{'dl' if device_loop else 'hl'}")
+            f":{tag}")
 
 
 @dataclass(frozen=True)
@@ -678,7 +1149,8 @@ class KnnGroupSpec:
 
 
 def group_job_specs(job_specs: Sequence[Tuple[str, int, bool]],
-                    device_loop: bool) -> Tuple[KnnGroupSpec, ...]:
+                    device_loop: bool, shards: int = 0
+                    ) -> Tuple[KnnGroupSpec, ...]:
     """THE grouping policy, shared by the engine (per batch, from live
     jobs) and the planner (cached, from shape specs) so the two can
     never drift apart.
@@ -706,7 +1178,7 @@ def group_job_specs(job_specs: Sequence[Tuple[str, int, bool]],
         specs.append(KnnGroupSpec(
             attr=attr, jobs=tuple(idxs), kmax=kmax, n_masked=n_masked,
             archetype=knn_archetype(attr, kmax, n_masked > 0,
-                                    device_loop)))
+                                    device_loop, shards)))
     return tuple(specs)
 
 
@@ -722,6 +1194,8 @@ class EnginePlan:
     job_specs: Tuple[Tuple[str, int, bool], ...]  # (attr, k, masked)/job
     groups: Tuple[KnnGroupSpec, ...]
     seeds: Optional[Dict[str, int]] = None        # archetype -> width
+    shards: int = 0   # the shard topology the grouping was keyed for;
+    #                   must match the executing engine (0 = unsharded)
 
 
 class HybridEngine:
@@ -742,9 +1216,19 @@ class HybridEngine:
     def __init__(self, tree, table, meta, *, interpret: bool = True,
                  beam: int = 16, tile: int = 128,
                  device_loop: bool = True,
-                 device_tile: Optional[int] = None):
+                 device_tile: Optional[int] = None,
+                 shards: Optional[int] = None, mesh=None):
         self.device_loop = device_loop
         self.device_tile = device_tile or max(32, tile // 2)
+        # sharded execution: shards=None keeps the single-device paths
+        # (the exactness oracle); shards >= 1 lays the tile-major state
+        # out over a ("shards",) mesh (shards=1 exercises the sharded
+        # program on a one-device mesh). The mesh needs that many
+        # backend devices — tile_mesh raises with the XLA_FLAGS hint.
+        self.shards = shards
+        self.mesh = None
+        if shards is not None:
+            self.mesh = mesh if mesh is not None else tile_mesh(shards)
         leaves = tree.leaf_ids
         starts = np.asarray(tree.bucket_start[leaves])
         ends = np.asarray(tree.bucket_end[leaves])
@@ -791,12 +1275,37 @@ class HybridEngine:
         rows_dev, cap_dev, _ = bucket_tiles(starts, ends,
                                             self.device_tile)
         self.cap_dev = cap_dev
+        self.bucket_rows_dev_np = rows_dev
         br_dev = jnp.asarray(rows_dev)
         self.bucket_rows_dev = br_dev
         self.vec_tiles_dev = {a: jnp.asarray(tile_data(c, rows_dev))
                               for a, c in table.vector.items()}
         self.geom_dev = {a: _tile_geometry(c, rows_dev, br_dev, cap_dev)
                          for a, c in table.vector.items()}
+        # T-sharded copies of both layouts: the finer device layout
+        # drives the sharded KNN beam loop, the coarse layout (with
+        # per-row squared norms) the sharded V.R union GEMM. Base tiles
+        # are uploaded pre-sharded once; delta tiles ride replicated.
+        # KNOWN COST: a sharded engine also keeps the unsharded layouts
+        # above — the per-call device_loop=False oracle and the scalar
+        # parity paths still read them, and sync_delta derives the
+        # union from them; on a real accelerator deployment that is an
+        # extra table copy on device 0 (drop the oracle paths in a
+        # memory-tight deployment to reclaim it).
+        self.sharded_dev: Dict[str, ShardedTiles] = {}
+        self.sharded_vr: Dict[str, ShardedTiles] = {}
+        if self.mesh is not None:
+            for a, c in table.vector.items():
+                gd = self.geom_dev[a]
+                self.sharded_dev[a] = make_sharded_tiles(
+                    self.mesh, self.shards, np.asarray(gd.centroid),
+                    np.asarray(gd.radius), rows_dev,
+                    np.asarray(self.vec_tiles_dev[a]))
+                gc = self.geom[a]
+                self.sharded_vr[a] = make_sharded_tiles(
+                    self.mesh, self.shards, np.asarray(gc.centroid),
+                    np.asarray(gc.radius), rows_np,
+                    np.asarray(self.vec_tiles[a]), with_pp=True)
         self.num_lo, self.num_hi = {}, {}
         for a, c in table.numeric.items():
             cv = np.asarray(c, np.float32)[np.maximum(rows_np, 0)]
@@ -910,6 +1419,10 @@ class HybridEngine:
                 setattr(self, k, v)
             self.delta_rows = 0
             self.delta_tiles = 0
+            for st in self.sharded_dev.values():
+                st_clear_delta(st)
+            for st in self.sharded_vr.values():
+                st_clear_delta(st)
             return
         base = self._base
         nb = self.n_base
@@ -964,6 +1477,15 @@ class HybridEngine:
                                           jnp.asarray(cen_d)]),
                 radius=jnp.concatenate([gd0.radius, jnp.asarray(rad_d)]),
                 bucket_rows=br_dev_u, cap=self.cap_dev)
+            # sharded states: delta tiles ride REPLICATED (live on
+            # shard 0 only) — one small upload per write epoch, base
+            # shards untouched, freshness-exactness preserved verbatim
+            if a in self.sharded_dev:
+                st_set_delta(self.sharded_dev[a], rows_d, pts_d,
+                             cen_d, rad_d)
+            if a in self.sharded_vr:
+                st_set_delta(self.sharded_vr[a], rows_h, pts_h,
+                             cen, rad)
         self.vec, self.vec_np = vec, vec_np
         self.vec_tiles, self.vec_tile_pp, self.geom = vt, vpp, geom
         self.vec_tiles_dev, self.geom_dev = vt_dev, geom_dev
@@ -1024,6 +1546,66 @@ class HybridEngine:
                 masks[b] = m[i]
         return masks
 
+    def _vr_plan_sharded(self, attr: str, qs, r):
+        """Sharded triangle-bound survival: per-shard plan over local
+        (+ shard-0 delta) tile balls, host-mapped back to the GLOBAL
+        (g, n_tiles) matrix (the count epilogue runs on it). Returns
+        (global survival, per-shard local survival (g, S, tl+td))."""
+        st = self.sharded_vr[attr]
+        plan_fn, _ = _sharded_vr_fns(st.mesh, st.t_local, st.td, st.cap)
+        surv = np.asarray(plan_fn(qs, jnp.asarray(r), st.centroid,
+                                  st.radius, st.d_centroid, st.d_radius))
+        g = surv.shape[0]
+        tl, td = st.t_local, st.td
+        cols = surv.reshape(g, st.shards, tl + td)
+        t_base = self._base["n_tiles"]
+        leaf_ok = np.zeros((g, self.n_tiles), bool)
+        base_cols = cols[:, :, :tl].reshape(g, st.shards * tl)
+        live = st.perm < t_base
+        leaf_ok[:, st.perm[live]] = base_cols[:, live]
+        if td:
+            leaf_ok[:, t_base:] = cols[:, 0, tl:]
+        return leaf_ok, cols, st
+
+    def _vr_union_sharded(self, attr: str, st: ShardedTiles,
+                          cols: np.ndarray, qs, r2: np.ndarray,
+                          vecs: np.ndarray) -> np.ndarray:
+        """Sharded union evaluation: each shard GEMMs the union of ITS
+        OWN surviving tiles (padded to one uniform width so the SPMD
+        shapes agree); the packed verdicts concat across shards and
+        decode on the host exactly like the single-device route."""
+        g = cols.shape[0]
+        tl, td = st.t_local, st.td
+        sel_lists = [np.nonzero(cols[:, s].any(axis=0))[0]
+                     for s in range(st.shards)]
+        u = max(1, _next_pow2(max(len(x) for x in sel_lists)))
+        sel_u = np.zeros((st.shards, u), np.int32)
+        member = np.zeros((st.shards, g, u), bool)
+        for s, loc in enumerate(sel_lists):
+            sel_u[s, :len(loc)] = loc
+            member[s, :, :len(loc)] = cols[:, s, loc]
+        _, eval_fn = _sharded_vr_fns(st.mesh, tl, td, st.cap)
+        packed = np.asarray(eval_fn(
+            qs, jnp.asarray(r2), jnp.asarray(sel_u), jnp.asarray(member),
+            st.bucket_rows, st.data_tiles, st.tile_pp,
+            st.d_bucket_rows, st.d_data_tiles, st.d_tile_pp))
+        m = np.zeros((g, self.n), bool)
+        col = self.vec_np[attr]
+        for s in range(st.shards):
+            local_rows = np.concatenate(
+                [st.rows_np[s * tl:(s + 1) * tl], st.d_rows_np])
+            rows = local_rows[sel_u[s]].reshape(-1)
+            within = (packed[s] & 1).astype(bool)
+            near = (packed[s] & 2).astype(bool)
+            gis, cis = np.nonzero(within)
+            m[gis, rows[cis]] = True
+            gis, cis = np.nonzero(near)
+            if len(gis):
+                rws = rows[cis]
+                exact = (((col[rws] - vecs[gis]) ** 2).sum(1) <= r2[gis])
+                m[gis, rws] = exact
+        return m
+
     def _vr_masks(self, attr: str, grp: List[Q.Query],
                   stats: EngineStats, tile_route: bool
                   ) -> Tuple[np.ndarray, int]:
@@ -1033,16 +1615,26 @@ class HybridEngine:
         plausible tiles, distances are evaluated on the gathered
         survivors, boundary rows re-checked exactly on the host; falls
         back to the dense column pass when the bound leaves most of the
-        table standing. tile_route=False (oracle path): always the
-        dense full-column pass, masked by the leaf-survival matrix —
-        the original engine behavior."""
+        table standing. On a sharded engine both the bound and the
+        union GEMM run per shard (``_vr_plan_sharded`` /
+        ``_vr_union_sharded``); the dense fallback stays replicated —
+        it is the unselective case where a full-column pass beats any
+        gather, sharded or not. tile_route=False (oracle path): always
+        the dense full-column pass, masked by the leaf-survival matrix
+        — the original engine behavior."""
         vecs = np.stack([b.vec() for b in grp])
         r = np.asarray([b.radius for b in grp], np.float32)
         r2 = r.astype(np.float32) ** 2
         qs = jnp.asarray(vecs, jnp.float32)
-        leaf_ok = np.asarray(_vr_leaf_plan(
-            qs, jnp.asarray(r), self.geom[attr].centroid,
-            self.geom[attr].radius))
+        sharded = tile_route and self.mesh is not None \
+            and attr in self.sharded_vr
+        cols = st = None
+        if sharded:
+            leaf_ok, cols, st = self._vr_plan_sharded(attr, qs, r)
+        else:
+            leaf_ok = np.asarray(_vr_leaf_plan(
+                qs, jnp.asarray(r), self.geom[attr].centroid,
+                self.geom[attr].radius))
         touched = int(leaf_ok.sum())
         g = len(grp)
         stats.vr_tiles_pruned += g * self.n_tiles - touched
@@ -1064,6 +1656,9 @@ class HybridEngine:
                 m[gis, ris] = exact
             return m, touched
         stats.vr_tiles_scanned += touched
+        if sharded:
+            return self._vr_union_sharded(attr, st, cols, qs, r2,
+                                          vecs), touched
         # pad the union to a power of two so compiled shapes stay
         # bounded across batches; pad columns have no members
         u = len(union)
@@ -1143,7 +1738,8 @@ class HybridEngine:
         """Derive the KNN grouping for one batch of live jobs (policy:
         ``group_job_specs``, shared with the planner's cached path)."""
         specs = tuple((vk.attr, vk.k, m is not None) for vk, m in jobs)
-        return list(group_job_specs(specs, device_loop))
+        shards = (self.shards or 0) if device_loop else 0
+        return list(group_job_specs(specs, device_loop, shards))
 
     def _run_jobs(self, jobs, stats: EngineStats, device_loop: bool,
                   groups: Optional[Sequence[KnnGroupSpec]] = None,
@@ -1184,46 +1780,78 @@ class HybridEngine:
         bound. Every group's recorded tail width is appended to
         ``stats.knn_group_widths`` so the caller can close the QBS
         feedback loop."""
+        sharded = device_loop and self.mesh is not None
         knn = batched_knn_device if device_loop else batched_knn
         out: List[Optional[np.ndarray]] = [None] * len(jobs)
         if groups is None:
             groups = self._group_jobs(jobs, device_loop)
+        # delta-aware QBS keying: while un-folded delta tiles are
+        # unioned in, scans converge wider (delta balls overlap base
+        # regions); recording those widths under the base archetype
+        # would keep inflating its p90 long after fold() removes the
+        # delta. A ":delta" suffix keys them separately — post-fold
+        # batches immediately read the clean base seed again.
+        suffix = ":delta" if self.delta_tiles else ""
         for grp in groups:
             idxs = list(grp.jobs)
             attr, kmax, n_masked = grp.attr, grp.kmax, grp.n_masked
-            qs = jnp.asarray(np.stack([jobs[i][0].vec() for i in idxs]))
-            masks = None
-            if n_masked:
-                masks = jnp.asarray(np.stack(
-                    [jobs[i][1] for i in idxs[:n_masked]]))
-                if n_masked < len(idxs):
-                    masks = jnp.concatenate(
-                        [masks, jnp.ones((len(idxs) - n_masked, self.n),
-                                         bool)])
-            geom = self.geom_dev[attr] if device_loop else self.geom[attr]
-            tiles = self.vec_tiles_dev[attr] if device_loop \
-                else self.vec_tiles[attr]
-            seed = seeds.get(grp.archetype) if seeds else None
-            l = geom.n_leaves
+            arch = grp.archetype + suffix
+            seed = seeds.get(arch) if seeds else None
             conv: list = []
-            if device_loop:
-                ws = max(self.beam, _next_pow2(seed)) if seed else None
-                _, rows = knn(geom, tiles, qs, kmax, masks=masks,
-                              beam=self.beam, interpret=self.interpret,
-                              ws=ws, stats=stats, conv_out=conv)
-                w1_eff = max(1, min(max(1, self.beam // 2), l))
-                signal = np.maximum(conv[0] - w1_eff, 0)  # tail widths
+            if sharded:
+                st = self.sharded_dev[attr]
+                qs_np = np.stack([jobs[i][0].vec() for i in idxs])
+                masks_np = np.stack([jobs[i][1]
+                                     for i in idxs[:n_masked]]) \
+                    if n_masked else None
+                ws = max(1, _next_pow2(seed)) if seed else None
+                _, rows = batched_knn_sharded(
+                    st, qs_np, kmax, masks_np=masks_np, beam=self.beam,
+                    interpret=self.interpret, ws=ws, stats=stats,
+                    conv_out=conv)
+                s = st.shards
+                w1_eff = max(1, min(
+                    -(-max(1, self.beam // 2) // s), st.t_total))
+                signal = np.maximum(conv[0] - w1_eff, 0)
             else:
-                beam_eff = max(self.beam, _next_pow2(self.beam + seed)) \
-                    if seed else self.beam
-                _, rows = knn(geom, tiles, qs, kmax, masks=masks,
-                              beam=beam_eff, interpret=self.interpret,
-                              stats=stats, conv_out=conv)
-                w_start = max(1, min(beam_eff, l))
-                signal = np.maximum(conv[0] - w_start, 0)
+                qs = jnp.asarray(np.stack([jobs[i][0].vec()
+                                           for i in idxs]))
+                masks = None
+                if n_masked:
+                    masks = jnp.asarray(np.stack(
+                        [jobs[i][1] for i in idxs[:n_masked]]))
+                    if n_masked < len(idxs):
+                        masks = jnp.concatenate(
+                            [masks,
+                             jnp.ones((len(idxs) - n_masked, self.n),
+                                      bool)])
+                geom = self.geom_dev[attr] if device_loop \
+                    else self.geom[attr]
+                tiles = self.vec_tiles_dev[attr] if device_loop \
+                    else self.vec_tiles[attr]
+                l = geom.n_leaves
+                if device_loop:
+                    ws = max(self.beam, _next_pow2(seed)) if seed \
+                        else None
+                    _, rows = knn(geom, tiles, qs, kmax, masks=masks,
+                                  beam=self.beam,
+                                  interpret=self.interpret,
+                                  ws=ws, stats=stats, conv_out=conv)
+                    w1_eff = max(1, min(max(1, self.beam // 2), l))
+                    signal = np.maximum(conv[0] - w1_eff, 0)
+                else:
+                    beam_eff = max(self.beam,
+                                   _next_pow2(self.beam + seed)) \
+                        if seed else self.beam
+                    _, rows = knn(geom, tiles, qs, kmax, masks=masks,
+                                  beam=beam_eff,
+                                  interpret=self.interpret,
+                                  stats=stats, conv_out=conv)
+                    w_start = max(1, min(beam_eff, l))
+                    signal = np.maximum(conv[0] - w_start, 0)
             width = int(np.ceil(np.quantile(signal, 0.9))) if len(signal) \
                 else 0
-            stats.knn_group_widths.append((grp.archetype, width))
+            stats.knn_group_widths.append((arch, width))
             for pos, i in enumerate(idxs):
                 out[i] = rows[pos, :jobs[i][0].k]
         return out  # type: ignore[return-value]
@@ -1255,10 +1883,20 @@ class HybridEngine:
         the job layout is cross-checked against this batch's walk."""
         if plan is not None:
             device_loop = plan.device_loop
+            # only the device loop executes sharded; host-loop (oracle)
+            # plans always carry shards=0 and are valid on any engine
+            want = (self.shards or 0) if plan.device_loop else 0
+            if plan.shards != want:
+                raise ValueError(
+                    f"EnginePlan was grouped for shards={plan.shards} "
+                    f"but this engine runs shards={want} "
+                    f"(stale or mis-keyed plan cache)")
         elif device_loop is None:
             device_loop = self.device_loop
         t0 = time.time()
-        stats = EngineStats(queries=len(queries))
+        stats = EngineStats(queries=len(queries),
+                            shards=(self.shards or 0) if device_loop
+                            else 0)
         if plan is None:
             for q in queries:
                 if not plannable(q):

@@ -70,12 +70,17 @@ def load_index(directory: str):
 def save_platform(platform, directory: str):
     """Lake table + index + transform in one place; live (un-folded)
     delta rows are persisted alongside so a restart keeps serving the
-    freshest data without a fold."""
+    freshest data without a fold. The serving topology
+    (``default_shards``) rides in platform.json so a reloaded platform
+    rebuilds its T-sharded device layout on first query — the sharded
+    state itself is derived (pad + permute + upload), never stored."""
     platform.table.save(os.path.join(directory, "table"))
     save_index(os.path.join(directory, "index"), platform.tree,
                platform.enhanced, platform.transform,
                columns=list(platform.layout))
     platform.qbs.save(os.path.join(directory, "qbs.json"))
+    with open(os.path.join(directory, "platform.json"), "w") as f:
+        json.dump({"default_shards": platform.default_shards}, f)
     delta_path = os.path.join(directory, "delta.npz")
     d = platform.delta
     if d is not None and d.m:
@@ -89,10 +94,17 @@ def save_platform(platform, directory: str):
         os.remove(delta_path)
 
 
-def load_platform(directory: str):
+def load_platform(directory: str, shards: Optional[int] = None):
     """Reconstruct a ready-to-query MQRLD without rebuilding the index
     (un-folded delta rows, when present, are re-appended — folding is
-    left to the caller / the auto-fold policy)."""
+    left to the caller / the auto-fold policy).
+
+    Shard-aware layout rebuild: the saved ``default_shards`` topology
+    is restored (``shards`` overrides it — e.g. the restarted host has
+    a different device count), and the first ``engine()``/``session()``
+    call re-derives the strided T-sharded layout from the loaded table;
+    nothing shard-specific is read from disk, so snapshots move freely
+    between hosts with different meshes."""
     from repro.core.platform import MQRLD
     from repro.core.qbs import QBSTable
     table = MMOTable.load(os.path.join(directory, "table"))
@@ -102,6 +114,18 @@ def load_platform(directory: str):
     p.tree = tree
     p.enhanced = enhanced
     p.transform = transform
+    pj = os.path.join(directory, "platform.json")
+    if os.path.exists(pj):
+        with open(pj) as f:
+            p.default_shards = json.load(f).get("default_shards")
+    if shards is not None:
+        p.default_shards = shards
+    if p.default_shards:
+        # portability: a snapshot from a bigger mesh must still serve
+        # on this host — clamp to the devices that exist (the layout
+        # is re-derived anyway; pass ``shards`` to override)
+        import jax
+        p.default_shards = min(p.default_shards, jax.device_count())
     # fold() assembles delta features in the column order the build
     # used; restore it from the manifest (older snapshots without the
     # field fall back to the default order)

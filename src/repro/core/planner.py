@@ -34,10 +34,20 @@ QBS-driven plan parameters: each KNN group carries a
 widths from ``QBSTable.convergence_width`` (p90 of per-query converged
 widths from past runs of the archetype — the device loop seeds its
 straggler round width / round budget, the host loop its initial
-doubling beam; see ``HybridEngine._run_jobs``) and records the achieved
-widths back — the query-aware beam seeding item from the ROADMAP.
-Seeds shift work between beam rounds only; exactness never depends on
-them.
+doubling beam, the sharded loop its per-shard straggler width; see
+``HybridEngine._run_jobs``) and records the achieved widths back — the
+query-aware beam seeding item from the ROADMAP. Seeding is
+delta-aware: while un-folded delta rows exist, lookups and recordings
+use the ``:delta`` variant of the archetype, so delta-widened scans
+never inflate the base seed that post-fold batches read. Seeds shift
+work between beam rounds only; exactness never depends on them.
+
+Sharded topology (``Session(shards=N)``): the device loop executes
+through the T-sharded multi-device path; plans cache per (batch
+signature, loop kind, SHARD TOPOLOGY, build id) — each topology has
+its own compiled-shape universe and QBS archetype keys (``:sN``) —
+and ``explain()`` reports the topology. Results are identical at
+every shard count.
 
 EXPLAIN: ``ExecutablePlan.explain()`` returns a structured description —
 per query: chosen path, signature, cache hit/miss, per-V.K beam seed and
@@ -74,7 +84,10 @@ class FragmentPlan:
 class LogicalPlan:
     """The cached, constants-free plan skeleton for one batch archetype:
     everything ``Session.plan`` derives that depends only on query
-    *shapes* (signatures), not on the constants bound per batch."""
+    *shapes* (signatures), not on the constants bound per batch.
+    ``shards`` records the shard topology the KNN grouping was keyed
+    for (0 = unsharded) — plans cache per topology, since the sharded
+    loop's QBS archetypes and compiled-shape universe differ."""
     signatures: Tuple[str, ...]
     device_loop: bool
     fragments: Tuple[FragmentPlan, ...]
@@ -82,6 +95,7 @@ class LogicalPlan:
     scalar_idx: Tuple[int, ...]     # positions falling back to scalar
     job_specs: Tuple[Tuple[str, int, bool], ...]   # (attr, k, masked)/job
     groups: Tuple[KnnGroupSpec, ...]
+    shards: int = 0
 
 
 def _collect_job_specs(q: Q.Query, ambient: bool,
@@ -111,8 +125,8 @@ def _collect_job_specs(q: Q.Query, ambient: bool,
     raise TypeError(q)
 
 
-def build_logical_plan(norm: Sequence[Q.Query], device_loop: bool
-                       ) -> LogicalPlan:
+def build_logical_plan(norm: Sequence[Q.Query], device_loop: bool,
+                       shards: int = 0) -> LogicalPlan:
     """Derive the plan skeleton for one batch of normalized queries."""
     sigs = tuple(Q.signature(q) for q in norm)
     engine_idx, scalar_idx = [], []
@@ -131,11 +145,14 @@ def build_logical_plan(norm: Sequence[Q.Query], device_loop: bool
             scalar_idx.append(i)
             fragments.append(FragmentPlan(
                 signature=sigs[i], path="scalar", job_slots=()))
+    eff_shards = shards if device_loop else 0
     return LogicalPlan(
         signatures=sigs, device_loop=device_loop,
         fragments=tuple(fragments), engine_idx=tuple(engine_idx),
         scalar_idx=tuple(scalar_idx), job_specs=tuple(job_specs),
-        groups=group_job_specs(tuple(job_specs), device_loop))
+        groups=group_job_specs(tuple(job_specs), device_loop,
+                               eff_shards),
+        shards=eff_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -164,13 +181,19 @@ class ExecutablePlan:
     def _seeds(self) -> Dict[str, int]:
         """Current QBS convergence seeds for this plan's KNN groups —
         looked up at execute time (not baked at plan time) so a cached
-        plan keeps learning from QBS between runs."""
-        qbs = self.session.platform.qbs
+        plan keeps learning from QBS between runs. Delta-aware: while
+        un-folded delta rows exist the engine records (and we look up)
+        the ``:delta`` variant of each archetype, so delta-widened
+        convergence widths never leak into the base seed that post-fold
+        batches read (see ``engine.knn_archetype``)."""
+        p = self.session.platform
+        suffix = ":delta" if p.n_delta else ""
         seeds: Dict[str, int] = {}
         for grp in self.logical.groups:
-            w = qbs.convergence_width(grp.archetype)
+            key = grp.archetype + suffix
+            w = p.qbs.convergence_width(key)
             if w is not None:
-                seeds[grp.archetype] = w
+                seeds[key] = w
         return seeds
 
     def execute(self) -> Tuple[List[np.ndarray], EngineStats]:
@@ -181,8 +204,9 @@ class ExecutablePlan:
         if lp.engine_idx:
             eng_plan = EnginePlan(
                 device_loop=lp.device_loop, job_specs=lp.job_specs,
-                groups=lp.groups, seeds=self._seeds())
-            eng = self.session.engine()
+                groups=lp.groups, seeds=self._seeds(),
+                shards=lp.shards)
+            eng = self.session.engine(lp.shards)
             rows, stats = eng.execute_batch(
                 [self.norm[i] for i in lp.engine_idx], plan=eng_plan)
             for i, r in zip(lp.engine_idx, rows):
@@ -207,7 +231,8 @@ class ExecutablePlan:
         seeds, so a cached plan reports fresh write state."""
         lp = self.logical
         seeds = self._seeds()
-        eng = self.session.engine() if lp.engine_idx else None
+        suffix = ":delta" if self.session.platform.n_delta else ""
+        eng = self.session.engine(lp.shards) if lp.engine_idx else None
         job_of_group = {}
         for gi, grp in enumerate(lp.groups):
             for j in grp.jobs:
@@ -222,8 +247,8 @@ class ExecutablePlan:
                 knn.append({
                     "attr": attr, "k": k, "masked": masked,
                     "group": gi,
-                    "archetype": grp.archetype,
-                    "beam_seed": seeds.get(grp.archetype),
+                    "archetype": grp.archetype + suffix,
+                    "beam_seed": seeds.get(grp.archetype + suffix),
                 })
             vr = []
             if eng is not None and frag.path != "scalar":
@@ -247,6 +272,7 @@ class ExecutablePlan:
         return {
             "cache": "hit" if self.cache_hit else "miss",
             "device_loop": lp.device_loop,
+            "shards": lp.shards,
             "build_id": self.session.platform.build_id,
             "delta": delta,
             "n_queries": len(self.norm),
@@ -254,8 +280,8 @@ class ExecutablePlan:
             "n_scalar": len(lp.scalar_idx),
             "knn_groups": [
                 {"attr": g.attr, "kmax": g.kmax, "jobs": len(g.jobs),
-                 "masked": g.n_masked, "archetype": g.archetype,
-                 "beam_seed": seeds.get(g.archetype)}
+                 "masked": g.n_masked, "archetype": g.archetype + suffix,
+                 "beam_seed": seeds.get(g.archetype + suffix)}
                 for g in lp.groups],
             "fragments": frags,
         }
@@ -275,20 +301,37 @@ class Session:
 
     def __init__(self, platform, *, interpret: bool = True,
                  device_loop: bool = True, beam: int = 16,
-                 tile: int = 128):
+                 tile: int = 128, shards: Optional[int] = None):
         self.platform = platform
         self.interpret = interpret
         self.device_loop = device_loop
         self.beam = beam
         self.tile = tile
+        # shard topology for the device loop: None = the platform's
+        # ``default_shards`` (itself None = single-device paths); 0 =
+        # force the single-device paths; N >= 1 = the T-sharded
+        # execution over an N-device ("shards",) mesh. Resolved HERE so
+        # plan keys and the engine the plans execute on can never
+        # disagree. Part of the plan-cache key — each topology has its
+        # own compiled-shape universe and QBS archetypes.
+        if shards is None:
+            shards = getattr(platform, "default_shards", None)
+        self.shards = shards or None
         self._cache: Dict[Tuple, LogicalPlan] = {}
         self._cache_build = platform.build_id
         self.cache_hits = 0
         self.cache_misses = 0
 
-    def engine(self):
+    def engine(self, shards: Optional[int] = None):
+        """The engine for this session's topology — or for an explicit
+        plan topology (``ExecutablePlan`` passes its own ``lp.shards``:
+        host-loop plans carry 0, so the oracle path never builds — or
+        requires — a device mesh, whatever the session default is)."""
+        if shards is None:
+            shards = self.shards or 0
         return self.platform.engine(interpret=self.interpret,
-                                    beam=self.beam, tile=self.tile)
+                                    beam=self.beam, tile=self.tile,
+                                    shards=shards)
 
     # ---------------------------------------------------------------- plan
     def plan(self, queries: Sequence[Q.Query], *,
@@ -298,13 +341,14 @@ class Session:
         (same signatures, same loop kind, same index build)."""
         norm = [Q.normalize(q) for q in queries]
         dl = self.device_loop if device_loop is None else device_loop
+        shards = (self.shards or 0) if dl else 0
         if self._cache_build != self.platform.build_id:
             # prepare() rebuilt the index: every cached plan is stale,
             # and keeping dead-build entries would grow without bound
             # in a long-lived serving process
             self._cache.clear()
             self._cache_build = self.platform.build_id
-        key = (tuple(Q.signature(q) for q in norm), dl,
+        key = (tuple(Q.signature(q) for q in norm), dl, shards,
                self.platform.build_id)
         logical = self._cache.get(key)
         hit = logical is not None
@@ -312,7 +356,7 @@ class Session:
             self.cache_hits += 1
         else:
             self.cache_misses += 1
-            logical = build_logical_plan(norm, dl)
+            logical = build_logical_plan(norm, dl, shards)
             self._cache[key] = logical
         return ExecutablePlan(self, logical, queries, norm, hit)
 

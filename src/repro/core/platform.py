@@ -108,9 +108,14 @@ class MQRLD:
         self.delta: Optional[DeltaRegion] = None
         self.delta_epoch = 0
         self.auto_fold_ratio = 0.5   # fold when delta rows > ratio * base
+        # sharded serving default: engine()/session() calls that do not
+        # pass ``shards`` explicitly use this topology (None = the
+        # single-device paths). Persisted by core.persist so a reloaded
+        # platform rebuilds its sharded layout on first query.
+        self.default_shards: Optional[int] = None
         self._view_cache: Optional[Tuple[Tuple[int, int], MMOTable]] = None
         self._oracle_cache: Dict = {}
-        self._engine = None
+        self._engines: Dict = {}
         self._sessions: Dict = {}
 
     # ------------------------------------------------------------ build
@@ -165,7 +170,7 @@ class MQRLD:
         self.enhanced = feats[perm]
         self._build_meta()
         self._oracle_cache.clear()
-        self._engine = None  # device state is stale after a rebuild
+        self._engines.clear()  # device state is stale after a rebuild
         self.build_id += 1   # cached ExecutablePlans are keyed on this
         return report
 
@@ -299,7 +304,7 @@ class MQRLD:
         self.delta_epoch += 1
         self._view_cache = None
         self._oracle_cache.clear()
-        self._engine = None          # device tiles are stale
+        self._engines.clear()        # device tiles are stale
         self.build_id += 1           # cached plans invalidate
         return m
 
@@ -492,7 +497,8 @@ class MQRLD:
     # ------------------------------------------------------- batched engine
     def engine(self, *, interpret: bool = True, beam: int = 16,
                tile: int = 128,
-               device_loop: Optional[bool] = None):
+               device_loop: Optional[bool] = None,
+               shards: Optional[int] = None):
         """The device-resident batched executor for this table (built
         lazily, invalidated by ``prepare``). ``device_loop`` sets the
         engine's default KNN beam-loop implementation (device
@@ -500,37 +506,63 @@ class MQRLD:
         when passed explicitly — None leaves a cached engine's
         configured default untouched — and is also a per-call override
         on ``execute_batch``; it never forces a rebuild of device
-        state."""
+        state. ``shards`` (None = the platform's ``default_shards``;
+        0 = force the single-device paths) lays the tile-major state
+        out over an N-device ("shards",) mesh — the sharded execution
+        path; each topology keeps its own cached engine."""
         assert self.tree is not None, "call prepare() first"
         from repro.core.engine import HybridEngine
-        if (self._engine is None or self._engine.interpret != interpret
-                or self._engine.beam != beam or self._engine.tile != tile):
-            self._engine = HybridEngine(
+        if shards is None:
+            shards = self.default_shards
+        shards = shards or None
+        key = (interpret, beam, tile, shards)
+        eng = self._engines.get(key)
+        if eng is None:
+            # bounded LRU: each engine pins device-resident copies of
+            # the whole table, so a long-lived process sweeping configs
+            # (e.g. the bench's shard sweep) must not accumulate one
+            # footprint per configuration ever touched. Eviction only
+            # drops derived state — a re-request rebuilds it.
+            while len(self._engines) >= 4:
+                self._engines.pop(next(iter(self._engines)))
+            eng = self._engines[key] = HybridEngine(
                 self.tree, self.table, self.meta, interpret=interpret,
                 beam=beam, tile=tile,
-                device_loop=True if device_loop is None else device_loop)
-        elif device_loop is not None:
-            self._engine.device_loop = device_loop
+                device_loop=True if device_loop is None else device_loop,
+                shards=shards)
+        else:
+            self._engines.pop(key)     # re-insert: keep LRU order
+            self._engines[key] = eng
+            if device_loop is not None:
+                eng.device_loop = device_loop
         # union any un-folded appends into the device state (no-op when
         # the write epoch is unchanged)
-        self._engine.sync_delta(self.delta, self.delta_epoch)
-        return self._engine
+        eng.sync_delta(self.delta, self.delta_epoch)
+        return eng
 
     def session(self, *, interpret: bool = True,
                 device_loop: bool = True, beam: int = 16,
-                tile: int = 128):
+                tile: int = 128, shards: Optional[int] = None):
         """The MOAPI v2 entry point: a ``repro.core.planner.Session``
         over this platform (cached per configuration). Use
         ``session().plan(queries)`` for an ``ExecutablePlan`` with
         ``execute()`` / ``explain()``; the session's plan cache
         survives across batches and is invalidated by ``prepare()``
-        through ``build_id``."""
+        through ``build_id``. ``shards`` (None = ``default_shards``)
+        selects the sharded execution topology; plans cache per
+        topology and ``explain()`` reports it."""
         from repro.core.planner import Session
-        key = (interpret, device_loop, beam, tile)
+        # resolve to the EFFECTIVE topology here so the cache can never
+        # alias a forced-off session (shards=0) with a defaulted one,
+        # and Session cannot re-resolve 0 back to the default
+        eff = self.default_shards if shards is None else shards
+        eff = eff or None
+        key = (interpret, device_loop, beam, tile, eff)
         if key not in self._sessions:
             self._sessions[key] = Session(
                 self, interpret=interpret, device_loop=device_loop,
-                beam=beam, tile=tile)
+                beam=beam, tile=tile,
+                shards=0 if eff is None else eff)
         return self._sessions[key]
 
     def execute_batch(self, queries: Sequence[Q.Query], *,

@@ -15,6 +15,18 @@ Two variants share the merge scheme:
     mask, the hybrid-engine leaf scan: each query ranks only the rows its
     bucket beam gathered, and filtered KNN (And(VK, predicate)) stays
     fused by zeroing the mask instead of re-gathering.
+
+Tile early-out (``lb2``): the masked variant optionally takes per-candidate
+SQUARED ball lower bounds (each candidate row carries its bucket tile's
+``max(0, |q - C| - R)^2``). A grid step whose every valid candidate has
+``lb2 >= running kth distance`` cannot change any query's top-k — a lower
+bound at or above the kth squared distance proves the true distance can
+only tie, and ties never displace the (stable) running buffer — so the
+whole distance + merge body is skipped under ``@pl.when``. Beam rounds
+select tiles in ascending-bound order per query, so once a query
+converges, the straggler tiles other queries still need stop charging it:
+blocks whose candidates are all bound-refuted (or masked/padding) become
+no-ops instead of full GEMM + sort-network steps.
 """
 from __future__ import annotations
 
@@ -98,7 +110,7 @@ def topk_l2_pallas(q, p, k: int, *, bm: int = 128, bn: int = 512,
 # Row-masked, per-query-candidate variant (hybrid-engine leaf scan)
 # ---------------------------------------------------------------------------
 def _masked_kernel(q_ref, p_ref, v_ref, bestd_ref, besti_ref, *, bc: int,
-                   k: int):
+                   k: int, lb_ref=None):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -106,36 +118,58 @@ def _masked_kernel(q_ref, p_ref, v_ref, bestd_ref, besti_ref, *, bc: int,
         bestd_ref[...] = jnp.full_like(bestd_ref, jnp.inf)
         besti_ref[...] = jnp.full_like(besti_ref, -1)
 
-    q = q_ref[...].astype(jnp.float32)          # (BG, D)
-    p = p_ref[...].astype(jnp.float32)          # (BG, BC, D)
-    v = v_ref[...]                              # (BG, BC) int32 0/1
-    qq = jnp.sum(q * q, axis=1)                 # (BG,)
-    pp = jnp.sum(p * p, axis=2)                 # (BG, BC)
-    # per-query vector x candidate-matrix product, batched over BG
-    cross = jax.lax.dot_general(
-        p, q, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)      # (BG, BC)
-    d = jnp.maximum(qq[:, None] + pp - 2.0 * cross, 0.0)
-    idx = (j * bc + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1))
-    # masked rows (bucket padding, filtered-out predicate rows) never win
-    d = jnp.where(v != 0, d, jnp.inf)
+    def _merge():
+        q = q_ref[...].astype(jnp.float32)          # (BG, D)
+        p = p_ref[...].astype(jnp.float32)          # (BG, BC, D)
+        v = v_ref[...]                              # (BG, BC) int32 0/1
+        qq = jnp.sum(q * q, axis=1)                 # (BG,)
+        pp = jnp.sum(p * p, axis=2)                 # (BG, BC)
+        # per-query vector x candidate-matrix product, batched over BG
+        cross = jax.lax.dot_general(
+            p, q, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)      # (BG, BC)
+        d = jnp.maximum(qq[:, None] + pp - 2.0 * cross, 0.0)
+        idx = (j * bc + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1))
+        # masked rows (bucket padding, filtered-out predicate rows) never win
+        d = jnp.where(v != 0, d, jnp.inf)
 
-    alld = jnp.concatenate([bestd_ref[...], d], axis=1)     # (BG, k+BC)
-    alli = jnp.concatenate([besti_ref[...], idx], axis=1)
-    negd, sel = jax.lax.top_k(-alld, k)
-    bestd_ref[...] = -negd
-    besti_ref[...] = jnp.take_along_axis(alli, sel, axis=1)
+        alld = jnp.concatenate([bestd_ref[...], d], axis=1)     # (BG, k+BC)
+        alli = jnp.concatenate([besti_ref[...], idx], axis=1)
+        negd, sel = jax.lax.top_k(-alld, k)
+        bestd_ref[...] = -negd
+        besti_ref[...] = jnp.take_along_axis(alli, sel, axis=1)
+
+    if lb_ref is None:
+        _merge()
+    else:
+        # tile early-out: a valid candidate whose squared ball bound is
+        # below its query's running kth distance is the only thing that
+        # can change the buffer; blocks with none of those are skipped
+        # wholesale (module docstring: ties never displace the stable
+        # running buffer, so >= is safe). Runs after round 1's init, and
+        # an all-inf buffer (kth = +inf) never refutes a valid
+        # candidate, so the first tiles are always merged.
+        live = (v_ref[...] != 0) & (lb_ref[...] < bestd_ref[:, -1:])
+        pl.when(jnp.any(live))(_merge)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bg", "bc", "interpret"))
 def topk_l2_masked_pallas(q, p, valid, k: int, *, bg: int = None,
-                          bc: int = None, interpret: bool = False):
+                          bc: int = None, interpret: bool = False,
+                          lb2=None):
     """q: (G, D), p: (G, C, D), valid: (G, C) -> (dists (G, k), idx (G, k)).
 
     Row g of ``p`` is query g's own candidate tile; ``valid`` entries of 0
     (bucket padding / filtered rows) are excluded. Returned squared
     distances are ascending; exhausted slots come back as (inf, -1) and
     indices point into [0, C).
+
+    ``lb2`` (optional, (G, C)): per-candidate SQUARED lower bounds for
+    the tile early-out (module docstring) — grid steps whose valid
+    candidates are all bound-refuted skip the distance + merge body.
+    Purely a work-skipping hint: results are identical with and without
+    it, and bounds may be conservative (0 disables the skip for that
+    candidate).
 
     Block defaults are backend-dependent: on TPU small VMEM-safe tiles
     ((8, 512, D) ~ 2 MB at D=512); in interpret mode the per-grid-step
@@ -160,14 +194,27 @@ def topk_l2_masked_pallas(q, p, valid, k: int, *, bg: int = None,
     gp, dp = q2.shape
     cp = p2.shape[1]
     grid = (gp // bg, cp // bc)
+    in_specs = [
+        pl.BlockSpec((bg, dp), lambda i, j: (i, 0)),
+        pl.BlockSpec((bg, bc, dp), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
+    ]
+    operands = [q2, p2, v2]
+    kernel = functools.partial(_masked_kernel, bc=bc, k=kk)
+    if lb2 is not None:
+        # pad columns carry +inf bounds (can never force a merge)
+        l2 = _pad(_pad(lb2.astype(jnp.float32), bc, 1, value=jnp.inf),
+                  bg, 0)
+        in_specs.append(pl.BlockSpec((bg, bc), lambda i, j: (i, j)))
+        operands.append(l2)
+
+        def kernel(q_ref, p_ref, v_ref, lb_ref, bestd_ref, besti_ref):
+            _masked_kernel(q_ref, p_ref, v_ref, bestd_ref, besti_ref,
+                           bc=bc, k=kk, lb_ref=lb_ref)
     bestd, besti = pl.pallas_call(
-        functools.partial(_masked_kernel, bc=bc, k=kk),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bg, dp), lambda i, j: (i, 0)),
-            pl.BlockSpec((bg, bc, dp), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bg, kk), lambda i, j: (i, 0)),
             pl.BlockSpec((bg, kk), lambda i, j: (i, 0)),
@@ -177,7 +224,7 @@ def topk_l2_masked_pallas(q, p, valid, k: int, *, bg: int = None,
             jax.ShapeDtypeStruct((gp, kk), jnp.int32),
         ],
         interpret=interpret,
-    )(q2, p2, v2)
+    )(*operands)
     bestd = bestd[:g]
     besti = jnp.where(jnp.isfinite(bestd), besti[:g], -1)
     if kk < k:  # fewer candidates than k: pad to the requested width

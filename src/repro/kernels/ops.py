@@ -66,13 +66,20 @@ def topk_l2(q, p, k: int, interpret: bool = False):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def topk_l2_masked(q, p, valid, k: int, interpret: bool = False):
+def topk_l2_masked(q, p, valid, k: int, interpret: bool = False,
+                   lb2=None):
     """Per-query candidate tiles + validity mask (hybrid-engine leaf scan).
-    q: (G, D), p: (G, C, D), valid: (G, C)."""
+    q: (G, D), p: (G, C, D), valid: (G, C). ``lb2`` (optional, (G, C)):
+    per-candidate squared ball lower bounds — enables the Pallas tile
+    early-out (skip a grid step's distance + merge when no valid
+    candidate's bound beats the running kth); never changes results. The
+    pure-jnp reference path computes everything regardless and ignores
+    it."""
     if use_pallas() or interpret:
         from repro.kernels.fused_topk import topk_l2_masked_pallas
         return topk_l2_masked_pallas(q, p, valid, k,
-                                     interpret=not use_pallas())
+                                     interpret=not use_pallas(),
+                                     lb2=lb2)
     return ref.topk_l2_masked(q, p, valid, k)
 
 

@@ -29,13 +29,13 @@ def _kernel(q_ref, p_ref, out_ref):
     out_ref[...] = jnp.maximum(qq + pp.T - 2.0 * cross, 0.0)
 
 
-def _pad(x, m, axis):
+def _pad(x, m, axis, value=0):
     pad = (-x.shape[axis]) % m
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))

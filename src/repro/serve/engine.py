@@ -196,7 +196,12 @@ class RetrievalServer:
     ``device_loop`` picks the engine's KNN beam-loop implementation
     (True = on-device ``lax.while_loop``, the serving default; False =
     the host-driven exactness oracle); it configures the server's
-    ``Session``.
+    ``Session``. ``shards`` (None = the platform's ``default_shards``)
+    serves through the T-sharded multi-device execution path: the
+    tile-major layout is split over an N-device ("shards",) mesh and
+    each batch's beam rounds run per shard with a cross-shard top-k
+    merge — an exact top-k at every shard count (see the engine's
+    merge notes for the kth-boundary tie caveat).
 
     Async surface: ``submit(request)`` enqueues and returns a
     ``RetrievalFuture``; a batch flushes automatically once
@@ -217,14 +222,17 @@ class RetrievalServer:
 
     def __init__(self, platform, embedder: EmbeddingServer, *,
                  batch_size: int = 64, pad_token: int = 0,
-                 project=None, device_loop: bool = True):
+                 project=None, device_loop: bool = True,
+                 shards: Optional[int] = None):
         self.platform = platform
         self.embedder = embedder
         self.batch_size = batch_size
         self.pad_token = pad_token
         self.project = project
         self.device_loop = device_loop
-        self.session = platform.session(device_loop=device_loop)
+        self.shards = shards
+        self.session = platform.session(device_loop=device_loop,
+                                        shards=shards)
         self._pending: List[tuple] = []   # (request, future) FIFO
 
     def _embed_tokens(self, token_lists: Sequence[np.ndarray]) -> np.ndarray:

@@ -163,6 +163,74 @@ def test_topk_masked_ragged_tile_counts(c, bc):
 
 
 # ---------------------------------------------------------------------------
+# tile early-out (lb2): a pure work-skipping hint — results must be
+# bit-identical to the unhinted kernel for every legal bound
+# ---------------------------------------------------------------------------
+def _eo_case(g=5, c=120, d=7):
+    q = _arr((g, d), np.float32)
+    p = _arr((g, c, d), np.float32)
+    v = jnp.asarray(RNG.random((g, c)) < 0.7)
+    return q, p, v
+
+
+@pytest.mark.parametrize("bound", ["zero", "exact", "half", "inf_pad"])
+def test_topk_masked_early_out_identical(bound):
+    """Legal lower bounds (0 = never skip, the exact distance = the
+    tightest legal bound, halfway = typical ball bound) never change
+    the result; +inf on masked columns composes with the skip."""
+    q, p, v = _eo_case()
+    k = 6
+    base_d, base_i = topk_l2_masked_pallas(q, p, v, k, bg=2, bc=32,
+                                           interpret=True)
+    dtrue = jnp.maximum(((p - q[:, None, :]) ** 2).sum(-1), 0.0)
+    if bound == "zero":
+        lb2 = jnp.zeros(v.shape, jnp.float32)
+    elif bound == "exact":
+        lb2 = dtrue
+    elif bound == "half":
+        lb2 = 0.5 * dtrue
+    else:
+        lb2 = jnp.where(v, 0.0, jnp.inf)
+    gd, gi = topk_l2_masked_pallas(q, p, v, k, bg=2, bc=32,
+                                   interpret=True, lb2=lb2)
+    assert np.array_equal(np.asarray(base_i), np.asarray(gi)), bound
+    np.testing.assert_array_equal(np.asarray(base_d), np.asarray(gd))
+
+
+def test_topk_masked_early_out_all_masked():
+    """All-masked input with bounds: still (inf, -1) everywhere."""
+    q, p, v = _eo_case()
+    lb2 = jnp.zeros(v.shape, jnp.float32)
+    gd, gi = topk_l2_masked_pallas(q, p, jnp.zeros_like(v), 4, bg=2,
+                                   bc=32, interpret=True, lb2=lb2)
+    assert (np.asarray(gi) == -1).all()
+    assert np.isinf(np.asarray(gd)).all()
+
+
+def test_topk_masked_early_out_skippable_blocks():
+    """Blocks whose every candidate is refuted by a huge bound leave
+    the running buffer untouched — the first block establishes the
+    heap, later refuted blocks must not disturb it."""
+    q, p, v = _eo_case(c=96)
+    k = 5
+    # bounds: first 32 candidates honest (0), the rest +inf (refuted —
+    # legal only if those rows are also masked out)
+    v_np = np.asarray(v).copy()
+    v_np[:, 32:] = False
+    v2 = jnp.asarray(v_np)
+    lb2 = jnp.concatenate([jnp.zeros((len(v_np), 32), jnp.float32),
+                           jnp.full((len(v_np), 64), jnp.inf,
+                                    jnp.float32)], axis=1)
+    gd, gi = topk_l2_masked_pallas(q, p, v2, k, bg=2, bc=32,
+                                   interpret=True, lb2=lb2)
+    wd, wi = ref.topk_l2_masked(q, p, v2, k)
+    fin = np.isfinite(np.asarray(wd))
+    np.testing.assert_allclose(np.asarray(gd)[fin], np.asarray(wd)[fin],
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(gi)[~fin] == -1).all()
+
+
+# ---------------------------------------------------------------------------
 # Delta-union edge sweeps: the tiles the async-ingest path feeds to the
 # beam loops (and through them to topk_l2_masked) — empty delta,
 # delta-only hits, duplicate distances straddling the base/delta
