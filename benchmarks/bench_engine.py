@@ -41,11 +41,24 @@ Machine-readable output: every run (smoke included) rewrites
 beam-round counts, delta-ratio QPS, environment — so the perf
 trajectory is tracked across PRs by diffing one file.
 
+Mixed-precision tile scan (ISSUE 6): a scalability sweep
+n x {fp32, int8} — e2e and beam-loop-only QPS at n in {20k, 100k,
+500k} (smoke caps the sweep at its smallest n) with the fp32-rescue
+ratio recorded per cell, int8 rows verified IDENTICAL to fp32. The
+acceptance intent is >= 2x beam-loop int8-vs-fp32 QPS at n=100k; NOTE
+on CPU backends the reference scan casts int8 codes back to fp32 for
+the GEMM (same FLOPs as fp32 — the MXU int8 path needs a TPU), so CI
+numbers lean on the recorded rescue ratio (< 10%: the bound refutes
+the frontier and the rescue work is marginal) with the speedup
+measured loop-only; the JSON records both so trajectories compare
+like with like across hosts.
+
 ``--smoke`` (also via ``benchmarks.run --smoke``): toy n / batch,
 repeat=1 — keeps this module executed in CI.
 """
 import json
 import os
+import subprocess
 import sys
 
 import numpy as np
@@ -63,6 +76,18 @@ _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_engine.json")
 
 
+def _git_commit():
+    """Tag bench rows with the producing commit so BENCH_engine.json
+    diffs across PRs identify their build unambiguously."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, cwd=os.path.dirname(__file__))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
 def _platform(n=N_ROWS, d=32, seed=0):
     rng = np.random.default_rng(seed)
     centers = rng.normal(size=(12, d)).astype(np.float32) * 6
@@ -74,6 +99,81 @@ def _platform(n=N_ROWS, d=32, seed=0):
     p = MQRLD(t, seed=seed)
     p.prepare(min_leaf=64, max_leaf=1024)
     return p
+
+
+SCALE_NS = (20_000, 100_000, 500_000)
+
+
+def _platform_scan(n, d=32, seed=0):
+    """Scale-sweep build: LPGF/transform off, coarse leaves — the sweep
+    measures the query loops, not the index build."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(12, d)).astype(np.float32) * 6
+    cat = rng.integers(0, 12, n)
+    vec = (centers[cat] + rng.normal(size=(n, d))).astype(np.float32)
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    t = (MMOTable("engine_scale").add_vector("v", vec)
+         .add_numeric("price", price))
+    p = MQRLD(t, seed=seed)
+    p.prepare(use_transform=False, use_lpgf=False,
+              min_leaf=128, max_leaf=2048)
+    return p
+
+
+def _scale_sweep(csv: Csv, bench: dict):
+    """Mixed-precision scalability (module docstring): e2e + beam-loop
+    QPS per n x precision cell, int8 rows checked identical to fp32,
+    rescue ratio recorded per cell."""
+    import gc
+
+    from repro.core.engine import EngineStats
+    ns = SCALE_NS[:1] if common.SMOKE else SCALE_NS
+    qn = common.smoke_n(32, 8)
+    for n in ns:
+        p = _platform_scan(n)
+        queries = _hybrid_batch(p, qn=qn, seed=3)
+        row = {}
+        rows_by_prec = {}
+        for prec in ("fp32", "int8"):
+            sess = p.session(precision=prec)
+            sess.plan(queries).execute()     # warm + record QBS widths
+            sess.plan(queries).execute()     # compile seeded shapes
+            t_e2e, rows_p = timeit(
+                lambda: sess.plan(queries).execute()[0], repeat=3)
+            rows_by_prec[prec] = rows_p
+            eng = p.engine(precision=prec)
+            pred = eng._predicate_masks(queries, EngineStats())
+            jobs, ctr = [], [0]
+            for q in queries:
+                eng._walk(q, None, pred, jobs, None, ctr)
+            eng._run_jobs(jobs, EngineStats(), True)          # warm
+            st = EngineStats()
+            t_loop, _ = timeit(
+                lambda: eng._run_jobs(jobs, st, True), repeat=3)
+            row[prec] = {
+                "qps": len(queries) / t_e2e,
+                "loop_qps": len(jobs) / max(t_loop, 1e-12),
+                "rescue_ratio": st.mp_rescued / max(st.mp_scanned, 1),
+                "rescued": st.mp_rescued, "scanned": st.mp_scanned,
+            }
+        ident = all(np.array_equal(a, b) for a, b in
+                    zip(rows_by_prec["fp32"], rows_by_prec["int8"]))
+        speed_loop = (row["int8"]["loop_qps"]
+                      / max(row["fp32"]["loop_qps"], 1e-12))
+        speed_e2e = row["int8"]["qps"] / max(row["fp32"]["qps"], 1e-12)
+        bench["scale"][str(n)] = {
+            **row, "int8_rows_identical": bool(ident),
+            "speedup_loop_int8": speed_loop,
+            "speedup_e2e_int8": speed_e2e, "batch": len(queries),
+        }
+        csv.add(f"engine/scale_n{n}_int8_loop_speedup", speed_loop,
+                f"identical={ident} "
+                f"rescue_ratio={row['int8']['rescue_ratio']:.3f} "
+                f"fp32_loop_qps={row['fp32']['loop_qps']:.0f} "
+                f"int8_loop_qps={row['int8']['loop_qps']:.0f} "
+                f"e2e_speedup={speed_e2e:.2f}x")
+        del p
+        gc.collect()
 
 
 def _hybrid_batch(p, qn=BATCH, seed=1):
@@ -107,8 +207,11 @@ def run(csv: Csv):
         "smoke": bool(common.SMOKE), "n_rows": n, "batch": qn,
         "cpu_count": os.cpu_count(),
         "device_count": jax.device_count(),
+        "git_commit": _git_commit(),
+        "precision": "fp32",   # precision of the main sections; the
+        #                        mixed-precision sweep is under "scale"
         "qps": {}, "loop_qps": {}, "rounds": {}, "sharded": {},
-        "delta": {},
+        "delta": {}, "scale": {},
     }
 
     def scalar_all():
@@ -336,6 +439,11 @@ def run(csv: Csv):
         "append_s": t_append, "fold_s": t_fold,
         "cold_prepare_s": t_cold,
     }
+    # ------------------------------------------------------------------
+    # mixed-precision scalability sweep (fresh platforms per n)
+    # ------------------------------------------------------------------
+    _scale_sweep(csv, bench)
+
     bench["csv"] = [[name, v, d] for name, v, d in csv.rows]
     with open(_JSON_PATH, "w") as f:
         json.dump(bench, f, indent=1, sort_keys=True)

@@ -31,6 +31,19 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q tests/test_sharding.py tests/test_engine.py
 
+# mixed-precision: the tier-1 suites above run with the default fp32
+# scan; rerun the kernel + engine + precision suites with int8 forced
+# through the env knob so EVERY query loop is exercised under the
+# quantized scan + fp32 rescue (tests that pin precision="fp32"
+# explicitly keep their meaning — explicit beats the env). Same 8-device
+# flag so the sharded paths run at every shard count.
+echo "== kernel + engine + precision suites with MQRLD_PRECISION=int8 forced =="
+MQRLD_PRECISION=int8 \
+  XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q tests/test_kernels.py tests/test_engine.py \
+  tests/test_precision.py
+
 # bench_engine also runs inside benchmarks.run below; the explicit step
 # is deliberate — it keeps the planner cold/warm QPS rows, the async
 # ingest rows (QPS at 0/10/50% un-folded delta, fold vs cold prepare),
@@ -42,6 +55,31 @@ echo "== planner + ingest + sharded smoke benchmark (plan cache, delta QPS, shar
 XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m benchmarks.bench_engine --smoke
+
+# BENCH_engine.json must carry the mixed-precision scale rows (fp32 AND
+# int8 per n, tagged with the producing commit) — a bench edit that
+# silently drops them would hide the perf trajectory this PR exists for.
+echo "== BENCH_engine.json precision-row guard =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json
+import sys
+
+with open("BENCH_engine.json") as f:
+    bench = json.load(f)
+if not bench.get("git_commit") or bench["git_commit"] == "unknown":
+    sys.exit("BENCH_engine.json: missing git_commit tag")
+scale = bench.get("scale") or {}
+if not scale:
+    sys.exit("BENCH_engine.json: no mixed-precision scale rows")
+for n, row in scale.items():
+    for prec in ("fp32", "int8"):
+        if prec not in row or "loop_qps" not in row[prec]:
+            sys.exit(f"BENCH_engine.json: scale[{n}] lacks {prec} row")
+    if not row.get("int8_rows_identical"):
+        sys.exit(f"BENCH_engine.json: scale[{n}] int8 rows NOT identical")
+print(f"ok: scale rows for n={sorted(scale, key=int)}, "
+      f"commit {bench['git_commit']}")
+EOF
 
 echo "== benchmarks (--smoke) =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke

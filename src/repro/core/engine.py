@@ -72,6 +72,23 @@ bound is unselective (surviving tiles cover more than
 full-column mask (also the oracle path's behavior), which is cheaper
 than a near-total gather.
 
+Mixed-precision tile scan (``precision``: "fp32" | "bf16" | "int8"):
+both KNN beam loops can run their tile distances in reduced precision
+WITHOUT changing results. At prepare time each tile layout is quantized
+once into per-tile symmetric planes (``repro.utils.quant.plan_tiles``;
+delta tiles get their own scales at ``sync_delta``); each round then
+scans the narrow codes, widens the result by the analytic quantization
+error bound into a valid *lower* bound on the true distance
+(conservative-bound contract — the bound may be loose, never violated;
+see ``ops.topk_l2_masked_mp``), refutes candidates whose bound strictly
+exceeds the running kth distance exactly like the ball-bound early-out,
+and rescores the surviving frontier in exact fp32. Returned rows are
+identical to the fp32 path on every loop (host, device, sharded) and
+over base+delta; only the rescue *work* varies (``EngineStats``
+``mp_rescued``/``mp_scanned`` is the observability knob). The V.R
+predicate path intentionally stays fp32 — its triangle bound already
+prunes on ball metadata before the union GEMM.
+
 Planner integration (MOAPI v2): ``execute_batch`` accepts a pre-built
 ``EnginePlan`` from ``repro.core.planner`` — the cached-per-archetype job
 layout, KNN grouping (``KnnGroupSpec``), and QBS-seeded first-round beam
@@ -99,7 +116,7 @@ import functools
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -203,6 +220,11 @@ class EngineStats:
     vr_tiles_pruned: int = 0     # tiles dropped by the V.R triangle bound
     vr_dense_fallbacks: int = 0  # V.R groups that took the dense column path
     shards: int = 0              # 0 = unsharded; else the mesh size used
+    # mixed-precision scan counters (precision != "fp32"): candidates
+    # scanned in reduced precision vs candidates rescored in fp32 —
+    # rescued/scanned is the rescue ratio explain() reports
+    mp_scanned: int = 0
+    mp_rescued: int = 0
     time_s: float = 0.0
     # (archetype, converged width in tiles) per executed KNN group — the
     # feedback signal Session records into QBS for query-aware seeding
@@ -212,31 +234,55 @@ class EngineStats:
 # ---------------------------------------------------------------------------
 # Batched exact KNN over bucket tiles (one vector space)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("w0", "w1", "k", "interpret"))
-def _knn_round(act, qs, order, masks_tiles, data_tiles, bucket_rows, *,
-               w0: int, w1: int, k: int, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("w0", "w1", "k", "precision",
+                                             "interpret"))
+def _knn_round(act, qs, order, masks_tiles, data_tiles, bucket_rows,
+               planes=None, lb_all=None, kth0_all=None, *,
+               w0: int, w1: int, k: int, precision: str = "fp32",
+               interpret: bool):
     """One beam round for the ``act`` query subset: scan each query's
     [w0, w1) best-lower-bound buckets with the fused distance+top-k kernel.
-    Returns (sq_dists, physical rows, number of valid candidate rows).
+    Returns (sq_dists, physical rows, number of valid candidate rows,
+    fp32-rescued candidate count — 0 on the fp32 path).
     Rounds are incremental — the host merges each round's top-k with the
     carry from earlier buckets. ``data_tiles`` is the (T, cap, d)
     tile-major copy of the table column: candidate gathers move whole
-    contiguous tiles, not individual rows."""
+    contiguous tiles, not individual rows.
+
+    Mixed precision (``precision`` != "fp32"): ``planes`` carries the
+    layout's quantized tile arrays (data, scale, ppq, eps — see
+    ``repro.utils.quant.plan_tiles``), ``lb_all`` the per-query sorted
+    ball bounds and ``kth0_all`` (optional, (G_full,)) the host carry's
+    kth SQUARED distance; the round scans the narrow codes and rescores
+    only the surviving frontier in fp32 (``ops.topk_l2_masked_mp``) —
+    row-identical to the fp32 scan."""
     qa = jnp.take(qs, act, axis=0)
     sel = jnp.take(order, act, axis=0)[:, w0:w1]         # (G, w1-w0)
     g, w = sel.shape
     cand = bucket_rows[sel].reshape(g, -1)               # (G, w*cap)
     valid = cand >= 0
-    pts = jnp.take(data_tiles, sel, axis=0)              # (G, w, cap, d)
-    pts = pts.reshape(g, -1, pts.shape[-1])              # (G, w*cap, d)
     if masks_tiles is not None:
         ma = jnp.take(masks_tiles, act, axis=0)          # (G, T, cap)
         ma = jnp.take_along_axis(ma, sel[:, :, None], axis=1)
         valid = valid & ma.reshape(g, -1)
-    d2, idx = ops.topk_l2_masked(qa, pts, valid, k, interpret=interpret)
+    if precision != "fp32":
+        cap = bucket_rows.shape[1]
+        lb_col = jnp.take(lb_all, act, axis=0)[:, w0:w1]
+        lb2 = jnp.repeat(lb_col * lb_col, cap, axis=1)
+        kth0 = None if kth0_all is None else jnp.take(kth0_all, act,
+                                                      axis=0)
+        d2, idx, resc = ops.topk_l2_masked_mp(
+            qa, sel, valid, data_tiles, *planes, k, lb2=lb2, kth0=kth0,
+            precision=precision, interpret=interpret)
+    else:
+        pts = jnp.take(data_tiles, sel, axis=0)          # (G, w, cap, d)
+        pts = pts.reshape(g, -1, pts.shape[-1])          # (G, w*cap, d)
+        d2, idx = ops.topk_l2_masked(qa, pts, valid, k,
+                                     interpret=interpret)
+        resc = jnp.zeros(g, jnp.int32)
     rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
     rows = jnp.where(idx >= 0, rows, -1)
-    return d2, rows, jnp.sum(valid, axis=1)
+    return d2, rows, jnp.sum(valid, axis=1), resc
 
 
 @jax.jit
@@ -267,7 +313,8 @@ def _knn_prologue(qs, centroid, radius, masks_tiles=None):
 
 def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
                 masks: Optional[jax.Array] = None, beam: int = 8,
-                interpret: bool = True,
+                interpret: bool = True, planes=None,
+                precision: str = "fp32",
                 stats: Optional[EngineStats] = None,
                 conv_out: Optional[list] = None
                 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -305,27 +352,39 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
     prologue = _knn_prologue_fast if l <= 4096 else _knn_prologue
     order, lb_sorted = prologue(qs, geom.centroid, geom.radius,
                                 masks_tiles)
+    lb_dev = lb_sorted                     # device copy for the mp rounds
     lb_sorted = np.asarray(lb_sorted)
     best_d2 = np.full((g, k), np.inf, np.float32)
     best_r = np.full((g, k), -1, np.int64)
     conv = np.zeros(g, np.int64)
     active = np.arange(g)
     w0, w = 0, max(1, min(beam, l))
+    first = True
     while len(active):
         na = len(active)
         gp = _next_pow2(na)
         padded = np.zeros(gp, np.int32)
         padded[:na] = active
-        d2, rows, nvalid = _knn_round(
+        kth0_all = None
+        if precision != "fp32" and not first:
+            # host carry's kth SQUARED distance tightens the mp round's
+            # refutation from its first rescue iteration
+            kth0_all = jnp.asarray(best_d2[:, -1])
+        d2, rows, nvalid, resc = _knn_round(
             jnp.asarray(padded), qs, order, masks_tiles,
-            data_tiles, geom.bucket_rows, w0=w0, w1=w, k=k,
-            interpret=interpret)
+            data_tiles, geom.bucket_rows, planes, lb_dev, kth0_all,
+            w0=w0, w1=w, k=k, precision=precision, interpret=interpret)
+        first = False
         d2 = np.asarray(d2[:na])
         rows = np.asarray(rows[:na])
         if stats is not None:
             stats.knn_rounds += 1
             stats.knn_buckets += na * (w - w0)
-            stats.rows_scanned += int(np.asarray(nvalid)[:na].sum())
+            nv = int(np.asarray(nvalid)[:na].sum())
+            stats.rows_scanned += nv
+            if precision != "fp32":
+                stats.mp_scanned += nv
+                stats.mp_rescued += int(np.asarray(resc)[:na].sum())
         # host merge with the carry: carried entries come from
         # earlier (lower-lb) buckets, so a stable sort keeps the scalar
         # executor's visit-order tie-break
@@ -353,11 +412,12 @@ def batched_knn(geom: LeafGeometry, data_tiles, qs, k: int, *,
 # Device-resident beam loop (lax.while_loop variant of batched_knn)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit,
-                   static_argnames=("w1", "w", "budget", "k", "interpret"))
+                   static_argnames=("w1", "w", "budget", "k", "precision",
+                                    "interpret"))
 def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
-                     lb_sorted, masks_tiles, data_tiles, bucket_rows, *,
-                     w1: int, w: int, budget: int, k: int,
-                     interpret: bool):
+                     lb_sorted, masks_tiles, data_tiles, bucket_rows,
+                     planes=None, *, w1: int, w: int, budget: int, k: int,
+                     precision: str = "fp32", interpret: bool):
     """The straggler beam loop as one compiled call (see module
     docstring): compaction gathers, the ``lax.while_loop``, and the
     stats reduction all land in a single dispatch.
@@ -388,7 +448,7 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         return (r < budget) & jnp.any(active)
 
     def body(st):
-        r, active, bd, br, nbuck, nrows, rr = st
+        r, active, bd, br, nbuck, nrows, nresc, rr = st
         start = r * w
         sel = jax.lax.dynamic_slice_in_dim(order_pad, start, w, axis=1)
         lb_col = jax.lax.dynamic_slice_in_dim(lb_pad, start, w, axis=1)
@@ -398,8 +458,6 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         cand = bucket_rows[sel].reshape(g, -1)           # (G, w*cap)
         valid = ((cand >= 0) & jnp.repeat(colv, bucket_rows.shape[1],
                                           axis=1) & active[:, None])
-        pts = jnp.take(data_tiles, sel, axis=0)          # (G, w, cap, d)
-        pts = pts.reshape(g, -1, pts.shape[-1])
         if masks_tiles is not None:
             ma = jnp.take_along_axis(masks_tiles, sel[:, :, None], axis=1)
             valid = valid & ma.reshape(g, -1)
@@ -408,8 +466,19 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         # it is bound-refuted by the running kth (converged queries stop
         # paying for straggler tiles)
         lb2 = jnp.repeat(lb_col * lb_col, bucket_rows.shape[1], axis=1)
-        d2, idx = ops.topk_l2_masked(qs, pts, valid, k,
-                                     interpret=interpret, lb2=lb2)
+        if precision != "fp32":
+            # the carry's kth squared distance refutes quantized
+            # candidates before any fp32 rescore (exact: the widened
+            # bound is a true lower bound, strict-exceed only)
+            d2, idx, resc = ops.topk_l2_masked_mp(
+                qs, sel, valid, data_tiles, *planes, k, lb2=lb2,
+                kth0=bd[:, -1], precision=precision, interpret=interpret)
+        else:
+            pts = jnp.take(data_tiles, sel, axis=0)      # (G, w, cap, d)
+            pts = pts.reshape(g, -1, pts.shape[-1])
+            d2, idx = ops.topk_l2_masked(qs, pts, valid, k,
+                                         interpret=interpret, lb2=lb2)
+            resc = jnp.zeros(g, jnp.int32)
         rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
         rows = jnp.where(idx >= 0, rows, -1)
         # merge with the carry: carry first, lax.top_k is stable, so
@@ -429,14 +498,16 @@ def _knn_device_loop(idx, active0, qs_full, d2_full, rows_full, order,
         rr = jnp.where(active & ~active2, r + 1, rr)
         nbuck = nbuck + jnp.sum(jnp.where(active[:, None], colv, False))
         nrows = nrows + jnp.sum(valid)
-        return r + 1, active2, md, mr, nbuck, nrows, rr
+        nresc = nresc + jnp.sum(resc)
+        return r + 1, active2, md, mr, nbuck, nrows, nresc, rr
 
     st0 = (jnp.int32(0), active0, bd0, br0,
-           jnp.int32(0), jnp.int32(0), jnp.zeros(g, jnp.int32))
-    r, act_f, bd, br, nbuck, nrows, rr = \
+           jnp.int32(0), jnp.int32(0), jnp.int32(0),
+           jnp.zeros(g, jnp.int32))
+    r, act_f, bd, br, nbuck, nrows, nresc, rr = \
         jax.lax.while_loop(cond, body, st0)
     rr = jnp.where(act_f, r, rr)  # budget-exhausted: scanned everything
-    return bd, br, jnp.stack([r, nbuck, nrows]), rr
+    return bd, br, jnp.stack([r, nbuck, nrows, nresc]), rr
 
 
 @jax.jit
@@ -470,31 +541,36 @@ def _knn_prologue_fast(qs, centroid, radius, masks_tiles=None):
     return order, lb_sorted
 
 
-@functools.partial(jax.jit, static_argnames=("w1", "k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("w1", "k", "precision",
+                                             "interpret"))
 def _knn_start(qs, masks_tiles, centroid, radius, data_tiles,
-               bucket_rows, *, w1: int, k: int, interpret: bool):
+               bucket_rows, planes=None, *, w1: int, k: int,
+               precision: str = "fp32", interpret: bool):
     """Fused prologue + first beam round over the full batch + the
     stopping rule: a query stays active iff its kth distance exceeds
     the next unscanned lower bound (the scalar executor's rule). One
-    dispatch; only the (G,) active mask and the stats scalar leave the
+    dispatch; only the (G,) active mask and the stats scalars leave the
     device before the straggler loop."""
     g = qs.shape[0]
     prologue = _knn_prologue_fast if centroid.shape[0] <= 4096 \
         else _knn_prologue
     order, lb_sorted = prologue(qs, centroid, radius, masks_tiles)
     l = lb_sorted.shape[1]
-    d2, rows, nvalid = _knn_round(
+    d2, rows, nvalid, resc = _knn_round(
         jnp.arange(g, dtype=jnp.int32), qs, order, masks_tiles,
-        data_tiles, bucket_rows, w0=0, w1=w1, k=k, interpret=interpret)
+        data_tiles, bucket_rows, planes, lb_sorted, None,
+        w0=0, w1=w1, k=k, precision=precision, interpret=interpret)
     kth = jnp.sqrt(d2[:, -1])
     nxt = lb_sorted[:, w1] if w1 < l else \
         jnp.full(g, jnp.inf, jnp.float32)
-    return order, lb_sorted, d2, rows, kth > nxt, jnp.sum(nvalid)
+    return (order, lb_sorted, d2, rows, kth > nxt, jnp.sum(nvalid),
+            jnp.sum(resc))
 
 
 def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
                        masks: Optional[jax.Array] = None, beam: int = 8,
-                       interpret: bool = True,
+                       interpret: bool = True, planes=None,
+                       precision: str = "fp32",
                        w1: Optional[int] = None, ws: Optional[int] = None,
                        stats: Optional[EngineStats] = None,
                        conv_out: Optional[list] = None
@@ -534,13 +610,17 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
     g = int(qs.shape[0])
     l = geom.n_leaves
     w1 = max(1, min(w1 if w1 else max(1, beam // 2), l))
-    order, lb_sorted, d2, rows, active, nvalid = _knn_start(
+    order, lb_sorted, d2, rows, active, nvalid, resc = _knn_start(
         qs, masks_tiles, geom.centroid, geom.radius, data_tiles,
-        geom.bucket_rows, w1=w1, k=k, interpret=interpret)
+        geom.bucket_rows, planes, w1=w1, k=k, precision=precision,
+        interpret=interpret)
     if stats is not None:
         stats.knn_rounds += 1
         stats.knn_buckets += g * w1
         stats.rows_scanned += int(nvalid)
+        if precision != "fp32":
+            stats.mp_scanned += int(nvalid)
+            stats.mp_rescued += int(resc)
     conv = np.full(g, w1, np.int64)
     act = np.nonzero(np.asarray(active))[0]
     if len(act) and w1 < l:
@@ -554,8 +634,8 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
         budget = -(-(l - w1) // w)
         bd, br, loop_stats, retire_round = _knn_device_loop(
             idx, active0, qs, d2, rows, order, lb_sorted, masks_tiles,
-            data_tiles, geom.bucket_rows, w1=w1, w=w, budget=budget,
-            k=k, interpret=interpret)
+            data_tiles, geom.bucket_rows, planes, w1=w1, w=w,
+            budget=budget, k=k, precision=precision, interpret=interpret)
         d2 = np.asarray(d2, dtype=np.float32).copy()
         rows = np.asarray(rows).copy()
         d2[act] = np.asarray(bd)[:na]
@@ -563,10 +643,13 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
         conv[act] = np.minimum(
             w1 + np.asarray(retire_round)[:na].astype(np.int64) * w, l)
         if stats is not None:
-            rounds, nbuck, nrows = np.asarray(loop_stats)
+            rounds, nbuck, nrows, nresc = np.asarray(loop_stats)
             stats.knn_rounds += int(rounds)
             stats.knn_buckets += int(nbuck)
             stats.rows_scanned += int(nrows)
+            if precision != "fp32":
+                stats.mp_scanned += int(nrows)
+                stats.mp_rescued += int(nresc)
     if stats is not None:
         stats.time_s += time.time() - t0
     if conv_out is not None:
@@ -624,6 +707,14 @@ class ShardedTiles:
     rows_np: np.ndarray     # host copy of the permuted padded rows
     perm: np.ndarray        # padded position -> original tile index
     tile_pp: Optional[jax.Array] = None   # (S*t_local, cap) row sq-norms
+    # quantized tile planes (mixed-precision scan; None on fp32 engines).
+    # Per-tile quantization commutes with the strided permutation, so the
+    # planes are quantized once on the unpermuted tiles and permuted like
+    # every other tile array.
+    q_data: Optional[jax.Array] = None    # (S*t_local, cap, d) i8/bf16
+    q_scale: Optional[jax.Array] = None   # (S*t_local,)
+    q_ppq: Optional[jax.Array] = None     # (S*t_local, cap)
+    q_eps: Optional[jax.Array] = None     # (S*t_local,)
     # replicated delta extension (zero-width when no delta)
     td: int = 0
     d_centroid: Optional[jax.Array] = None
@@ -632,6 +723,10 @@ class ShardedTiles:
     d_data_tiles: Optional[jax.Array] = None
     d_rows_np: Optional[np.ndarray] = None
     d_tile_pp: Optional[jax.Array] = None
+    d_q_data: Optional[jax.Array] = None
+    d_q_scale: Optional[jax.Array] = None
+    d_q_ppq: Optional[jax.Array] = None
+    d_q_eps: Optional[jax.Array] = None
 
     @property
     def t_total(self) -> int:
@@ -641,10 +736,14 @@ class ShardedTiles:
 
 def make_sharded_tiles(mesh, shards: int, centroid: np.ndarray,
                        radius: np.ndarray, rows_np: np.ndarray,
-                       tiles_np: np.ndarray, *, with_pp: bool = False
-                       ) -> ShardedTiles:
+                       tiles_np: np.ndarray, *, with_pp: bool = False,
+                       planes=None) -> ShardedTiles:
     """Pad + permute one layout's tile arrays (strided placement) and
-    upload them pre-sharded — each device receives only its slice."""
+    upload them pre-sharded — each device receives only its slice.
+    ``planes`` (optional ``repro.utils.quant.TilePlanes``, host numpy):
+    the layout's quantized scan operands, permuted alongside. Pad-tile
+    plane values (codes 0, scale 1, ppq 0, eps 0) are benign — pad rows
+    are already invalid via rows -1 / radius -inf."""
     from jax.sharding import PartitionSpec as P
     t, cap = rows_np.shape
     d = centroid.shape[1]
@@ -665,6 +764,17 @@ def make_sharded_tiles(mesh, shards: int, centroid: np.ndarray,
         rows_np=rws, perm=perm)
     if with_pp:
         st.tile_pp = shard_put((dts ** 2).sum(-1), mesh, P("shards", None))
+    if planes is not None:
+        qd = np.array(planes.data[src])
+        qd[pad] = 0
+        qs_ = np.where(pad, 1.0, planes.scale[src]).astype(np.float32)
+        qp = np.where(pad[:, None], 0.0, planes.ppq[src]
+                      ).astype(np.float32)
+        qe = np.where(pad, 0.0, planes.eps[src]).astype(np.float32)
+        st.q_data = shard_put(qd, mesh, P("shards", None, None))
+        st.q_scale = shard_put(qs_, mesh, P("shards"))
+        st.q_ppq = shard_put(qp, mesh, P("shards", None))
+        st.q_eps = shard_put(qe, mesh, P("shards"))
     st_clear_delta(st)
     return st
 
@@ -683,13 +793,21 @@ def st_clear_delta(st: ShardedTiles):
     st.d_rows_np = np.zeros((0, cap), np.int32)
     if st.tile_pp is not None:
         st.d_tile_pp = rep(np.zeros((0, cap), np.float32), P(None, None))
+    if st.q_data is not None:
+        qdt = np.asarray(st.q_data).dtype
+        st.d_q_data = rep(np.zeros((0, cap, d), qdt), P(None, None, None))
+        st.d_q_scale = rep(np.zeros((0,), np.float32), P(None))
+        st.d_q_ppq = rep(np.zeros((0, cap), np.float32), P(None, None))
+        st.d_q_eps = rep(np.zeros((0,), np.float32), P(None))
 
 
 def st_set_delta(st: ShardedTiles, rows_np: np.ndarray, tiles_np: np.ndarray,
-                 centroid: np.ndarray, radius: np.ndarray):
+                 centroid: np.ndarray, radius: np.ndarray, planes=None):
     """Refresh the replicated delta extension (one small upload per
     write epoch; shapes change only on pow2 capacity doublings, so the
-    compiled bodies re-trace rarely)."""
+    compiled bodies re-trace rarely). ``planes``: the delta tiles'
+    quantized scan operands (own scales, quantized at sync time) when
+    the owning engine runs a reduced-precision scan."""
     from jax.sharding import PartitionSpec as P
     rep = lambda x, spec: shard_put(np.asarray(x), st.mesh, spec)
     st.td = len(rows_np)
@@ -701,6 +819,11 @@ def st_set_delta(st: ShardedTiles, rows_np: np.ndarray, tiles_np: np.ndarray,
     if st.tile_pp is not None:
         st.d_tile_pp = rep((tiles_np.astype(np.float32) ** 2).sum(-1),
                            P(None, None))
+    if planes is not None:
+        st.d_q_data = rep(planes.data, P(None, None, None))
+        st.d_q_scale = rep(planes.scale, P(None))
+        st.d_q_ppq = rep(planes.ppq, P(None, None))
+        st.d_q_eps = rep(planes.eps, P(None))
 
 
 def _shard_heap_merge(lbd, lbr, k: int):
@@ -715,36 +838,50 @@ def _shard_heap_merge(lbd, lbr, k: int):
 
 
 def _sharded_local_scan(qs, sel, colv, act, lbd, lbr, br_all, dt_all,
-                        mt_all, k: int, interpret: bool, lb_col=None):
+                        mt_all, k: int, interpret: bool, lb_col=None,
+                        planes=None, precision: str = "fp32", kth0=None):
     """One shard's beam scan of its selected local tiles, merged into
     its LOCAL heap (stable: carry first, so earlier lower-bound tiles
-    keep the visit-order tie-break)."""
+    keep the visit-order tie-break). With ``precision`` != "fp32",
+    ``planes`` holds the shard's assembled (base + delta) quantized
+    arrays and ``kth0`` the previous round's GLOBAL kth squared
+    distance; returns an extra scalar — this shard's fp32-rescued
+    candidate count."""
     g = qs.shape[0]
     cap = br_all.shape[1]
     cand = br_all[sel].reshape(g, -1)
     valid = (cand >= 0) & jnp.repeat(colv, cap, axis=1)
     if act is not None:
         valid = valid & act[:, None]
-    pts = jnp.take(dt_all, sel, axis=0).reshape(g, -1, dt_all.shape[-1])
     ma = jnp.take_along_axis(mt_all, sel[:, :, None], axis=1)
     valid = valid & ma.reshape(g, -1)
     lb2 = None
     if lb_col is not None:
         lb2 = jnp.repeat(lb_col * lb_col, cap, axis=1)
-    d2, idx = ops.topk_l2_masked(qs, pts, valid, k, interpret=interpret,
-                                 lb2=lb2)
+    if precision != "fp32":
+        d2, idx, resc = ops.topk_l2_masked_mp(
+            qs, sel, valid, dt_all, *planes, k, lb2=lb2, kth0=kth0,
+            precision=precision, interpret=interpret)
+        nresc = jnp.sum(resc)
+    else:
+        pts = jnp.take(dt_all, sel, axis=0).reshape(g, -1,
+                                                    dt_all.shape[-1])
+        d2, idx = ops.topk_l2_masked(qs, pts, valid, k,
+                                     interpret=interpret, lb2=lb2)
+        nresc = jnp.int32(0)
     rows = jnp.take_along_axis(cand, jnp.maximum(idx, 0), axis=1)
     rows = jnp.where(idx >= 0, rows, -1)
     alld = jnp.concatenate([lbd, d2], axis=1)
     allr = jnp.concatenate([lbr, rows], axis=1)
     negd, pick = jax.lax.top_k(-alld, k)
     return -negd, jnp.take_along_axis(allr, pick, axis=1), \
-        jnp.sum(valid)
+        jnp.sum(valid), nresc
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
-                     w: int, budget: int, k: int, interpret: bool):
+                     w: int, budget: int, k: int, interpret: bool,
+                     precision: str = "fp32"):
     """Build (start_fn, loop_fn) — the two compiled shard_map dispatches
     of the sharded beam loop, memoized per (mesh, layout, widths).
 
@@ -758,9 +895,17 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
     from jax.sharding import PartitionSpec as P
     t_tot = t_local + td
     prologue = _knn_prologue_fast if t_tot <= 4096 else _knn_prologue
+    mp = precision != "fp32"
+    # extra operands when the scan is mixed-precision: the base planes
+    # (sharded along T like every other tile array) then the replicated
+    # delta planes, in plan_tiles component order (data, scale, ppq, eps)
+    qp_in_specs = (
+        (P("shards", None, None), P("shards"), P("shards", None),
+         P("shards"), P(None, None, None), P(None), P(None, None),
+         P(None)) if mp else ())
 
     def _assemble(n_masked, mtm, dmtm, g, cen_l, rad_l, br_l, dt_l,
-                  dcen, drad, dbr, ddt):
+                  dcen, drad, dbr, ddt, qp):
         """Per-shard (local base + gated replicated delta) tile arrays
         and the full (g, t_tot, cap) mask stack."""
         sidx = jax.lax.axis_index("shards")
@@ -774,29 +919,37 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
         tail = jnp.broadcast_to((br >= 0)[None],
                                 (g - n_masked, br.shape[0], cap))
         mt = jnp.concatenate([mt_m, tail], axis=0)
-        return cen, rad, br, dt, mt
+        # quantized planes: non-shard-0 delta copies need no gating here
+        # — their tiles' radius gate already makes every bound +inf, so
+        # no candidate of theirs is ever valid, rescued, or merged
+        planes = (tuple(jnp.concatenate([a, b])
+                        for a, b in zip(qp[:4], qp[4:]))
+                  if qp else None)
+        return cen, rad, br, dt, mt, planes
 
     def start(qs, mtm, dmtm, cen_l, rad_l, br_l, dt_l,
-              dcen, drad, dbr, ddt):
+              dcen, drad, dbr, ddt, *qp):
         g = qs.shape[0]
         n_masked = mtm.shape[0]
-        cen, rad, br, dt, mt = _assemble(
+        cen, rad, br, dt, mt, planes = _assemble(
             n_masked, mtm, dmtm, g, cen_l, rad_l, br_l, dt_l,
-            dcen, drad, dbr, ddt)
+            dcen, drad, dbr, ddt, qp)
         order_l, lb_l = prologue(qs, cen, rad, mt)
         l = lb_l.shape[1]
         bd0 = jnp.full((g, k), jnp.inf, jnp.float32)
         br0 = jnp.full((g, k), -1, jnp.int32)
         colv = ~jnp.isinf(lb_l[:, :w1])
-        lbd, lbr, nvalid = _sharded_local_scan(
+        lbd, lbr, nvalid, nresc = _sharded_local_scan(
             qs, order_l[:, :w1], colv, None, bd0, br0, br, dt, mt, k,
-            interpret)
+            interpret, lb_col=lb_l[:, :w1] if mp else None,
+            planes=planes, precision=precision)
         gbd, gbr = _shard_heap_merge(lbd, lbr, k)
         kth = jnp.sqrt(gbd[:, -1])
         nxt = lb_l[:, w1] if w1 < l else jnp.full(g, jnp.inf, jnp.float32)
         nxt = jax.lax.pmin(nxt, "shards")
         return (order_l, lb_l, mt, lbd, lbr, gbd, gbr, kth > nxt,
-                jax.lax.psum(nvalid, "shards"))
+                jax.lax.psum(nvalid, "shards"),
+                jax.lax.psum(nresc, "shards"))
 
     start_fn = jax.jit(shard_map_compat(
         start, mesh,
@@ -804,15 +957,15 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
                                                             None),
                   P("shards", None), P("shards"), P("shards", None),
                   P("shards", None, None), P(None, None), P(None),
-                  P(None, None), P(None, None, None)),
+                  P(None, None), P(None, None, None)) + qp_in_specs,
         out_specs=(P(None, "shards"), P(None, "shards"),
                    P(None, "shards", None), P(None, "shards"),
                    P(None, "shards"), P(None, None), P(None, None),
-                   P(None), P(None)),
+                   P(None), P(None), P(None)),
         manual_axes=("shards",)))
 
     def loop(idx, active0, qs_f, lbd_f, lbr_f, order_f, lb_f, mt_f,
-             br_l, dt_l, dbr, ddt):
+             br_l, dt_l, dbr, ddt, *qp):
         qs = jnp.take(qs_f, idx, axis=0)
         lbd = jnp.take(lbd_f, idx, axis=0)
         lbr = jnp.take(lbr_f, idx, axis=0)
@@ -820,6 +973,9 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
         g = qs.shape[0]
         br = jnp.concatenate([br_l, dbr])
         dt = jnp.concatenate([dt_l, ddt])
+        planes = (tuple(jnp.concatenate([a, b])
+                        for a, b in zip(qp[:4], qp[4:]))
+                  if qp else None)
         l = order_f.shape[1]
         order_pad = jnp.pad(jnp.take(order_f, idx, axis=0)[:, w1:],
                             ((0, 0), (0, budget * w - (l - w1))))
@@ -832,16 +988,17 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
             return (st[0] < budget) & jnp.any(st[1])
 
         def body(st):
-            r, act, _, _, lbd, lbr, nbuck, nrows, rr = st
+            r, act, gbd, _, lbd, lbr, nbuck, nrows, nresc_a, rr = st
             start_ = r * w
             sel = jax.lax.dynamic_slice_in_dim(order_pad, start_, w,
                                                axis=1)
             lb_col = jax.lax.dynamic_slice_in_dim(lb_pad, start_, w,
                                                   axis=1)
             colv = ~jnp.isinf(lb_col)
-            lbd2, lbr2, nv = _sharded_local_scan(
+            lbd2, lbr2, nv, nresc = _sharded_local_scan(
                 qs, sel, colv, act, lbd, lbr, br, dt, mt, k, interpret,
-                lb_col=lb_col)
+                lb_col=lb_col, planes=planes, precision=precision,
+                kth0=gbd[:, -1] if mp else None)
             gbd2, gbr2 = _shard_heap_merge(lbd2, lbr2, k)
             kth = jnp.sqrt(gbd2[:, -1])
             nxt = jax.lax.pmin(jax.lax.dynamic_slice_in_dim(
@@ -851,15 +1008,17 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
             nbuck = nbuck + jax.lax.psum(
                 jnp.sum(jnp.where(act[:, None], colv, False)), "shards")
             nrows = nrows + jax.lax.psum(nv, "shards")
+            nresc_a = nresc_a + jax.lax.psum(nresc, "shards")
             return (r + 1, act2, gbd2, gbr2, lbd2, lbr2, nbuck, nrows,
-                    rr)
+                    nresc_a, rr)
 
         st0 = (jnp.int32(0), active0, gbd0, gbr0, lbd, lbr,
-               jnp.int32(0), jnp.int32(0), jnp.zeros(g, jnp.int32))
-        r, act_f, gbd, gbr, _, _, nbuck, nrows, rr = \
+               jnp.int32(0), jnp.int32(0), jnp.int32(0),
+               jnp.zeros(g, jnp.int32))
+        r, act_f, gbd, gbr, _, _, nbuck, nrows, nresc, rr = \
             jax.lax.while_loop(cond, body, st0)
         rr = jnp.where(act_f, r, rr)
-        return gbd, gbr, jnp.stack([r, nbuck, nrows]), rr
+        return gbd, gbr, jnp.stack([r, nbuck, nrows, nresc]), rr
 
     loop_fn = jax.jit(shard_map_compat(
         loop, mesh,
@@ -867,7 +1026,7 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
                   P(None, "shards"), P(None, "shards"), P(None, "shards"),
                   P(None, "shards", None), P("shards", None),
                   P("shards", None, None), P(None, None),
-                  P(None, None, None)),
+                  P(None, None, None)) + qp_in_specs,
         out_specs=(P(None, None), P(None, None), P(None), P(None)),
         manual_axes=("shards",)))
     return start_fn, loop_fn
@@ -876,6 +1035,7 @@ def _sharded_knn_fns(mesh, t_local: int, td: int, cap: int, w1: int,
 def batched_knn_sharded(st: ShardedTiles, qs, k: int, *,
                         masks_np: Optional[np.ndarray] = None,
                         beam: int = 8, interpret: bool = True,
+                        precision: str = "fp32",
                         w1: Optional[int] = None, ws: Optional[int] = None,
                         stats: Optional[EngineStats] = None,
                         conv_out: Optional[list] = None
@@ -908,7 +1068,11 @@ def batched_knn_sharded(st: ShardedTiles, qs, k: int, *,
     w = max(1, ws if ws else max(1, -(-beam // s)))
     budget = max(1, -(-(l - w1) // w)) if l > w1 else 1
     start_fn, loop_fn = _sharded_knn_fns(
-        st.mesh, st.t_local, st.td, st.cap, w1, w, budget, k, interpret)
+        st.mesh, st.t_local, st.td, st.cap, w1, w, budget, k, interpret,
+        precision)
+    qp = () if precision == "fp32" else (
+        st.q_data, st.q_scale, st.q_ppq, st.q_eps,
+        st.d_q_data, st.d_q_scale, st.d_q_ppq, st.d_q_eps)
     # host-side tile-major mask staging, uploaded pre-sharded
     from jax.sharding import PartitionSpec as P
     n_masked = 0 if masks_np is None else len(masks_np)
@@ -922,14 +1086,18 @@ def batched_knn_sharded(st: ShardedTiles, qs, k: int, *,
         dmtm_np = np.zeros((0,) + st.d_rows_np.shape, bool)
     mtm = shard_put(mtm_np, st.mesh, P(None, "shards", None))
     dmtm = shard_put(dmtm_np, st.mesh, P(None, None, None))
-    order_f, lb_f, mt_f, lbd, lbr, gbd, gbr, active, nvalid = start_fn(
+    (order_f, lb_f, mt_f, lbd, lbr, gbd, gbr, active, nvalid,
+     nresc) = start_fn(
         qs_j, mtm, dmtm, st.centroid, st.radius, st.bucket_rows,
         st.data_tiles, st.d_centroid, st.d_radius, st.d_bucket_rows,
-        st.d_data_tiles)
+        st.d_data_tiles, *qp)
     if stats is not None:
         stats.knn_rounds += 1
         stats.knn_buckets += g * w1 * s
         stats.rows_scanned += int(nvalid)
+        if precision != "fp32":
+            stats.mp_scanned += int(nvalid)
+            stats.mp_rescued += int(nresc)
     conv = np.full(g, w1, np.int64)
     act = np.nonzero(np.asarray(active))[0]
     d2_out, rows_out = gbd, gbr
@@ -943,7 +1111,7 @@ def batched_knn_sharded(st: ShardedTiles, qs, k: int, *,
         bd, br, loop_stats, retire_round = loop_fn(
             idx, active0, qs_j, lbd, lbr, order_f, lb_f, mt_f,
             st.bucket_rows, st.data_tiles, st.d_bucket_rows,
-            st.d_data_tiles)
+            st.d_data_tiles, *qp)
         d2_np = np.asarray(d2_out, dtype=np.float32).copy()
         rows_np_out = np.asarray(rows_out).copy()
         d2_np[act] = np.asarray(bd)[:na]
@@ -952,10 +1120,13 @@ def batched_knn_sharded(st: ShardedTiles, qs, k: int, *,
         conv[act] = np.minimum(
             w1 + np.asarray(retire_round)[:na].astype(np.int64) * w, l)
         if stats is not None:
-            rounds, nbuck, nrows = np.asarray(loop_stats)
+            rounds, nbuck, nrows, nresc_l = np.asarray(loop_stats)
             stats.knn_rounds += int(rounds)
             stats.knn_buckets += int(nbuck)
             stats.rows_scanned += int(nrows)
+            if precision != "fp32":
+                stats.mp_scanned += int(nrows)
+                stats.mp_rescued += int(nresc_l)
     if stats is not None:
         stats.time_s += time.time() - t0
     if conv_out is not None:
@@ -1196,6 +1367,8 @@ class EnginePlan:
     seeds: Optional[Dict[str, int]] = None        # archetype -> width
     shards: int = 0   # the shard topology the grouping was keyed for;
     #                   must match the executing engine (0 = unsharded)
+    precision: str = "fp32"   # scan precision the plan was keyed for;
+    #                           must match the executing engine
 
 
 class HybridEngine:
@@ -1217,7 +1390,24 @@ class HybridEngine:
                  beam: int = 16, tile: int = 128,
                  device_loop: bool = True,
                  device_tile: Optional[int] = None,
-                 shards: Optional[int] = None, mesh=None):
+                 shards: Optional[int] = None, mesh=None,
+                 precision: str = "fp32", quant_cache=None):
+        from repro.utils import quant
+        if precision not in quant.PRECISIONS:
+            raise ValueError(f"precision must be one of {quant.PRECISIONS},"
+                             f" got {precision!r}")
+        # mixed-precision tile scan (see module doc): both KNN beam-loop
+        # layouts get reduced-precision planes built at prepare time;
+        # the V.R predicate path stays fp32 (its triangle bound already
+        # prunes on ball metadata — quantizing its union GEMM would buy
+        # little and double the plane memory). ``quant_cache`` optionally
+        # supplies persisted planes (repro.core.persist) so load skips
+        # re-quantization.
+        self.precision = precision
+        self.vec_planes: Dict[str, Any] = {}
+        self.vec_planes_dev: Dict[str, Any] = {}
+        self._planes_np: Dict[Tuple[str, str], Any] = {}
+        self._quant_cache = quant_cache
         self.device_loop = device_loop
         self.device_tile = device_tile or max(32, tile // 2)
         # sharded execution: shards=None keeps the single-device paths
@@ -1258,6 +1448,9 @@ class HybridEngine:
             tiles = tile_data(c, rows_np)
             self.vec_tiles[a] = jnp.asarray(tiles)
             self.vec_tile_pp[a] = jnp.asarray((tiles ** 2).sum(-1))
+            if precision != "fp32":
+                self.vec_planes[a] = self._make_planes(
+                    "host", a, tiles, rows_np >= 0)
         self.num = {a: jnp.asarray(c, jnp.float32)
                     for a, c in table.numeric.items()}
         # per-TILE balls/boxes, not the leaf's: chunks of one big leaf
@@ -1278,8 +1471,13 @@ class HybridEngine:
         self.bucket_rows_dev_np = rows_dev
         br_dev = jnp.asarray(rows_dev)
         self.bucket_rows_dev = br_dev
-        self.vec_tiles_dev = {a: jnp.asarray(tile_data(c, rows_dev))
-                              for a, c in table.vector.items()}
+        self.vec_tiles_dev = {}
+        for a, c in table.vector.items():
+            tiles_d = tile_data(c, rows_dev)
+            self.vec_tiles_dev[a] = jnp.asarray(tiles_d)
+            if precision != "fp32":
+                self.vec_planes_dev[a] = self._make_planes(
+                    "dev", a, tiles_d, rows_dev >= 0)
         self.geom_dev = {a: _tile_geometry(c, rows_dev, br_dev, cap_dev)
                          for a, c in table.vector.items()}
         # T-sharded copies of both layouts: the finer device layout
@@ -1300,7 +1498,8 @@ class HybridEngine:
                 self.sharded_dev[a] = make_sharded_tiles(
                     self.mesh, self.shards, np.asarray(gd.centroid),
                     np.asarray(gd.radius), rows_dev,
-                    np.asarray(self.vec_tiles_dev[a]))
+                    np.asarray(self.vec_tiles_dev[a]),
+                    planes=self._planes_np.get(("dev", a)))
                 gc = self.geom[a]
                 self.sharded_vr[a] = make_sharded_tiles(
                     self.mesh, self.shards, np.asarray(gc.centroid),
@@ -1318,11 +1517,44 @@ class HybridEngine:
         self._base = {k: getattr(self, k) for k in (
             "n", "n_tiles", "bucket_rows", "bucket_rows_np", "row_leaf",
             "vec", "vec_np", "vec_tiles", "vec_tile_pp", "num",
-            "num_lo", "num_hi", "geom", "geom_dev", "vec_tiles_dev")}
+            "num_lo", "num_hi", "geom", "geom_dev", "vec_tiles_dev",
+            "vec_planes", "vec_planes_dev")}
         self.n_base = self.n
         self.delta_epoch = 0
         self.delta_rows = 0
         self.delta_tiles = 0
+
+    # ------------------------------------------------- mixed precision
+    def _make_planes(self, layout: str, attr: str, tiles_np: np.ndarray,
+                     valid: np.ndarray):
+        """Quantize one tile layout (or consume a persisted snapshot with
+        matching precision and shape) and upload. Keeps the host-numpy
+        planes around for the sharded upload and ``snapshot_planes``."""
+        from repro.utils import quant
+        cache = self._quant_cache
+        planes = None
+        if cache and cache.get("precision") == self.precision:
+            keys = [f"{layout}__{attr}__{c}" for c in quant.TilePlanes._fields]
+            if all(k in cache for k in keys):
+                cand = quant.TilePlanes(*(cache[k] for k in keys))
+                if np.asarray(cand.data).shape == tiles_np.shape:
+                    planes = cand
+        if planes is None:
+            planes = quant.plan_tiles(tiles_np, valid, self.precision)
+        planes = quant.TilePlanes(*(np.asarray(x) for x in planes))
+        self._planes_np[(layout, attr)] = planes
+        return quant.TilePlanes(*(jnp.asarray(x) for x in planes))
+
+    def snapshot_planes(self) -> Dict[str, np.ndarray]:
+        """BASE-layout quantized planes as flat numpy arrays for
+        ``repro.core.persist`` (keys ``{layout}__{attr}__{component}``);
+        feeding the dict back as ``quant_cache`` (plus a ``precision``
+        entry) lets a loaded platform skip re-quantization."""
+        out: Dict[str, np.ndarray] = {}
+        for (layout, attr), planes in self._planes_np.items():
+            for comp, arr in zip(planes._fields, planes):
+                out[f"{layout}__{attr}__{comp}"] = np.asarray(arr)
+        return out
 
     # --------------------------------------------------------- delta union
     def _delta_group_count(self, delta) -> int:
@@ -1447,6 +1679,8 @@ class HybridEngine:
             [self.bucket_rows_dev, jnp.asarray(rows_d)])
         vec, vec_np, vt, vpp, geom = {}, {}, {}, {}, {}
         vt_dev, geom_dev = {}, {}
+        vpl, vpl_dev = {}, {}
+        from repro.utils import quant
         for a in delta.vector_dims:
             dcol = delta.vector[a]                       # (capn, d), NaN pads
             full = np.concatenate([base["vec_np"][a], dcol])
@@ -1471,6 +1705,20 @@ class HybridEngine:
             vt_dev[a] = jnp.concatenate([base["vec_tiles_dev"][a],
                                          jnp.asarray(pts_d)])
             cen_d, rad_d = self._delta_geom(pts_d, valid_d)
+            # delta tiles get their OWN quantization scales (quantized
+            # at sync, like base tiles at prepare) and the plane arrays
+            # are concatenated tile-major exactly like the fp32 tiles —
+            # the mixed-precision scan sees one uniform tile universe
+            dpl_h = dpl_d = None
+            if self.precision != "fp32":
+                dpl_h = quant.plan_tiles(pts_h, valid_h, self.precision)
+                vpl[a] = quant.TilePlanes(*(
+                    jnp.concatenate([b, jnp.asarray(np.asarray(x))])
+                    for b, x in zip(base["vec_planes"][a], dpl_h)))
+                dpl_d = quant.plan_tiles(pts_d, valid_d, self.precision)
+                vpl_dev[a] = quant.TilePlanes(*(
+                    jnp.concatenate([b, jnp.asarray(np.asarray(x))])
+                    for b, x in zip(base["vec_planes_dev"][a], dpl_d)))
             gd0 = base["geom_dev"][a]
             geom_dev[a] = LeafGeometry(
                 centroid=jnp.concatenate([gd0.centroid,
@@ -1482,13 +1730,15 @@ class HybridEngine:
             # shards untouched, freshness-exactness preserved verbatim
             if a in self.sharded_dev:
                 st_set_delta(self.sharded_dev[a], rows_d, pts_d,
-                             cen_d, rad_d)
+                             cen_d, rad_d, planes=dpl_d)
             if a in self.sharded_vr:
                 st_set_delta(self.sharded_vr[a], rows_h, pts_h,
                              cen, rad)
         self.vec, self.vec_np = vec, vec_np
         self.vec_tiles, self.vec_tile_pp, self.geom = vt, vpp, geom
         self.vec_tiles_dev, self.geom_dev = vt_dev, geom_dev
+        if self.precision != "fp32":
+            self.vec_planes, self.vec_planes_dev = vpl, vpl_dev
         num, num_lo, num_hi = {}, {}, {}
         for a in delta.numeric_keys:
             dcol = delta.numeric[a]
@@ -1808,7 +2058,7 @@ class HybridEngine:
                 _, rows = batched_knn_sharded(
                     st, qs_np, kmax, masks_np=masks_np, beam=self.beam,
                     interpret=self.interpret, ws=ws, stats=stats,
-                    conv_out=conv)
+                    conv_out=conv, precision=self.precision)
                 s = st.shards
                 w1_eff = max(1, min(
                     -(-max(1, self.beam // 2) // s), st.t_total))
@@ -1829,6 +2079,10 @@ class HybridEngine:
                     else self.geom[attr]
                 tiles = self.vec_tiles_dev[attr] if device_loop \
                     else self.vec_tiles[attr]
+                planes = None
+                if self.precision != "fp32":
+                    planes = (self.vec_planes_dev if device_loop
+                              else self.vec_planes)[attr]
                 l = geom.n_leaves
                 if device_loop:
                     ws = max(self.beam, _next_pow2(seed)) if seed \
@@ -1836,6 +2090,8 @@ class HybridEngine:
                     _, rows = knn(geom, tiles, qs, kmax, masks=masks,
                                   beam=self.beam,
                                   interpret=self.interpret,
+                                  planes=planes,
+                                  precision=self.precision,
                                   ws=ws, stats=stats, conv_out=conv)
                     w1_eff = max(1, min(max(1, self.beam // 2), l))
                     signal = np.maximum(conv[0] - w1_eff, 0)
@@ -1846,6 +2102,8 @@ class HybridEngine:
                     _, rows = knn(geom, tiles, qs, kmax, masks=masks,
                                   beam=beam_eff,
                                   interpret=self.interpret,
+                                  planes=planes,
+                                  precision=self.precision,
                                   stats=stats, conv_out=conv)
                     w_start = max(1, min(beam_eff, l))
                     signal = np.maximum(conv[0] - w_start, 0)
@@ -1890,6 +2148,12 @@ class HybridEngine:
                 raise ValueError(
                     f"EnginePlan was grouped for shards={plan.shards} "
                     f"but this engine runs shards={want} "
+                    f"(stale or mis-keyed plan cache)")
+            if plan.precision != self.precision:
+                raise ValueError(
+                    f"EnginePlan was keyed for precision="
+                    f"{plan.precision!r} but this engine runs "
+                    f"precision={self.precision!r} "
                     f"(stale or mis-keyed plan cache)")
         elif device_loop is None:
             device_loop = self.device_loop

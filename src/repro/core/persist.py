@@ -80,7 +80,27 @@ def save_platform(platform, directory: str):
                columns=list(platform.layout))
     platform.qbs.save(os.path.join(directory, "qbs.json"))
     with open(os.path.join(directory, "platform.json"), "w") as f:
-        json.dump({"default_shards": platform.default_shards}, f)
+        json.dump({"default_shards": platform.default_shards,
+                   "default_precision": platform.default_precision}, f)
+    # mixed-precision tile planes: when an engine matching the persisted
+    # default precision has quantized its BASE layouts, snapshot them so
+    # a reloaded platform serves without re-quantizing (load feeds the
+    # arrays back through ``quant_cache``; shapes are re-validated there,
+    # so a stale snapshot only costs a requantize, never wrong results).
+    # int8 only — bf16 planes are a cast, cheaper to rebuild than store.
+    quant_path = os.path.join(directory, "quant.npz")
+    planes = None
+    if platform.default_precision == "int8":
+        for eng in getattr(platform, "_engines", {}).values():
+            if (getattr(eng, "precision", "fp32")
+                    == platform.default_precision
+                    and getattr(eng, "_planes_np", None)):
+                planes = eng.snapshot_planes()
+                break
+    if planes:
+        np.savez_compressed(quant_path, **planes)
+    elif os.path.exists(quant_path):   # overwrite of a dirtier snapshot
+        os.remove(quant_path)
     delta_path = os.path.join(directory, "delta.npz")
     d = platform.delta
     if d is not None and d.m:
@@ -117,7 +137,15 @@ def load_platform(directory: str, shards: Optional[int] = None):
     pj = os.path.join(directory, "platform.json")
     if os.path.exists(pj):
         with open(pj) as f:
-            p.default_shards = json.load(f).get("default_shards")
+            pconf = json.load(f)
+        p.default_shards = pconf.get("default_shards")
+        p.default_precision = pconf.get("default_precision", "fp32")
+    quant_path = os.path.join(directory, "quant.npz")
+    if os.path.exists(quant_path):
+        z = np.load(quant_path, allow_pickle=False)
+        cache = {k: z[k] for k in z.files}
+        cache["precision"] = p.default_precision
+        p._quant_cache = cache
     if shards is not None:
         p.default_shards = shards
     if p.default_shards:

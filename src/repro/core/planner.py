@@ -205,7 +205,7 @@ class ExecutablePlan:
             eng_plan = EnginePlan(
                 device_loop=lp.device_loop, job_specs=lp.job_specs,
                 groups=lp.groups, seeds=self._seeds(),
-                shards=lp.shards)
+                shards=lp.shards, precision=self.session.precision)
             eng = self.session.engine(lp.shards)
             rows, stats = eng.execute_batch(
                 [self.norm[i] for i in lp.engine_idx], plan=eng_plan)
@@ -213,6 +213,8 @@ class ExecutablePlan:
                 results[i] = r
             for arch, width in stats.knn_group_widths:
                 p.qbs.record_convergence(arch, width)
+            self.session.mp_scanned += stats.mp_scanned
+            self.session.mp_rescued += stats.mp_rescued
         else:
             stats = EngineStats()
         stats.queries = len(self.norm)  # incl. scalar fallbacks (their
@@ -269,10 +271,21 @@ class ExecutablePlan:
                       else (0 if p.delta is None
                             else p.delta.n_tiles(self.session.tile))),
         }
+        sess = self.session
+        rescue = {
+            "scanned": sess.mp_scanned,
+            "rescued": sess.mp_rescued,
+            "ratio": (sess.mp_rescued / sess.mp_scanned
+                      if sess.mp_scanned else 0.0),
+        }
         return {
             "cache": "hit" if self.cache_hit else "miss",
             "device_loop": lp.device_loop,
             "shards": lp.shards,
+            "precision": sess.precision,
+            # fp32-rescue pressure of the mixed-precision scan, summed
+            # over every batch this session executed (all zero on fp32)
+            "rescue": rescue,
             "build_id": self.session.platform.build_id,
             "delta": delta,
             "n_queries": len(self.norm),
@@ -301,12 +314,26 @@ class Session:
 
     def __init__(self, platform, *, interpret: bool = True,
                  device_loop: bool = True, beam: int = 16,
-                 tile: int = 128, shards: Optional[int] = None):
+                 tile: int = 128, shards: Optional[int] = None,
+                 precision: Optional[str] = None):
         self.platform = platform
         self.interpret = interpret
         self.device_loop = device_loop
         self.beam = beam
         self.tile = tile
+        # mixed-precision tile scan for the KNN loops (results stay
+        # row-identical to fp32; see engine module doc). Resolved HERE
+        # (explicit > MQRLD_PRECISION env > platform default) so plan
+        # keys and the executing engine can never disagree. Part of the
+        # plan-cache key — each precision has its own compiled scans.
+        self.precision = platform._resolve_precision(precision) \
+            if hasattr(platform, "_resolve_precision") \
+            else (precision or "fp32")
+        # session-lifetime mixed-precision counters (what explain()'s
+        # rescue block reports): rescued/scanned over every batch this
+        # session executed
+        self.mp_scanned = 0
+        self.mp_rescued = 0
         # shard topology for the device loop: None = the platform's
         # ``default_shards`` (itself None = single-device paths); 0 =
         # force the single-device paths; N >= 1 = the T-sharded
@@ -331,7 +358,8 @@ class Session:
             shards = self.shards or 0
         return self.platform.engine(interpret=self.interpret,
                                     beam=self.beam, tile=self.tile,
-                                    shards=shards)
+                                    shards=shards,
+                                    precision=self.precision)
 
     # ---------------------------------------------------------------- plan
     def plan(self, queries: Sequence[Q.Query], *,
@@ -349,7 +377,7 @@ class Session:
             self._cache.clear()
             self._cache_build = self.platform.build_id
         key = (tuple(Q.signature(q) for q in norm), dl, shards,
-               self.platform.build_id)
+               self.precision, self.platform.build_id)
         logical = self._cache.get(key)
         hit = logical is not None
         if hit:

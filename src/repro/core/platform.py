@@ -113,6 +113,13 @@ class MQRLD:
         # single-device paths). Persisted by core.persist so a reloaded
         # platform rebuilds its sharded layout on first query.
         self.default_shards: Optional[int] = None
+        # mixed-precision serving default: engine()/session() calls that
+        # do not pass ``precision`` explicitly use this (after the
+        # MQRLD_PRECISION env override). Persisted by core.persist along
+        # with the quantized tile planes (``_quant_cache``) so a
+        # reloaded int8 platform serves without re-quantizing.
+        self.default_precision: str = "fp32"
+        self._quant_cache: Optional[Dict] = None
         self._view_cache: Optional[Tuple[Tuple[int, int], MMOTable]] = None
         self._oracle_cache: Dict = {}
         self._engines: Dict = {}
@@ -494,11 +501,26 @@ class MQRLD:
             return np.nonzero(out)[0]
         raise TypeError(q)
 
+    def _resolve_precision(self, precision: Optional[str]) -> str:
+        """Scan-precision resolution: explicit argument > MQRLD_PRECISION
+        env > the platform's persisted ``default_precision``. Explicit
+        wins over the env so a test that pins fp32 stays fp32 under a
+        forced-int8 CI rerun."""
+        import os
+        from repro.utils.quant import PRECISIONS
+        p = precision or os.environ.get("MQRLD_PRECISION") \
+            or self.default_precision
+        if p not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got {p!r}")
+        return p
+
     # ------------------------------------------------------- batched engine
     def engine(self, *, interpret: bool = True, beam: int = 16,
                tile: int = 128,
                device_loop: Optional[bool] = None,
-               shards: Optional[int] = None):
+               shards: Optional[int] = None,
+               precision: Optional[str] = None):
         """The device-resident batched executor for this table (built
         lazily, invalidated by ``prepare``). ``device_loop`` sets the
         engine's default KNN beam-loop implementation (device
@@ -509,13 +531,17 @@ class MQRLD:
         state. ``shards`` (None = the platform's ``default_shards``;
         0 = force the single-device paths) lays the tile-major state
         out over an N-device ("shards",) mesh — the sharded execution
-        path; each topology keeps its own cached engine."""
+        path; each topology keeps its own cached engine. ``precision``
+        (None = MQRLD_PRECISION env, then ``default_precision``) selects
+        the mixed-precision tile scan — results stay row-identical to
+        fp32; each precision keeps its own cached engine."""
         assert self.tree is not None, "call prepare() first"
         from repro.core.engine import HybridEngine
         if shards is None:
             shards = self.default_shards
         shards = shards or None
-        key = (interpret, beam, tile, shards)
+        prec = self._resolve_precision(precision)
+        key = (interpret, beam, tile, shards, prec)
         eng = self._engines.get(key)
         if eng is None:
             # bounded LRU: each engine pins device-resident copies of
@@ -529,7 +555,8 @@ class MQRLD:
                 self.tree, self.table, self.meta, interpret=interpret,
                 beam=beam, tile=tile,
                 device_loop=True if device_loop is None else device_loop,
-                shards=shards)
+                shards=shards, precision=prec,
+                quant_cache=self._quant_cache)
         else:
             self._engines.pop(key)     # re-insert: keep LRU order
             self._engines[key] = eng
@@ -542,7 +569,8 @@ class MQRLD:
 
     def session(self, *, interpret: bool = True,
                 device_loop: bool = True, beam: int = 16,
-                tile: int = 128, shards: Optional[int] = None):
+                tile: int = 128, shards: Optional[int] = None,
+                precision: Optional[str] = None):
         """The MOAPI v2 entry point: a ``repro.core.planner.Session``
         over this platform (cached per configuration). Use
         ``session().plan(queries)`` for an ``ExecutablePlan`` with
@@ -550,19 +578,22 @@ class MQRLD:
         survives across batches and is invalidated by ``prepare()``
         through ``build_id``. ``shards`` (None = ``default_shards``)
         selects the sharded execution topology; plans cache per
-        topology and ``explain()`` reports it."""
+        topology and ``explain()`` reports it. ``precision`` (None =
+        MQRLD_PRECISION env, then ``default_precision``) selects the
+        mixed-precision tile scan; plans cache per precision."""
         from repro.core.planner import Session
         # resolve to the EFFECTIVE topology here so the cache can never
         # alias a forced-off session (shards=0) with a defaulted one,
         # and Session cannot re-resolve 0 back to the default
         eff = self.default_shards if shards is None else shards
         eff = eff or None
-        key = (interpret, device_loop, beam, tile, eff)
+        prec = self._resolve_precision(precision)
+        key = (interpret, device_loop, beam, tile, eff, prec)
         if key not in self._sessions:
             self._sessions[key] = Session(
                 self, interpret=interpret, device_loop=device_loop,
                 beam=beam, tile=tile,
-                shards=0 if eff is None else eff)
+                shards=0 if eff is None else eff, precision=prec)
         return self._sessions[key]
 
     def execute_batch(self, queries: Sequence[Q.Query], *,

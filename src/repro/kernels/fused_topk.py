@@ -27,6 +27,18 @@ select tiles in ascending-bound order per query, so once a query
 converges, the straggler tiles other queries still need stop charging it:
 blocks whose candidates are all bound-refuted (or masked/padding) become
 no-ops instead of full GEMM + sort-network steps.
+
+Mixed-precision scan (``quant_lb2_pallas``): computes the per-candidate
+widened bounds themselves in reduced precision. The candidate tiles are
+stored as int8 codes (one symmetric scale per bucket tile) or bf16, the
+distance GEMM runs on the narrow operands (int8 x int8 -> int32 on the
+MXU), and each result is WIDENED downward by the analytic quantization
+error bound plus an fp slack. Conservative-bound contract: the widened
+value is always <= the true fp32 squared distance, so refuting a
+candidate against a running kth distance is exact — only the surviving
+frontier is rescored in fp32 (``ops.topk_l2_masked_mp``), and the final
+top-k is row-identical to the fp32 oracle. Looseness only costs rescue
+work, never correctness.
 """
 from __future__ import annotations
 
@@ -232,3 +244,89 @@ def topk_l2_masked_pallas(q, p, valid, k: int, *, bg: int = None,
                         constant_values=jnp.inf)
         besti = jnp.pad(besti, ((0, 0), (0, k - kk)), constant_values=-1)
     return bestd, besti
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision candidate scan: widened lower bounds from int8/bf16 tiles
+# ---------------------------------------------------------------------------
+def _quant_lb2_kernel(qc_ref, qm_ref, c_ref, cs_ref, cp_ref, ce_ref, v_ref,
+                      o_ref, *, precision: str):
+    from repro.utils.quant import SLACK_ABS, SLACK_MAG, SLACK_REL
+    qm = qm_ref[...]                            # (BG, pad): sq, qqq, qeps
+    sq = qm[:, 0:1]
+    qqq = qm[:, 1:2]
+    qeps = qm[:, 2:3]
+    cp = cp_ref[...]                            # (BG, BC) exact deq norms^2
+    if precision == "int8":
+        # int8 x int8 -> int32 cross terms are EXACT (|sum| < 2^24), so
+        # the only error sources are the quantization itself (covered by
+        # qeps/ceps) and the fp32 expansion (covered by the slack)
+        cross = jax.lax.dot_general(
+            c_ref[...], qc_ref[...], (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        d2h = qqq + cp - (2.0 * sq * cs_ref[...]) * cross
+    else:
+        cross = jax.lax.dot_general(
+            c_ref[...], qc_ref[...], (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        d2h = qqq + cp - 2.0 * cross
+    d2h = jnp.maximum(d2h, 0.0)
+    dhat = jnp.sqrt(d2h)
+    mag = jnp.maximum(qqq + cp, 0.0)
+    slack = SLACK_ABS + SLACK_REL * dhat + SLACK_MAG * jnp.sqrt(mag)
+    lbr = jnp.maximum(dhat - (qeps + ce_ref[...]) - slack, 0.0)
+    o_ref[...] = jnp.where(v_ref[...] != 0, lbr * lbr, jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("precision", "bg", "bc", "interpret"))
+def quant_lb2_pallas(q, codes, cscale, cppq, ceps, valid, *, precision: str,
+                     bg: int = None, bc: int = None,
+                     interpret: bool = False):
+    """Widened squared lower bounds, semantics of ``ref.quant_lb2``.
+
+    q: (G, D) fp32 raw queries (quantized here, outside the grid);
+    codes: (G, C, D) int8/bf16 candidate tiles; cscale/cppq/ceps: (G, C)
+    fp32 per-candidate scale / exact dequantized norm^2 / row error
+    bound; valid: (G, C). Returns (G, C) fp32 — +inf where invalid.
+    """
+    from repro.utils.quant import quantize_query
+    g, _ = q.shape
+    c = codes.shape[1]
+    qcast, qscale, qqq, qeps = quantize_query(q, precision)
+    qmeta = jnp.stack([qscale, qqq, qeps], axis=1)      # (G, 3)
+
+    def rup(x, m):
+        return ((x + m - 1) // m) * m
+    if bg is None:
+        bg = min(64, rup(g, 8)) if interpret else 8
+    if bc is None:
+        bc = min(16384, rup(c, 128)) if interpret else 512
+    dpad = 8 if interpret else 128
+    qc2 = _pad(_pad(qcast, dpad, 1), bg, 0)
+    qm2 = _pad(_pad(qmeta.astype(jnp.float32), dpad, 1), bg, 0)
+    c2 = _pad(_pad(_pad(codes, dpad, 2), bc, 1), bg, 0)
+    cs2 = _pad(_pad(cscale.astype(jnp.float32), bc, 1), bg, 0)
+    cp2 = _pad(_pad(cppq.astype(jnp.float32), bc, 1), bg, 0)
+    ce2 = _pad(_pad(ceps.astype(jnp.float32), bc, 1), bg, 0)
+    v2 = _pad(_pad(valid.astype(jnp.int32), bc, 1), bg, 0)
+    gp, dp = qc2.shape
+    cp_ = c2.shape[1]
+    grid = (gp // bg, cp_ // bc)
+    out = pl.pallas_call(
+        functools.partial(_quant_lb2_kernel, precision=precision),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bg, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bg, qm2.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((bg, bc, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((bg, bc), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((gp, cp_), jnp.float32)],
+        interpret=interpret,
+    )(qc2, qm2, c2, cs2, cp2, ce2, v2)[0]
+    return out[:g, :c]

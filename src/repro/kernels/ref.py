@@ -50,6 +50,46 @@ def topk_l2_masked(q, p, valid, k: int):
     return dd, idx
 
 
+def quant_lb2(q, codes, cscale, cppq, ceps, valid, *, precision: str):
+    """Widened squared LOWER bounds from a reduced-precision scan.
+
+    Contract (what the mixed-precision path's exactness rests on): for
+    every valid candidate,  lb2[g, c] <= ||q_g - p_c||^2  — the bound may
+    be arbitrarily loose (that only costs rescue work), never violated.
+    Invalid candidates get +inf.
+
+    q: (G, D) fp32 raw queries. codes: (G, C, D) int8 codes or bf16
+    values; cscale/cppq/ceps broadcast per candidate: (G, C) fp32 tile
+    scale, EXACT squared norm of the dequantized candidate, and per-row
+    L2 quantization error bound. The construction: dequantize both
+    sides, take the quadratic-expansion distance d̂ between dequantized
+    vectors (the cross term is EXACT for int8 — integer products summed
+    in fp32 stay below 2^24), then by the triangle inequality
+    ||q - p|| >= d̂ - eps_q - eps_p, minus an fp slack for the fp32
+    rounding of the expansion itself.
+    """
+    from repro.utils.quant import (SLACK_ABS, SLACK_MAG, SLACK_REL,
+                                   quantize_query)
+    qcast, qscale, qqq, qeps = quantize_query(q, precision)
+    cf = codes.astype(jnp.float32)
+    if precision == "int8":
+        qf = qcast.astype(jnp.float32)
+        cross = jnp.einsum("gd,gcd->gc", qf, cf,
+                           preferred_element_type=jnp.float32)
+        d2h = qqq[:, None] + cppq - (2.0 * qscale[:, None] * cscale) * cross
+    else:
+        qf = qcast.astype(jnp.float32)
+        cross = jnp.einsum("gd,gcd->gc", qf, cf,
+                           preferred_element_type=jnp.float32)
+        d2h = qqq[:, None] + cppq - 2.0 * cross
+    d2h = jnp.maximum(d2h, 0.0)
+    dhat = jnp.sqrt(d2h)
+    mag = jnp.maximum(qqq[:, None] + cppq, 0.0)
+    slack = SLACK_ABS + SLACK_REL * dhat + SLACK_MAG * jnp.sqrt(mag)
+    lbr = jnp.maximum(dhat - (qeps[:, None] + ceps) - slack, 0.0)
+    return jnp.where(valid != 0, lbr * lbr, jnp.inf)
+
+
 def lpgf_force(points, radius, g_mean, c: float = 1.1):
     """LPGF resultant force per point (paper Fig 13), exact all-pairs.
 

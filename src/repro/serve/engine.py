@@ -223,7 +223,8 @@ class RetrievalServer:
     def __init__(self, platform, embedder: EmbeddingServer, *,
                  batch_size: int = 64, pad_token: int = 0,
                  project=None, device_loop: bool = True,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 precision: Optional[str] = None):
         self.platform = platform
         self.embedder = embedder
         self.batch_size = batch_size
@@ -231,8 +232,12 @@ class RetrievalServer:
         self.project = project
         self.device_loop = device_loop
         self.shards = shards
+        # mixed-precision tile scan (None = platform default): results
+        # are row-identical to fp32, only the scan cost changes
+        self.precision = precision
         self.session = platform.session(device_loop=device_loop,
-                                        shards=shards)
+                                        shards=shards,
+                                        precision=precision)
         self._pending: List[tuple] = []   # (request, future) FIFO
 
     def _embed_tokens(self, token_lists: Sequence[np.ndarray]) -> np.ndarray:

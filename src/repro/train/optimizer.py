@@ -16,9 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
+from repro.utils.quant import dequantize_i8, quantize_i8  # noqa: F401
 
 # ---------------------------------------------------------------------------
-# Per-channel (last-dim) int8 quantization.
+# Per-channel (last-dim) int8 quantization lives in repro/utils/quant.py
+# (shared with the engine's mixed-precision tile planes); re-exported here
+# for backward compatibility.
 #
 # Codes keep the PARAMETER'S OWN SHAPE, scales are shape[:-1] + (1,):
 # everything is elementwise, so the parameter's (FSDP x TP) sharding
@@ -29,19 +32,6 @@ from repro.configs.base import TrainConfig
 # ---------------------------------------------------------------------------
 def _quantizable(shape) -> bool:
     return len(shape) >= 2
-
-
-def quantize_i8(x):
-    """x -> (int8 codes same shape, fp32 per-channel scales)."""
-    x = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return codes, scale.astype(jnp.float32)
-
-
-def dequantize_i8(codes, scale, shape=None):
-    return codes.astype(jnp.float32) * scale
 
 
 # ---------------------------------------------------------------------------

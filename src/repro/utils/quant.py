@@ -1,0 +1,148 @@
+"""Shared quantization helpers.
+
+Two consumers, one module (hoisted from ``train/optimizer.py`` so the
+encodings can never drift apart):
+
+  * ``quantize_i8``/``dequantize_i8`` — per-channel (last-dim) symmetric
+    int8 codes for optimizer state (blockwise 8-bit Adam). Codes keep the
+    tensor's own shape, scales are ``shape[:-1] + (1,)``, so parameter
+    shardings propagate unchanged.
+  * ``plan_tiles`` — per-TILE symmetric planes for the engine's
+    mixed-precision tile scan: one scale per (T, cap, d) bucket tile,
+    plus the precomputed exact squared norms of the dequantized rows and
+    the analytic per-row L2 quantization error bound. The bound is what
+    makes the reduced-precision scan a valid *lower* bound on the true
+    distance (see ``kernels/ref.quant_lb2``): for any row x and its
+    dequantized value x̂,  ||x - x̂|| <= eps, hence by the triangle
+    inequality  ||q - x|| >= ||q̂ - x̂|| - eps_q - eps_x.
+
+Error bounds (worst case, not expected case — exactness depends on them):
+
+  int8: scale s = max|x| / 127 (floored), element error <= s/2 after
+  round-to-nearest (the floor never causes clipping: if the floor binds,
+  |x|/s <= 127 already), so row L2 error <= (s/2) * sqrt(d).
+
+  bf16: 8 effective mantissa bits, relative element error <= 2^-8, so
+  row L2 error <= 2^-8 * ||x|| — per tile we keep the max row norm.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+PRECISIONS = ("fp32", "bf16", "int8")
+
+# scale floors: a tile/channel of exact zeros still needs a positive
+# scale (codes 0, dequantized 0 — round trip exact, no div-by-zero)
+SCALE_FLOOR = 1e-12       # optimizer per-channel floor (historic value)
+TILE_SCALE_FLOOR = 1e-8   # tile-plane + query floor
+BF16_EPS = 2.0 ** -8      # bf16 relative rounding bound per element
+
+# conservative fp slack added on top of the quantization bound when the
+# widened lower bound is formed (shared by kernels/ref.py and the Pallas
+# variant so the two dispatch targets agree): an absolute + distance-
+# relative term (the V.R planner's idiom) plus a magnitude term covering
+# the quadratic expansion's cancellation error (~eps_f32 * d * (|q|^2 +
+# |p|^2), which sqrt-amplifies when the true distance is small)
+SLACK_ABS = 1e-4
+SLACK_REL = 1e-4
+SLACK_MAG = 2e-3
+
+
+# ---------------------------------------------------------------------------
+# Per-channel (last-dim) int8 quantization — optimizer state encoding
+# ---------------------------------------------------------------------------
+def quantize_i8(x):
+    """x -> (int8 codes same shape, fp32 per-channel scales)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, SCALE_FLOOR)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_i8(codes, scale, shape=None):
+    return codes.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Per-tile planes — mixed-precision tile scan
+# ---------------------------------------------------------------------------
+class TilePlanes(NamedTuple):
+    """One layout's reduced-precision scan operands (host numpy or
+    device jnp; the engine uploads them once per build/delta epoch)."""
+    data: object    # (T, cap, d) int8 codes or bf16 values
+    scale: object   # (T,)  fp32 per-tile symmetric scale (ones for bf16)
+    ppq: object     # (T, cap) fp32 EXACT squared norms of dequantized rows
+    eps: object     # (T,)  fp32 per-row L2 quantization error bound
+
+
+def quantize_tiles_i8(tiles: np.ndarray, valid: np.ndarray) -> TilePlanes:
+    """(T, cap, d) fp32 tiles -> int8 planes, one symmetric scale per
+    tile over its valid rows (invalid slots are zeroed first so bucket
+    padding never inflates a scale)."""
+    t = np.asarray(tiles, np.float32)
+    v = np.asarray(valid, bool)
+    tz = np.where(v[:, :, None], t, 0.0)
+    amax = np.abs(tz).max(axis=(1, 2)) if t.size else \
+        np.zeros(t.shape[0], np.float32)
+    scale = np.maximum(amax / 127.0, TILE_SCALE_FLOOR).astype(np.float32)
+    codes = np.clip(np.rint(tz / scale[:, None, None]), -127, 127
+                    ).astype(np.int8)
+    deq = codes.astype(np.float32) * scale[:, None, None]
+    ppq = (deq ** 2).sum(-1).astype(np.float32)
+    d = t.shape[-1]
+    eps = (0.5 * scale * np.sqrt(float(d))).astype(np.float32)
+    return TilePlanes(codes, scale, ppq, eps)
+
+
+def quantize_tiles_bf16(tiles: np.ndarray, valid: np.ndarray) -> TilePlanes:
+    """(T, cap, d) fp32 tiles -> bf16 planes. ``scale`` is kept (all
+    ones) so the scan operands have one uniform shape per precision."""
+    t = np.asarray(tiles, np.float32)
+    v = np.asarray(valid, bool)
+    tz = np.where(v[:, :, None], t, 0.0)
+    data = tz.astype(jnp.bfloat16)
+    deq = data.astype(np.float32)
+    ppq = (deq ** 2).sum(-1).astype(np.float32)
+    rown = np.sqrt((tz ** 2).sum(-1))
+    eps = (BF16_EPS * rown.max(axis=1)).astype(np.float32) if t.size \
+        else np.zeros(t.shape[0], np.float32)
+    return TilePlanes(data, np.ones(t.shape[0], np.float32), ppq, eps)
+
+
+def plan_tiles(tiles: np.ndarray, valid: np.ndarray,
+               precision: str) -> TilePlanes:
+    """The one entry point the engine uses (prepare()/sync_delta())."""
+    if precision == "int8":
+        return quantize_tiles_i8(tiles, valid)
+    if precision == "bf16":
+        return quantize_tiles_bf16(tiles, valid)
+    raise ValueError(f"no tile planes for precision={precision!r}")
+
+
+def quantize_query(qs, precision: str):
+    """Per-query scan operands, shared by the jnp reference and the
+    Pallas dispatch so both compute the identical widened bound.
+
+    Returns (qcast, qscale (G,), qqq (G,), qeps (G,)): the reduced-
+    precision query, its scale (ones for bf16), the exact squared norm
+    of the DEQUANTIZED query, and the query-side L2 error bound."""
+    qf = jnp.asarray(qs, jnp.float32)
+    d = qf.shape[-1]
+    if precision == "int8":
+        sq = jnp.maximum(jnp.max(jnp.abs(qf), axis=-1) / 127.0,
+                         TILE_SCALE_FLOOR)
+        qc = jnp.clip(jnp.round(qf / sq[:, None]), -127.0, 127.0)
+        qqq = (sq * sq) * jnp.sum(qc * qc, axis=-1)
+        qeps = 0.5 * sq * np.sqrt(float(d))
+        return qc.astype(jnp.int8), sq, qqq, qeps
+    if precision == "bf16":
+        qb = qf.astype(jnp.bfloat16)
+        qb32 = qb.astype(jnp.float32)
+        qqq = jnp.sum(qb32 * qb32, axis=-1)
+        qeps = BF16_EPS * jnp.sqrt(jnp.sum(qf * qf, axis=-1))
+        return qb, jnp.ones(qf.shape[:-1], jnp.float32), qqq, qeps
+    raise ValueError(f"no query quantization for precision={precision!r}")

@@ -47,6 +47,22 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _mod.strategies
 
 
+# ---------------------------------------------------------------------------
+# XLA executable accumulation: one pytest process compiles thousands of
+# distinct shapes across the suite (every platform build clusters nodes of
+# data-dependent sizes), and the CPU backend segfaults in backend_compile
+# once enough live executables pile up (observed deterministically around
+# the ~190th test; any subset prefix passes). Dropping the jit caches at
+# module boundaries releases the executables and keeps the whole suite in
+# one process; the recompiles cost seconds per module.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches_per_module():
+    yield
+    import jax
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def blobs():
     """Well-separated gaussian blobs: (x, labels, centers)."""

@@ -416,3 +416,192 @@ def test_ops_dispatch_cpu_matches_ref():
     d1, i1 = ops.topk_l2(q, p, 3)
     d2, i2 = ref.topk_l2(q, p, 3)
     np.testing.assert_allclose(d1, d2, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision leaf scan (ops.topk_l2_masked_mp): reduced-precision
+# bound + fp32 rescue must return ROW-IDENTICAL indices to the fp32
+# reference over the same gathered candidates
+# ---------------------------------------------------------------------------
+def _mp_vs_ref(tiles, valid_rows, q, sel, valid, k, precision,
+               interpret=False, kth0=None):
+    """Run the mp op and the fp32 oracle over the identical candidate
+    gather; returns (mp_d, mp_idx, rescued, ref_d, ref_idx) numpy."""
+    from repro.kernels import ops
+    from repro.utils.quant import plan_tiles
+    planes = plan_tiles(tiles, valid_rows, precision)
+    pj = tuple(jnp.asarray(np.asarray(x)) for x in planes)
+    dd, ii, resc = ops.topk_l2_masked_mp(
+        jnp.asarray(q), jnp.asarray(sel), jnp.asarray(valid),
+        jnp.asarray(tiles), *pj, k, kth0=kth0, precision=precision,
+        interpret=interpret)
+    gath = tiles[np.asarray(sel)].reshape(len(q), -1, tiles.shape[-1])
+    wd, wi = ref.topk_l2_masked(jnp.asarray(q), jnp.asarray(gath),
+                                jnp.asarray(valid), k)
+    return (np.asarray(dd), np.asarray(ii), np.asarray(resc),
+            np.asarray(wd), np.asarray(wi))
+
+
+def _assert_mp_identical(got, want_d, want_i):
+    dd, ii = got
+    assert np.array_equal(ii, want_i)
+    fin = np.isfinite(want_d)
+    assert (np.isfinite(dd) == fin).all()
+    np.testing.assert_allclose(dd[fin], want_d[fin], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_mp_all_masked_tiles(precision):
+    """Fully- and partially-masked candidate sets: masked candidates are
+    never rescued, fully-masked queries come back (inf, -1)."""
+    g, t, cap, d, k = 3, 6, 16, 8, 5
+    tiles = RNG.normal(size=(t, cap, d)).astype(np.float32) * 3
+    vr = np.ones((t, cap), bool)
+    sel = np.tile(np.arange(4, dtype=np.int32), (g, 1))
+    valid = np.ones((g, 4 * cap), bool)
+    valid[0] = False                   # whole candidate set masked
+    valid[2, cap:] = False             # only tile 0 survives
+    dd, ii, resc, wd, wi = _mp_vs_ref(
+        tiles, vr,
+        RNG.normal(size=(g, d)).astype(np.float32), sel, valid, k,
+        precision)
+    _assert_mp_identical((dd, ii), wd, wi)
+    assert (ii[0] == -1).all() and resc[0] == 0
+    assert all(j < cap for j in ii[2][ii[2] >= 0])
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_mp_duplicate_distances_straddle_rescue_boundary(precision):
+    """Exactly tied distances straddling the kth boundary (integer-
+    valued points, so fp32 distances are exact): the refutation rule is
+    STRICT, so tie candidates are never refuted and the stable top-k
+    resolves them in candidate-index order — identical to the fp32
+    reference."""
+    g, t, cap, d, k = 2, 4, 8, 4, 5
+    # 8 candidates per tile; tiles 0/1 identical -> every distance is
+    # duplicated across the tile boundary, and with k=5 the tie group at
+    # the kth distance straddles the cut
+    base = RNG.integers(-8, 9, size=(cap, d)).astype(np.float32)
+    tiles = np.stack([base, base,
+                      RNG.integers(-8, 9, size=(cap, d)).astype(np.float32),
+                      np.zeros((cap, d), np.float32)])
+    vr = np.ones((t, cap), bool)
+    q = RNG.integers(-8, 9, size=(g, d)).astype(np.float32)
+    sel = np.tile(np.arange(t, dtype=np.int32), (g, 1))
+    valid = np.ones((g, t * cap), bool)
+    dd, ii, resc, wd, wi = _mp_vs_ref(tiles, vr, q, sel, valid, k,
+                                      precision)
+    _assert_mp_identical((dd, ii), wd, wi)
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_mp_k_exceeds_survivors_after_refutation(precision):
+    """k larger than the valid candidate count, with a tight carry kth
+    (kth0) refuting most of the frontier: exactly the survivors return,
+    the rest of the k slots are (inf, -1) padding."""
+    g, t, cap, d, k = 2, 3, 8, 6, 20
+    tiles = RNG.normal(size=(t, cap, d)).astype(np.float32)
+    vr = np.ones((t, cap), bool)
+    q = RNG.normal(size=(g, d)).astype(np.float32)
+    sel = np.tile(np.arange(2, dtype=np.int32), (g, 1))
+    valid = np.zeros((g, 2 * cap), bool)
+    valid[0, :7] = True
+    valid[1, :1] = True               # single survivor
+    dd, ii, resc, wd, wi = _mp_vs_ref(tiles, vr, q, sel, valid, k,
+                                      precision)
+    _assert_mp_identical((dd, ii), wd, wi)
+    assert (ii[0] >= 0).sum() == 7 and (ii[1] >= 0).sum() == 1
+    # a tight kth0 carry must refute without dropping true top-k rows:
+    # use the true kth of query 0 as the carry (ties never refutable)
+    kth0 = jnp.asarray(np.where(np.isfinite(wd[:, -1]),
+                                wd[:, -1], np.inf), jnp.float32)
+    dd2, ii2, resc2, _, _ = _mp_vs_ref(tiles, vr, q, sel, valid, k,
+                                       precision, kth0=kth0)
+    _assert_mp_identical((dd2, ii2), wd, wi)
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_mp_degenerate_constant_tiles(precision):
+    """Degenerate tiles: all-zero rows (the int8 scale floors instead of
+    dividing by zero) and constant-row tiles (every distance identical)
+    must round-trip exactly."""
+    g, t, cap, d, k = 2, 3, 8, 5, 6
+    tiles = np.zeros((t, cap, d), np.float32)
+    tiles[1] = 2.5                     # constant rows -> all ties
+    tiles[2] = RNG.normal(size=(cap, d)).astype(np.float32)
+    vr = np.ones((t, cap), bool)
+    q = RNG.normal(size=(g, d)).astype(np.float32)
+    sel = np.tile(np.arange(t, dtype=np.int32), (g, 1))
+    valid = np.ones((g, t * cap), bool)
+    dd, ii, resc, wd, wi = _mp_vs_ref(tiles, vr, q, sel, valid, k,
+                                      precision)
+    _assert_mp_identical((dd, ii), wd, wi)
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_mp_partially_filled_delta_tile(precision):
+    """A partially-filled (delta-style) last tile: pad slots are zeroed
+    before quantization (they must not inflate the tile scale) and are
+    masked out of the scan."""
+    g, t, cap, d, k = 2, 3, 8, 6, 4
+    tiles = RNG.normal(size=(t, cap, d)).astype(np.float32)
+    vr = np.ones((t, cap), bool)
+    vr[2, 3:] = False                  # delta tile with 3 live slots
+    tiles[2, 3:] = 40.0                # junk in the pad slots: a scale
+    #                                    computed over them would nuke
+    #                                    the live rows' resolution
+    tiles_clean = tiles.copy()
+    tiles_clean[2, 3:] = 0.0           # what the engine uploads as fp32
+    q = RNG.normal(size=(g, d)).astype(np.float32)
+    sel = np.tile(np.arange(t, dtype=np.int32), (g, 1))
+    valid = np.ones((g, t * cap), bool)
+    valid[:, 2 * cap + 3:] = False
+    from repro.kernels import ops
+    from repro.utils.quant import plan_tiles
+    planes = plan_tiles(tiles, vr, precision)
+    if precision == "int8":
+        # the junk pad slots did not leak into the tile scale
+        assert planes.scale[2] <= np.abs(tiles[2, :3]).max() / 127 + 1e-6
+    pj = tuple(jnp.asarray(np.asarray(x)) for x in planes)
+    dd, ii, resc = ops.topk_l2_masked_mp(
+        jnp.asarray(q), jnp.asarray(sel), jnp.asarray(valid),
+        jnp.asarray(tiles_clean), *pj, k, precision=precision)
+    wd, wi = ref.topk_l2_masked(
+        jnp.asarray(q),
+        jnp.asarray(tiles_clean[sel].reshape(g, -1, d)),
+        jnp.asarray(valid), k)
+    _assert_mp_identical((np.asarray(dd), np.asarray(ii)),
+                         np.asarray(wd), np.asarray(wi))
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+@pytest.mark.parametrize("interpret", [False, True])
+def test_mp_lower_bound_validity(precision, interpret):
+    """The conservative-bound contract itself: for every valid candidate
+    the widened bound is <= the true fp32 squared distance (both the
+    pure-jnp reference and the Pallas interpret dispatch)."""
+    from repro.kernels import ops
+    from repro.utils.quant import plan_tiles
+    g, t, cap, d = 6, 8, 16, 12
+    tiles = RNG.normal(size=(t, cap, d)).astype(np.float32) * 5
+    vr = np.ones((t, cap), bool)
+    vr[-1, 5:] = False
+    q = RNG.normal(size=(g, d)).astype(np.float32) * 5
+    sel = np.tile(np.arange(t, dtype=np.int32), (g, 1))
+    c = t * cap
+    valid = np.ones((g, c), bool)
+    valid[:, -cap + 5:] = False
+    planes = plan_tiles(tiles, vr, precision)
+    codes = jnp.asarray(np.asarray(planes.data)[sel].reshape(g, c, d))
+    cscale = jnp.asarray(np.repeat(planes.scale[sel], cap, axis=1))
+    cppq = jnp.asarray(planes.ppq[sel].reshape(g, c))
+    ceps = jnp.asarray(np.repeat(planes.eps[sel], cap, axis=1))
+    lb2 = np.asarray(ops.quant_lb2(
+        jnp.asarray(q), codes, cscale, cppq, ceps, jnp.asarray(valid),
+        precision=precision, interpret=interpret))
+    gath = tiles[sel].reshape(g, c, d)
+    d2 = ((gath - q[:, None, :]) ** 2).sum(-1)
+    assert (lb2[valid] <= d2[valid] + 1e-5).all()
+    assert np.isinf(lb2[~valid]).all()
+    # and the bound is not vacuous: most candidates carry a positive lb
+    assert (lb2[valid] > 0).mean() > 0.5

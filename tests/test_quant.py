@@ -1,0 +1,125 @@
+"""Shared quantization module (repro/utils/quant.py): scale floors,
+round-trip error bounds, and the optimizer re-export. The engine-level
+exactness these bounds underwrite is tested in test_precision.py; the
+kernel-level contract in test_kernels.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils import quant
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# per-channel int8 (optimizer-state encoding)
+# ---------------------------------------------------------------------------
+def test_quantize_i8_roundtrip_bound():
+    x = jnp.asarray(RNG.normal(size=(16, 64)).astype(np.float32) * 3)
+    codes, scale = quant.quantize_i8(x)
+    deq = quant.dequantize_i8(codes, scale)
+    # elementwise round-to-nearest error <= half a step
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(
+        jnp.max(scale)) / 2 + 1e-7
+    assert (np.abs(np.asarray(deq - x))
+            <= np.asarray(scale) / 2 + 1e-7).all()
+
+
+def test_quantize_i8_zero_channel_floor():
+    """An all-zero channel gets the floor scale, codes 0, and an EXACT
+    round trip (never a div-by-zero)."""
+    x = jnp.asarray(np.zeros((4, 32), np.float32))
+    codes, scale = quant.quantize_i8(x)
+    assert (np.asarray(scale) == quant.SCALE_FLOOR).all()
+    assert (np.asarray(codes) == 0).all()
+    assert (np.asarray(quant.dequantize_i8(codes, scale)) == 0).all()
+
+
+def test_quantize_i8_floor_never_clips():
+    """When the floor binds, |x|/scale <= 127 already — codes are never
+    saturated by the floor."""
+    x = jnp.asarray(RNG.normal(size=(3, 16)).astype(np.float32)
+                    * quant.SCALE_FLOOR * 10)
+    codes, scale = quant.quantize_i8(x)
+    deq = quant.dequantize_i8(codes, scale)
+    assert (np.abs(np.asarray(deq - x))
+            <= np.asarray(scale) / 2 + 1e-20).all()
+
+
+def test_optimizer_reexport():
+    """train/optimizer.py re-exports the hoisted helpers (backward
+    compat for existing imports)."""
+    from repro.train import optimizer
+    assert optimizer.quantize_i8 is quant.quantize_i8
+    assert optimizer.dequantize_i8 is quant.dequantize_i8
+
+
+# ---------------------------------------------------------------------------
+# per-tile planes (mixed-precision tile scan)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_plan_tiles_roundtrip_within_eps(precision):
+    """Per-row L2 reconstruction error <= the advertised per-tile eps —
+    the inequality the scan's lower bound rests on."""
+    t, cap, d = 6, 16, 12
+    tiles = RNG.normal(size=(t, cap, d)).astype(np.float32) * 4
+    valid = np.ones((t, cap), bool)
+    valid[-1, 5:] = False
+    planes = quant.plan_tiles(tiles, valid, precision)
+    scale = np.asarray(planes.scale)
+    deq = np.asarray(planes.data, np.float32) * scale[:, None, None]
+    tz = np.where(valid[:, :, None], tiles, 0.0)
+    rows_err = np.sqrt(((deq - tz) ** 2).sum(-1))
+    assert (rows_err <= np.asarray(planes.eps)[:, None] + 1e-6).all()
+    # ppq is the EXACT squared norm of the dequantized rows
+    np.testing.assert_allclose(np.asarray(planes.ppq),
+                               (deq ** 2).sum(-1), rtol=1e-5, atol=1e-5)
+
+
+def test_plan_tiles_zero_tile_floor():
+    """All-zero (or all-invalid) tiles floor the scale: codes 0, eps
+    tiny but positive-scale — no NaN/inf anywhere downstream."""
+    t, cap, d = 3, 8, 6
+    tiles = np.zeros((t, cap, d), np.float32)
+    tiles[1] = RNG.normal(size=(cap, d)).astype(np.float32)
+    valid = np.ones((t, cap), bool)
+    valid[2] = False                  # all-invalid tile
+    planes = quant.plan_tiles(tiles, valid, "int8")
+    s = np.asarray(planes.scale)
+    assert s[0] == quant.TILE_SCALE_FLOOR
+    assert s[2] == quant.TILE_SCALE_FLOOR
+    assert (np.asarray(planes.data)[[0, 2]] == 0).all()
+    assert np.isfinite(np.asarray(planes.ppq)).all()
+    assert np.isfinite(np.asarray(planes.eps)).all()
+
+
+def test_plan_tiles_invalid_rows_do_not_inflate_scale():
+    """Junk in invalid slots (delta pad rows) must not widen the tile
+    scale and destroy the live rows' resolution."""
+    t, cap, d = 1, 8, 4
+    tiles = RNG.normal(size=(t, cap, d)).astype(np.float32)
+    valid = np.ones((t, cap), bool)
+    valid[0, 4:] = False
+    tiles[0, 4:] = 1e6
+    planes = quant.plan_tiles(tiles, valid, "int8")
+    assert planes.scale[0] <= np.abs(tiles[0, :4]).max() / 127 + 1e-9
+
+
+@pytest.mark.parametrize("precision", ["int8", "bf16"])
+def test_quantize_query_bound(precision):
+    """Query-side: qqq is the exact squared norm of the dequantized
+    query, qeps bounds the L2 reconstruction error."""
+    qs = RNG.normal(size=(9, 24)).astype(np.float32) * 3
+    qc, qscale, qqq, qeps = quant.quantize_query(jnp.asarray(qs),
+                                                 precision)
+    deq = np.asarray(qc, np.float32) * np.asarray(qscale)[:, None]
+    np.testing.assert_allclose(np.asarray(qqq), (deq ** 2).sum(-1),
+                               rtol=1e-5, atol=1e-5)
+    err = np.sqrt(((deq - qs) ** 2).sum(-1))
+    assert (err <= np.asarray(qeps) + 1e-6).all()
+
+
+def test_plan_tiles_rejects_fp32():
+    with pytest.raises(ValueError):
+        quant.plan_tiles(np.zeros((1, 2, 3), np.float32),
+                         np.ones((1, 2), bool), "fp32")
