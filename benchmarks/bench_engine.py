@@ -58,13 +58,12 @@ repeat=1 — keeps this module executed in CI.
 """
 import json
 import os
-import subprocess
 import sys
 
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import Csv, timeit, us
+from benchmarks.common import Csv, git_stamp, timeit, us
 from repro.core import query as Q
 from repro.core.lake import MMOTable
 from repro.core.platform import MQRLD
@@ -74,18 +73,6 @@ BATCH = 64
 SHARD_COUNTS = (1, 2, 8)
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_engine.json")
-
-
-def _git_commit():
-    """Tag bench rows with the producing commit so BENCH_engine.json
-    diffs across PRs identify their build unambiguously."""
-    try:
-        out = subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
-            text=True, timeout=10, cwd=os.path.dirname(__file__))
-        return out.stdout.strip() or "unknown"
-    except Exception:
-        return "unknown"
 
 
 def _platform(n=N_ROWS, d=32, seed=0):
@@ -203,11 +190,12 @@ def run(csv: Csv):
     qn = common.smoke_n(BATCH, 16)
     p = _platform(n=n)
     queries = _hybrid_batch(p, qn=qn)
+    head, dirty = git_stamp()
     bench = {
         "smoke": bool(common.SMOKE), "n_rows": n, "batch": qn,
         "cpu_count": os.cpu_count(),
         "device_count": jax.device_count(),
-        "git_commit": _git_commit(),
+        "git_commit": head, "git_dirty": dirty,
         "precision": "fp32",   # precision of the main sections; the
         #                        mixed-precision sweep is under "scale"
         "qps": {}, "loop_qps": {}, "rounds": {}, "sharded": {},

@@ -1,0 +1,419 @@
+"""Serving tier — tail latency under open-arrival load (ISSUE 7).
+
+The paper's headline claim is query efficiency for rich hybrid queries;
+serving-side related work (TAIJI-style lake analytics serving,
+interactive multimodal QA) treats p50/p99 latency versus offered QPS as
+the first-class metric. This harness closes that gap for the
+``RetrievalServer`` micro-batching loop:
+
+  * capacity — sustained QPS of an overloaded open-arrival replay
+    (queue never empty; real window + admission + chunking overhead) —
+    the denominator every offered level is a fraction of. The
+    full-batch closed-loop rate is also reported (``full_batch_qps``)
+    as the per-request service floor: it is NOT reachable under open
+    arrivals, where the batching window carves smaller per-signature
+    chunks and per-chunk overhead is paid more often;
+  * offered-load sweep — open-arrival Poisson at >= 3 offered-QPS
+    levels (0.5x / 1.0x / 2.0x capacity), mixed request archetypes
+    (two vector attrs x several k values x optional NR predicate),
+    half the requests carrying deadlines so overload demonstrates
+    deadline shedding instead of unbounded queueing; per level:
+    p50/p99 end-to-end latency, sustained QPS, served/shed counts
+    (shed work is explicitly reported — never silently dropped), and
+    an oracle exactness sample;
+  * diurnal trace — a nonhomogeneous Poisson day (thinning against
+    lam(t) = cap * (0.4 + 1.2 sin^2(pi t / T)): 0.4x trough, 1.6x
+    peak) over the same mixture;
+  * coalesce vs FIFO — the SAME arrival sequence (no deadlines, both
+    modes serve everything) replayed through signature-coalesced and
+    legacy fixed-batch FIFO chunking; acceptance: coalesced sustained
+    throughput >= 1.1x FIFO with results array-identical per request.
+    The mechanism being measured: FIFO carves chunks by arrival
+    accident, so each chunk is a fresh (group-size, kmax, masked-count,
+    attr-mix) combination the engine must re-trace; coalescing bounds
+    the compiled universe to |signatures| x log2(batch_size).
+
+Timing runs on a fast-forward clock (``now = offset + perf_counter``):
+compute advances it naturally, idle gaps between arrivals are skipped
+by bumping the offset — so latencies are honest (queueing + service,
+measured from true arrival timestamps) while the harness never sleeps.
+
+The embedder is a deterministic stub (prompt -> stored vector + eps):
+the harness measures the serving loop and engine, not the embedding
+backbone, and a stub keeps the oracle check meaningful.
+
+Machine-readable output: every run (smoke included) rewrites
+``BENCH_serve.json`` at the repo root — levels (p50/p99 vs offered
+QPS), diurnal, coalesce-vs-FIFO ratio, QBS per-archetype service
+quantiles, git commit + dirty stamp of the tree that actually ran.
+
+``--smoke`` (also via ``benchmarks.run --smoke``): toy sizes,
+still exercising every section.
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import Csv, git_stamp
+from repro.core import query as Q
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+N_ROWS = 20_000
+BATCH = 32
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve.json")
+
+
+# ---------------------------------------------------------------------------
+# fixtures: platform, stub embedder, fast-forward clock, request mixture
+# ---------------------------------------------------------------------------
+def _platform(n, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(12, d)).astype(np.float32) * 6
+    cat = rng.integers(0, 12, n)
+    img = (centers[cat] + rng.normal(size=(n, d))).astype(np.float32)
+    # same dim as img: one stub-embedder output space serves both attrs
+    aud = rng.normal(size=(n, d)).astype(np.float32) * 3
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    t = (MMOTable("serve_bench").add_vector("img", img)
+         .add_vector("aud", aud).add_numeric("price", price))
+    p = MQRLD(t, seed=seed)
+    p.prepare(min_leaf=64, max_leaf=1024)
+    return p
+
+
+class _TableEmbedder:
+    """Deterministic stub: token[0] selects a stored row, token[1] the
+    target space; embedding = that row's vector + eps, resolved PER ROW
+    (FIFO chunks mix attrs). Batch-composition independent by
+    construction, so served results are oracle-checkable and identical
+    across batchings."""
+
+    def __init__(self, table, attr_of_tag):
+        self.table = table
+        self.attr_of_tag = attr_of_tag  # {tag: attr} via token[1]
+
+    def embed(self, tokens):
+        toks = np.asarray(tokens)
+        rows = toks[:, 0] % self.table.n_rows
+        out = np.empty((len(toks), self.table.vector["img"].shape[1]),
+                       np.float32)
+        for i, (r, tag) in enumerate(zip(rows, toks[:, 1])):
+            out[i] = self.table.vector[self.attr_of_tag[int(tag)]][r]
+        return out + 0.01
+
+
+class _Clock:
+    """Monotonic fast-forward clock: real compute advances it at 1:1,
+    ``advance_to`` skips idle waiting-for-arrival gaps."""
+
+    def __init__(self):
+        self._offset = 0.0
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return self._offset + (time.perf_counter() - self._t0)
+
+    def advance_to(self, t: float):
+        dt = t - self.now()
+        if dt > 0:
+            self._offset += dt
+
+
+_ARCHETYPES = (
+    # (attr, dim_tag, k, predicate) — several plan signatures so FIFO
+    # chunks are mixtures and coalescing has real work to do
+    ("img", 0, 10, None),
+    ("img", 0, 25, None),
+    ("img", 0, 10, Q.NR("price", 20, 80)),
+    ("aud", 1, 5, None),
+    ("aud", 1, 5, Q.NR("price", 40, 90)),
+)
+
+
+def _requests(n_req, n_rows, seed, deadline_ms=None, deadline_frac=0.5):
+    """Mixed-shape request stream; ``deadline_frac`` of requests carry
+    ``deadline_ms`` when one is given."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_req):
+        attr, tag, k, pred = _ARCHETYPES[int(rng.integers(
+            0, len(_ARCHETYPES)))]
+        dl = deadline_ms if (deadline_ms is not None
+                             and rng.random() < deadline_frac) else None
+        out.append(RetrievalRequest(
+            tokens=np.asarray([int(rng.integers(0, n_rows)), tag],
+                              np.int32),
+            attr=attr, k=k, predicate=pred, deadline_ms=dl))
+    return out
+
+
+def _server(p, clk, coalesce=True, delay_ms=0.0):
+    return RetrievalServer(
+        p, _TableEmbedder(p.table, {0: "img", 1: "aud"}),
+        batch_size=BATCH, coalesce=coalesce, max_delay_ms=delay_ms,
+        clock=clk.now)
+
+
+# ---------------------------------------------------------------------------
+# drive loops
+# ---------------------------------------------------------------------------
+def _replay(server, reqs, arrivals, clk):
+    """Open-arrival replay: submit every request whose arrival time has
+    passed (stamped with its TRUE arrival so latency includes
+    queueing), ``poll()`` the server (it runs a micro-batch when its
+    batching window says one is due), fast-forward to the next event —
+    arrival or window expiry — when nothing ran. Returns the futures
+    and the span (first arrival -> last resolution) in clock seconds."""
+    futs = []
+    i, n = 0, len(reqs)
+    while i < n or server.queue_depth:
+        now = clk.now()
+        while i < n and arrivals[i] <= now:
+            futs.append(server.submit(reqs[i], now=arrivals[i]))
+            i += 1
+        if server.poll() == 0:
+            nxt = [t for t in ((arrivals[i] if i < n else None),
+                               server.next_due()) if t is not None]
+            if nxt:
+                clk.advance_to(min(nxt))
+    return futs, clk.now() - arrivals[0]
+
+
+def _poisson_arrivals(n_req, qps, t0, seed):
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, n_req)
+    return t0 + np.cumsum(gaps)
+
+
+def _diurnal_arrivals(n_req, cap, t0, seed):
+    """Nonhomogeneous Poisson by thinning: lam(t) = cap * (0.4 + 1.2
+    sin^2(pi t / T)) — mean rate ~= cap, 1.6x peak, 0.4x trough —
+    with T sized so the trace spans one full 'day'."""
+    rng = np.random.default_rng(seed)
+    T = n_req / cap                     # one period over the trace
+    lam_max = 1.6 * cap
+    out, t = [], 0.0
+    while len(out) < n_req:
+        t += rng.exponential(1.0 / lam_max)
+        lam = cap * (0.4 + 1.2 * np.sin(np.pi * t / T) ** 2)
+        if rng.random() < lam / lam_max:
+            out.append(t0 + t)
+    return np.asarray(out)
+
+
+def _quantiles_ms(lat_s):
+    a = np.asarray(lat_s, np.float64) * 1e3
+    return (float(np.quantile(a, 0.5)), float(np.quantile(a, 0.99)))
+
+
+def _oracle_sample(p, results, rng, k=24):
+    served = [r for r in results if not r.shed]
+    if not served:
+        return True, 0
+    pick = rng.choice(len(served), min(k, len(served)), replace=False)
+    ok = all(set(np.asarray(served[i].rows).tolist())
+             == set(np.asarray(p.oracle(served[i].query)).tolist())
+             for i in pick)
+    return bool(ok), len(pick)
+
+
+# ---------------------------------------------------------------------------
+# bench
+# ---------------------------------------------------------------------------
+def run(csv: Csv):
+    import jax
+    n = common.smoke_n(N_ROWS, 2_000)
+    n_req = common.smoke_n(400, 48)
+    p = _platform(n)
+    clk = _Clock()
+    head, dirty = git_stamp()
+    bench = {
+        "smoke": bool(common.SMOKE), "n_rows": n,
+        "batch_size": BATCH, "n_req_per_level": n_req,
+        "cpu_count": os.cpu_count(),
+        "device_count": jax.device_count(),
+        "git_commit": head, "git_dirty": dirty,
+        "levels": [], "diurnal": {}, "coalesce_vs_fifo": {},
+        "qbs_latency": {},
+    }
+
+    # ---- warm the coalesced compiled-shape universe --------------------
+    # one flush per (signature, pow2 size): the engine jit cache is
+    # shared across servers (same platform/engine config), so every
+    # later coalescing run — including the low-load levels whose chunks
+    # are small — measures steady-state latency, not first-use compiles
+    # two passes per shape, like bench_engine: the first records QBS
+    # convergence widths, the second compiles the QBS-seeded variants
+    # the measured runs will actually execute
+    srv_w = _server(p, clk)
+    for pass_ in range(2):
+        rng_w = np.random.default_rng(55 + pass_)
+        for sz in (1, 2, 4, 8, 16, BATCH):
+            for attr, tag, k, pred in _ARCHETYPES:
+                for _ in range(sz):
+                    srv_w.submit(RetrievalRequest(
+                        tokens=np.asarray(
+                            [int(rng_w.integers(0, n)), tag], np.int32),
+                        attr=attr, k=k, predicate=pred))
+                srv_w.flush()
+
+    # ---- capacity -------------------------------------------------------
+    # full-batch reference: every request queued up front, replayed
+    # through the drive loop (chunks run at batch_size — the per-request
+    # service floor, not reachable under open arrivals where the window
+    # carves smaller per-signature chunks)
+    srv = _server(p, clk)
+    srv.serve(_requests(n_req, n, seed=100))           # warm: compile +
+    srv.serve(_requests(n_req, n, seed=101))           # QBS-seeded shapes
+    arr0 = np.full(n_req, clk.now() + 0.01)
+    _, span0 = _replay(srv, _requests(n_req, n, seed=102), arr0, clk)
+    full_batch_qps = n_req / max(span0, 1e-9)
+    bench["full_batch_qps"] = full_batch_qps
+    # batching window ~ one full-batch service time: long enough that
+    # trickle arrivals coalesce instead of running as size-1 chunks,
+    # short enough not to dominate sub-capacity latency
+    delay_ms = BATCH / full_batch_qps * 1e3
+    # CAPACITY = sustained throughput of an overloaded open-arrival
+    # replay (queue never empties; mixed archetypes, real window +
+    # admission + chunking overhead) — the honest denominator for the
+    # offered-QPS levels below
+    arr_c = _poisson_arrivals(n_req, 2.0 * full_batch_qps,
+                              clk.now() + 0.01, seed=103)
+    srv_c = _server(p, clk, delay_ms=delay_ms)
+    _, span_c = _replay(srv_c, _requests(n_req, n, seed=104), arr_c, clk)
+    cap = n_req / max(span_c, 1e-9)
+    bench["capacity_qps"] = cap
+    csv.add("serve/capacity_qps", cap,
+            f"open-arrival sustained; full_batch_qps="
+            f"{full_batch_qps:.0f} n={n} batch={BATCH} reqs={n_req}")
+
+    # ---- offered-load sweep: p50/p99 vs offered QPS --------------------
+    # deadlines ~ 4 batch-times at the SUSTAINED rate: a queue budget of
+    # ~4 full batches — above the random-walk queueing of sub-capacity
+    # levels, crossed once sustained 2x overload backs the queue up
+    deadline_ms = 4 * BATCH / cap * 1e3
+    bench["max_delay_ms"] = delay_ms
+    rng = np.random.default_rng(9)
+    # steady-state warmup: one unmeasured open-arrival replay of the
+    # mixture lets the QBS convergence seeds settle (a seed transition
+    # retraces the beam loop — real behavior, but the measured levels
+    # should start from the steady state a long-lived server sits in)
+    _replay(_server(p, clk, delay_ms=delay_ms),
+            _requests(n_req, n, seed=900, deadline_ms=deadline_ms),
+            _poisson_arrivals(n_req, cap, clk.now() + 0.01, seed=901),
+            clk)
+    for frac in (0.5, 1.0, 2.0):
+        offered = frac * cap
+        reqs = _requests(n_req, n, seed=int(1000 + 10 * frac),
+                         deadline_ms=deadline_ms)
+        arr = _poisson_arrivals(n_req, offered, clk.now() + 0.01,
+                                seed=int(2000 + 10 * frac))
+        srv_l = _server(p, clk, delay_ms=delay_ms)
+        futs, span = _replay(srv_l, reqs, arr, clk)
+        res = [f.result() for f in futs]
+        served = [r for r in res if not r.shed]
+        shed = len(res) - len(served)
+        p50, p99 = _quantiles_ms([r.latency_s for r in served]) \
+            if served else (float("nan"), float("nan"))
+        exact, n_checked = _oracle_sample(p, res, rng)
+        level = {
+            "offered_qps": offered, "offered_frac": frac,
+            "p50_ms": p50, "p99_ms": p99,
+            "served": len(served), "shed": shed,
+            "submitted": len(res),
+            "sustained_qps": len(served) / max(span, 1e-9),
+            "deadline_ms": deadline_ms,
+            "exact_sample": exact, "exact_checked": n_checked,
+            "batches": srv_l.n_batches,
+        }
+        assert len(served) + shed == len(reqs), "request unaccounted for"
+        bench["levels"].append(level)
+        csv.add(f"serve/offered_{frac:g}x_p99_ms", p99,
+                f"p50_ms={p50:.1f} offered_qps={offered:.0f} "
+                f"sustained_qps={level['sustained_qps']:.0f} "
+                f"served={len(served)} shed={shed} exact={exact}")
+
+    # ---- diurnal trace -------------------------------------------------
+    reqs_d = _requests(n_req, n, seed=77, deadline_ms=deadline_ms)
+    arr_d = _diurnal_arrivals(n_req, cap, clk.now() + 0.01, seed=78)
+    srv_d = _server(p, clk, delay_ms=delay_ms)
+    futs_d, span_d = _replay(srv_d, reqs_d, arr_d, clk)
+    res_d = [f.result() for f in futs_d]
+    served_d = [r for r in res_d if not r.shed]
+    p50_d, p99_d = _quantiles_ms([r.latency_s for r in served_d]) \
+        if served_d else (float("nan"), float("nan"))
+    exact_d, _ = _oracle_sample(p, res_d, rng)
+    bench["diurnal"] = {
+        "mean_qps": cap, "peak_qps": 1.6 * cap, "trough_qps": 0.4 * cap,
+        "p50_ms": p50_d, "p99_ms": p99_d, "served": len(served_d),
+        "shed": len(res_d) - len(served_d), "submitted": len(res_d),
+        "sustained_qps": len(served_d) / max(span_d, 1e-9),
+        "exact_sample": exact_d,
+    }
+    csv.add("serve/diurnal_p99_ms", p99_d,
+            f"p50_ms={p50_d:.1f} served={len(served_d)} "
+            f"shed={len(res_d) - len(served_d)} exact={exact_d}")
+
+    # ---- coalesce vs FIFO: same arrivals, everything served ------------
+    # no deadlines (both modes must serve the full set so throughput is
+    # compared at equal exactness), offered at 2x capacity so the queue
+    # stays non-empty and the chunking policy — not the arrival gaps —
+    # decides throughput. Each mode gets one warmup replay (different
+    # seed) before the measured one.
+    cmp_req = _requests(n_req, n, seed=300)
+    cmp_arr_rel = _poisson_arrivals(n_req, 2.0 * cap, 0.0, seed=301)
+    sustained = {}
+    rows_by_mode = {}
+    for mode, coal in (("coalesce", True), ("fifo", False)):
+        srv_m = _server(p, clk, coalesce=coal, delay_ms=delay_ms)
+        warm_arr = _poisson_arrivals(n_req, 2.0 * cap,
+                                     clk.now() + 0.01, seed=302)
+        _replay(srv_m, _requests(n_req, n, seed=303), warm_arr, clk)
+        futs_m, span_m = _replay(srv_m, cmp_req,
+                                 clk.now() + 0.01 + cmp_arr_rel, clk)
+        res_m = [f.result() for f in futs_m]
+        assert not any(r.shed for r in res_m)
+        sustained[mode] = len(res_m) / max(span_m, 1e-9)
+        rows_by_mode[mode] = [r.rows for r in res_m]
+    identical = all(np.array_equal(a, b) for a, b in
+                    zip(rows_by_mode["coalesce"], rows_by_mode["fifo"]))
+    exact_c, n_chk = True, 0
+    ratio = sustained["coalesce"] / max(sustained["fifo"], 1e-9)
+    bench["coalesce_vs_fifo"] = {
+        "sustained_coalesce_qps": sustained["coalesce"],
+        "sustained_fifo_qps": sustained["fifo"],
+        "ratio": ratio, "identical_rows": bool(identical),
+        "offered_frac": 2.0, "n_req": n_req,
+    }
+    csv.add("serve/coalesce_vs_fifo_sustained", ratio,
+            f"target>=1.1 coalesce_qps={sustained['coalesce']:.0f} "
+            f"fifo_qps={sustained['fifo']:.0f} identical={identical}")
+
+    # ---- QBS per-archetype service-time quantiles ----------------------
+    for attr, tag, k, pred in _ARCHETYPES:
+        sig = srv.signature(RetrievalRequest(
+            tokens=np.asarray([0, tag], np.int32), attr=attr, k=k,
+            predicate=pred))
+        lq = p.qbs.latency_quantiles(sig)
+        if lq:
+            bench["qbs_latency"][sig] = lq
+
+    bench["csv"] = [[name, v, d] for name, v, d in csv.rows]
+    with open(_JSON_PATH, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.normpath(_JSON_PATH)}")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        common.SMOKE = True
+    c = Csv()
+    run(c)
+    c.emit()

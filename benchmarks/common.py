@@ -8,6 +8,8 @@ paper's claims rather than its absolute wall-times.
 """
 from __future__ import annotations
 
+import os
+import subprocess
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -24,6 +26,26 @@ SMOKE = False
 def smoke_n(n: int, tiny: int) -> int:
     """Full-run size ``n``, or ``tiny`` under --smoke."""
     return tiny if SMOKE else n
+
+
+# ------------------------------------------------------------------ build id
+def git_stamp() -> Tuple[str, bool]:
+    """(short HEAD, dirty) of the repo AT BENCH TIME — the commit whose
+    code actually ran, resolved fresh on every call rather than copied
+    from an older artifact (BENCH_*.json rows used to inherit a stale
+    seed-commit tag). ``dirty`` flags uncommitted changes so a row from
+    a modified tree is never mistaken for the tagged commit's numbers."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        head = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, cwd=root).stdout.strip() or "unknown"
+        status = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, cwd=root).stdout.strip()
+        return head, bool(status)
+    except Exception:
+        return "unknown", True
 
 
 # ------------------------------------------------------------------ datasets

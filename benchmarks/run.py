@@ -21,8 +21,8 @@ def main() -> None:
                             bench_clustering, bench_engine, bench_highdim,
                             bench_hybrid, bench_learned_index,
                             bench_measurement, bench_range_knn,
-                            bench_scalability, bench_transform,
-                            bench_vector_index)
+                            bench_scalability, bench_serve,
+                            bench_transform, bench_vector_index)
     modules = [
         ("table6", bench_clustering),
         ("fig7", bench_measurement),
@@ -35,6 +35,7 @@ def main() -> None:
         ("fig22_23", bench_scalability),
         ("fig24", bench_hybrid),
         ("engine", bench_engine),
+        ("serve", bench_serve),
         ("fig25_26", bench_highdim),
         ("fig27", bench_ablation),
     ]

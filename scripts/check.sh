@@ -59,15 +59,26 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
 # BENCH_engine.json must carry the mixed-precision scale rows (fp32 AND
 # int8 per n, tagged with the producing commit) — a bench edit that
 # silently drops them would hide the perf trajectory this PR exists for.
+# The stamp must be the commit whose code ACTUALLY ran (the smoke run
+# above rewrote the file, so it must equal HEAD, with a dirty flag for
+# uncommitted edits) — rows stamped with an inherited seed commit were
+# exactly the bug git_stamp() exists to prevent.
 echo "== BENCH_engine.json precision-row guard =="
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+HEAD_SHORT="$(git rev-parse --short HEAD)" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
 import json
+import os
 import sys
 
 with open("BENCH_engine.json") as f:
     bench = json.load(f)
 if not bench.get("git_commit") or bench["git_commit"] == "unknown":
     sys.exit("BENCH_engine.json: missing git_commit tag")
+if bench["git_commit"] != os.environ["HEAD_SHORT"]:
+    sys.exit(f"BENCH_engine.json: stamped {bench['git_commit']} but the "
+             f"run just executed at HEAD {os.environ['HEAD_SHORT']}")
+if "git_dirty" not in bench:
+    sys.exit("BENCH_engine.json: missing git_dirty flag")
 scale = bench.get("scale") or {}
 if not scale:
     sys.exit("BENCH_engine.json: no mixed-precision scale rows")
@@ -79,6 +90,54 @@ for n, row in scale.items():
         sys.exit(f"BENCH_engine.json: scale[{n}] int8 rows NOT identical")
 print(f"ok: scale rows for n={sorted(scale, key=int)}, "
       f"commit {bench['git_commit']}")
+EOF
+
+# serving-tier bench: open-arrival offered-load sweep through the
+# micro-batching RetrievalServer. The explicit step (bench_serve also
+# runs inside benchmarks.run below) keeps the capacity / p50-p99-vs-QPS
+# / coalesce-vs-FIFO rows greppable under a stable heading and rewrites
+# BENCH_serve.json for the guard that follows.
+echo "== serving-tier smoke benchmark (offered-load sweep, coalesce vs FIFO) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m benchmarks.bench_serve --smoke
+
+# BENCH_serve.json must carry >= 3 offered-QPS levels with tail-latency
+# quantiles and explicit shed accounting, the coalesce-vs-FIFO
+# comparison, and an accurate commit stamp — the serving perf trajectory
+# this file exists to record.
+echo "== BENCH_serve.json level guard =="
+HEAD_SHORT="$(git rev-parse --short HEAD)" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json
+import os
+import sys
+
+with open("BENCH_serve.json") as f:
+    bench = json.load(f)
+if not bench.get("git_commit") or bench["git_commit"] == "unknown":
+    sys.exit("BENCH_serve.json: missing git_commit tag")
+if bench["git_commit"] != os.environ["HEAD_SHORT"]:
+    sys.exit(f"BENCH_serve.json: stamped {bench['git_commit']} but the "
+             f"run just executed at HEAD {os.environ['HEAD_SHORT']}")
+if "git_dirty" not in bench:
+    sys.exit("BENCH_serve.json: missing git_dirty flag")
+levels = bench.get("levels") or []
+if len(levels) < 3:
+    sys.exit(f"BENCH_serve.json: {len(levels)} offered-QPS levels (< 3)")
+for lv in levels:
+    for key in ("offered_qps", "p50_ms", "p99_ms", "served", "shed",
+                "sustained_qps"):
+        if key not in lv:
+            sys.exit(f"BENCH_serve.json: level {lv.get('offered_frac')} "
+                     f"lacks {key}")
+    if lv["served"] + lv["shed"] != lv["submitted"]:
+        sys.exit(f"BENCH_serve.json: level {lv.get('offered_frac')} "
+                 f"served+shed != submitted (silent drop)")
+cmp_ = bench.get("coalesce_vs_fifo") or {}
+if "ratio" not in cmp_ or not cmp_.get("identical_rows"):
+    sys.exit("BENCH_serve.json: coalesce_vs_fifo missing or rows differ")
+print(f"ok: {len(levels)} levels, coalesce/fifo ratio "
+      f"{cmp_['ratio']:.1f}x, commit {bench['git_commit']}")
 EOF
 
 echo "== benchmarks (--smoke) =="

@@ -233,6 +233,7 @@ class ExecutablePlan:
         seeds, so a cached plan reports fresh write state."""
         lp = self.logical
         seeds = self._seeds()
+        p_qbs = self.session.platform.qbs
         suffix = ":delta" if self.session.platform.n_delta else ""
         eng = self.session.engine(lp.shards) if lp.engine_idx else None
         job_of_group = {}
@@ -262,7 +263,13 @@ class ExecutablePlan:
                                    "tiles_pruned": total - survive,
                                    "tiles_total": total})
             frags.append({"query": frag.signature, "path": frag.path,
-                          "knn": knn, "vr": vr})
+                          "knn": knn, "vr": vr,
+                          # serving-tier feedback: {p50, p99, n} of
+                          # per-request service seconds recorded by
+                          # ``RetrievalServer`` for this plan signature
+                          # (None until the archetype has been served)
+                          "latency":
+                          p_qbs.latency_quantiles(frag.signature)})
         p = self.session.platform
         delta = {
             "epoch": p.delta_epoch,
@@ -387,6 +394,17 @@ class Session:
             logical = build_logical_plan(norm, dl, shards)
             self._cache[key] = logical
         return ExecutablePlan(self, logical, queries, norm, hit)
+
+    def signature(self, query: Q.Query) -> str:
+        """The archetype string ``plan()`` would key this query under
+        (normalize + ``Q.signature``). The serving tier coalesces
+        requests by this value: two queries with equal signatures share
+        a ``LogicalPlan`` and a compiled-shape universe, so batching
+        them together reuses warm state instead of forcing a re-trace.
+        Vector constants are elided from signatures, so callers may pass
+        placeholder vectors (e.g. an empty tuple) to sign a request
+        before its embedding exists."""
+        return Q.signature(Q.normalize(query))
 
     # --------------------------------------------------------- conveniences
     def execute(self, queries: Sequence[Q.Query], *,

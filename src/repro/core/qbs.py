@@ -4,7 +4,7 @@
 Every executed query appends a row:
   statement | object set | attributes | types | Recall@K | CBR | time | acc
 
-The table feeds four consumers:
+The table feeds five consumers:
   1. feature measurement (extrinsic S1 score, §5.1.2)
   2. hyperspace-transformation optimization objectives (§5.2.2 Step 4)
   3. index sibling-reordering (§6.2)
@@ -14,6 +14,15 @@ The table feeds four consumers:
      seeds the next plan's first-round width from ``convergence_width``
      instead of the fixed default — Alg. 3's feedback loop applied to
      execution parameters rather than tree order.
+  5. the serving tier: ``serve.RetrievalServer`` records, per plan
+     *signature* (the archetype string ``Q.signature`` derives), the
+     per-request SERVICE time of every executed micro-batch
+     (``record_latency``); ``latency_quantiles`` feeds the server's
+     deadline shedding (a request whose deadline cannot be met even if
+     its archetype started compute right now is shed before the batch
+     runs) and ``ExecutablePlan.explain()``'s per-fragment latency
+     block — the same query-aware loop as beam seeding, applied to
+     admission control.
 """
 from __future__ import annotations
 
@@ -40,6 +49,7 @@ class QBSRow:
 
 
 _CONVERGENCE_KEEP = 64  # recent widths kept per archetype (ring buffer)
+_LATENCY_KEEP = 512     # recent service times kept per archetype
 
 
 class QBSTable:
@@ -48,6 +58,10 @@ class QBSTable:
         # archetype -> recent converged beam widths (tiles), most recent
         # last; bounded so a long-lived serving process tracks drift
         self.convergence: Dict[str, List[int]] = {}
+        # plan signature -> recent per-request service times (seconds,
+        # micro-batch wall time / batch size), most recent last; same
+        # bounded-ring rationale as ``convergence``
+        self.latency: Dict[str, List[float]] = {}
         self.sample_rate = sample_rate
         self._rng = np.random.default_rng(seed)
 
@@ -101,6 +115,30 @@ class QBSTable:
         w = int(np.ceil(np.quantile(np.asarray(ws, np.float64), 0.9)))
         return w if w > 0 else default
 
+    # --------------------------------------------- serving-tier feedback
+    def record_latency(self, archetype: str, seconds: float, n: int = 1):
+        """Record per-request SERVICE time(s) for one executed
+        micro-batch of an archetype (``n`` requests that each took
+        ``seconds`` of compute — batch wall time / batch size). Service
+        time deliberately excludes queueing delay: the consumer is the
+        server's "can this request still make its deadline if compute
+        started now?" check, and queue-inclusive samples would make
+        that estimate feed back on itself under load."""
+        ls = self.latency.setdefault(archetype, [])
+        ls.extend([float(seconds)] * max(1, int(n)))
+        if len(ls) > _LATENCY_KEEP:
+            del ls[:len(ls) - _LATENCY_KEEP]
+
+    def latency_quantiles(self, archetype: str) -> Optional[Dict[str, float]]:
+        """{p50, p99, n} of recorded per-request service seconds for an
+        archetype, or None when it was never served."""
+        ls = self.latency.get(archetype)
+        if not ls:
+            return None
+        a = np.asarray(ls, np.float64)
+        return {"p50": float(np.quantile(a, 0.5)),
+                "p99": float(np.quantile(a, 0.99)), "n": len(ls)}
+
     # ------------------------------------------------------------ consumers
     def extrinsic_score(self, task: Optional[str] = None,
                         time_scale: float = 0.1) -> float:
@@ -133,7 +171,8 @@ class QBSTable:
     def save(self, path: str):
         with open(path, "w") as f:
             json.dump({"rows": [asdict(r) for r in self.rows],
-                       "convergence": self.convergence}, f, indent=1)
+                       "convergence": self.convergence,
+                       "latency": self.latency}, f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "QBSTable":
@@ -141,12 +180,14 @@ class QBSTable:
         with open(path) as f:
             data = json.load(f)
         if isinstance(data, list):  # legacy format: bare row list
-            rows, conv = data, {}
+            rows, conv, lat = data, {}, {}
         else:
             rows, conv = data["rows"], data.get("convergence", {})
+            lat = data.get("latency", {})
         for r in rows:
             t.rows.append(QBSRow(**r))
         t.convergence = {k: [int(w) for w in v] for k, v in conv.items()}
+        t.latency = {k: [float(s) for s in v] for k, v in lat.items()}
         return t
 
 

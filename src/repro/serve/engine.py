@@ -1,27 +1,31 @@
 """Serving engine: batched prefill + decode, plus the retrieval-serving
 path (embed request texts -> MQRLD hybrid queries).
 
-Straggler/fault posture: requests are grouped into fixed-shape batches
-(padded; static shapes = one compiled program), decode runs a fixed-length
-jitted loop per batch, and the engine is stateless between batches — a
-replacement worker resumes from the request queue with no handoff.
+Straggler/fault posture: requests are grouped into same-length batches
+(no padding; one compiled program per (length, count) shape), decode runs
+a fixed-length jitted loop per batch, and the engine is stateless between
+batches — a replacement worker resumes from the request queue with no
+handoff.
 
-``RetrievalServer`` is the retrieval half of a production deployment: it
-pads a batch of token prompts into one embedding forward pass, turns each
-request into a MOAPI query (V.K, optionally And-ed with a caller-supplied
-predicate tree), and executes the whole batch through the platform's
-planned path (``MQRLD.session().plan(...).execute()``) — one compiled
-path from request queue to Pallas kernels, with the Session's plan cache
-amortizing planning across batches of the same request shape. Requests
-can also be enqueued asynchronously: ``submit()`` returns a
-``RetrievalFuture`` and batches flush either when ``batch_size`` requests
-are pending or on ``flush()`` / ``result()``.
+``RetrievalServer`` is the retrieval half of a production deployment: a
+dynamic micro-batching admission queue in front of the platform's
+planned path (``MQRLD.session().plan(...).execute()``). Requests are
+keyed by their plan *signature* (``Session.signature``) and compatible
+archetypes are coalesced into one micro-batch, so a warm ``LogicalPlan``
+and its compiled-shape universe are reused across requests instead of
+re-traced per accidental FIFO mixture. The queue is bounded
+(backpressure executes oldest work to make room), deadline-expired
+requests are shed BEFORE compute with an explicit ``shed`` result, and
+per-archetype service times feed back into the QBS table — the same
+query-aware loop that seeds KNN beam widths, applied to admission
+control.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +50,22 @@ class GenResult:
 
 
 class ServeEngine:
+    """Batched greedy generation, exact under mixed prompt lengths.
+
+    Batching contract: ``generate`` buckets requests by PROMPT LENGTH
+    and runs each bucket as a padding-free batch (chunked to
+    ``batch_size``), then returns results in request order. Bucketing —
+    not padding — is what keeps batched generation token-identical to
+    per-request generation for every model family here: ``prefill``
+    returns logits for the LAST position only and every ``KVCache``
+    carries one scalar ``length``, so a right-padded short prompt would
+    take its first greedy token from a pad position and decode against
+    pad K/V at wrong positions, and left-padding would shift RoPE
+    phases. Within a same-length batch both hazards vanish. Batches are
+    sized to the requests present — no phantom zero rows padded up to
+    ``batch_size``.
+    """
+
     def __init__(self, cfg: ModelConfig, params=None, *, mesh=None,
                  rules=None, max_len: int = 512, batch_size: int = 8,
                  seed: int = 0):
@@ -64,24 +84,31 @@ class ServeEngine:
         return jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
     def generate(self, requests: Sequence[GenRequest]) -> List[GenResult]:
-        out: List[GenResult] = []
-        for i in range(0, len(requests), self.batch_size):
-            out.extend(self._run_batch(requests[i:i + self.batch_size]))
-        return out
+        out: List[Optional[GenResult]] = [None] * len(requests)
+        by_len: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            by_len.setdefault(len(r.prompt), []).append(i)
+        for plen in sorted(by_len):
+            idx = by_len[plen]
+            for j in range(0, len(idx), self.batch_size):
+                sel = idx[j:j + self.batch_size]
+                for i, res in zip(sel, self._run_batch(
+                        [requests[i] for i in sel])):
+                    out[i] = res
+        return out  # type: ignore[return-value]
 
     def _run_batch(self, reqs: Sequence[GenRequest]) -> List[GenResult]:
-        b = self.batch_size
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, :len(r.prompt)] = r.prompt  # left-padded batch omitted
+        plen = len(reqs[0].prompt)
+        assert all(len(r.prompt) == plen for r in reqs), \
+            "_run_batch requires same-length prompts (generate buckets)"
+        toks = np.stack([np.asarray(r.prompt, np.int32) for r in reqs])
         max_new = max(r.max_new for r in reqs)
 
         t0 = time.time()
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.is_encdec:
             batch["frames"] = jnp.zeros(
-                (b, self.cfg.frontend_tokens, self.cfg.d_model),
+                (len(reqs), self.cfg.frontend_tokens, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
         logits, cache = self.model.prefill(self.params, batch, self.max_len)
         # SSM/plain-transformer prefill returns a filled cache; hymba and
@@ -95,6 +122,7 @@ class ServeEngine:
         prefill_s = time.time() - t0
 
         t1 = time.time()
+        # every row's position -1 is its true last prompt token
         cur = self._greedy(logits[:, -1])[:, None]
         gen = [np.asarray(cur)]
         for _ in range(max_new - 1):
@@ -138,12 +166,23 @@ class RetrievalRequest:
     attr: str                            # vector column to search
     k: int = 10
     predicate: Optional[Q.Query] = None  # VK-free filter tree, And-ed in
+    # latency budget relative to ARRIVAL (submit time). None = no
+    # deadline. A request whose deadline passes — or provably cannot be
+    # met even if its archetype started compute right now, per QBS
+    # service-time stats — is shed before compute: its future resolves
+    # to a RetrievalResult with ``shed=True`` and empty rows, never a
+    # silent drop.
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
 class RetrievalResult:
     rows: np.ndarray                     # result row ids (distance order)
-    query: Q.Query                       # the MOAPI query that was run
+    query: Optional[Q.Query] = None      # the MOAPI query that was run
+    #                                      (None when the request was shed
+    #                                      before its embedding existed)
+    shed: bool = False                   # True = deadline shed, no compute
+    latency_s: float = 0.0               # end-to-end: arrival -> resolve
 
 
 class RetrievalFuture:
@@ -151,7 +190,12 @@ class RetrievalFuture:
     only in the sense that it flushes the server's pending batch when
     this request has not run yet — execution is synchronous batched
     compute, not threads; the future exists so callers can enqueue
-    requests as they arrive and let the server pick the batch boundary."""
+    requests as they arrive and let the server pick the batch boundary.
+
+    A future resolves exactly once: either with real rows when its
+    micro-batch executes, or with a ``shed=True`` result when its
+    deadline expires first. Once resolved it is immutable — a failed
+    later batch can never re-set it."""
 
     def __init__(self, server: "RetrievalServer"):
         self._server = server
@@ -172,87 +216,168 @@ class RetrievalFuture:
         return self._result
 
     def _set(self, res: RetrievalResult):
+        if self._done:       # resolved futures are immutable (see
+            return           # _run_chunk's all-or-nothing contract)
         self._result = res
         self._done = True
 
 
-class RetrievalServer:
-    """Batched retrieval serving over a prepared ``MQRLD`` platform,
-    running on the MOAPI v2 planned path.
+@dataclass
+class _Pending:
+    """One admitted request: queue entry + admission-time bookkeeping."""
+    req: RetrievalRequest
+    fut: RetrievalFuture
+    sig: str                             # plan signature (coalescing key)
+    t_submit: float                      # arrival time (server clock)
+    deadline: Optional[float]            # absolute, server clock; None=∞
 
-    Each flushed batch is two compiled stages: one padded embedding
-    forward pass for all prompts, then one ``Session.plan(...).execute()``
-    for all queries — the session's plan cache means a steady stream of
-    same-shaped requests plans once and executes many times, with KNN
-    beam widths seeded from QBS convergence stats. Prompts are
-    right-padded with ``pad_token`` to the batch max length (mean-pooled
-    embeddings shift slightly versus unpadded prompts; real deployments
-    bucket by length).
+
+_E2E_KEEP = 2048  # recent end-to-end latencies kept per signature
+
+
+class RetrievalServer:
+    """Dynamic micro-batching retrieval server over a prepared ``MQRLD``
+    platform, running on the MOAPI v2 planned path.
+
+    Each executed micro-batch is two compiled stages: embedding forward
+    passes (bucketed by prompt length — padding-free, so a request's
+    embedding is independent of which batch it lands in), then one
+    ``Session.plan(...).execute()`` for all queries. Requests are
+    admitted into a bounded FIFO queue and carved into micro-batches by
+    PLAN SIGNATURE (``coalesce=True``, the default): all requests of one
+    micro-batch share an archetype, so the session's warm ``LogicalPlan``
+    and the engine's compiled shapes are reused instead of re-traced for
+    every accidental mixture of shapes — micro-batch sizes are quantized
+    to powers of two (capped at ``batch_size``) to bound the compiled
+    shape universe to |signatures| x log2(batch_size). ``coalesce=False``
+    restores the legacy strict-FIFO ``batch_size`` chunking.
+
+    Admission control: the queue holds at most ``max_queue`` requests
+    (default ``64 * batch_size``); ``submit`` under a full queue first
+    EXECUTES oldest work to make room (backpressure — the caller pays
+    the flush latency, requests are never dropped by the bound).
+    Requests carrying ``deadline_ms`` are shed before compute once their
+    deadline passes — and predictively, when the QBS service-time stats
+    for their archetype (>= 8 samples) say even an immediate start
+    cannot meet the deadline. A shed future resolves to an explicit
+    ``RetrievalResult(shed=True)``; shedding is never a silent drop.
+    Open-arrival drive loops use ``poll()``/``next_due()`` instead of
+    ``flush_one``: ``max_delay_ms`` is the batching window a partial
+    micro-batch may wait for archetype-mates before running anyway
+    (full groups, full queues, and imminent deadlines run immediately;
+    0 = eager).
+
+    Query-aware feedback: every executed micro-batch records its
+    per-request service time under its plan signature via
+    ``QBSTable.record_latency`` — consumed by the predictive shed above
+    and by ``ExecutablePlan.explain()``'s per-fragment latency block.
+    ``stats()`` reports served/shed/batch counters and per-signature
+    end-to-end p50/p99.
+
+    Ordering contract: ``serve`` returns one ``RetrievalResult`` per
+    request, POSITIONALLY in submission order, and a future always
+    resolves to its own request's result — regardless of how coalescing
+    reorders execution across micro-batches, how the planner groups or
+    scalar-fallbacks queries inside a batch, or how many requests were
+    shed in between. What coalescing may change is only WHEN an admitted
+    request executes, never its result: embeddings are padding-free and
+    the planned path is exact, so each served result is identical to
+    serving the request alone. Within each result, rows are ALWAYS
+    distance-ordered: the planned path returns filtered-KNN (And)
+    results as ascending row ids, so the server re-ranks them by
+    distance to the request embedding before returning.
+
+    Retry contract: ``_run_chunk`` is all-or-nothing. Results for the
+    whole micro-batch are embedded, executed, and ranked BEFORE any
+    future is resolved or any queue entry removed; if the embedder, the
+    engine, or the ranking gather raises, the exception propagates with
+    every one of the chunk's requests still pending and every one of its
+    futures unresolved — the next ``flush()`` retries them. A failed
+    chunk therefore can never re-execute or re-resolve a request that an
+    earlier chunk already resolved (resolved futures are immutable).
 
     ``project`` maps the embedder's output onto the searched vector
-    column's space (identity by default) — the supported hook when the
-    backbone dimension differs from the stored column.
+    column's space (identity by default). ``device_loop`` picks the
+    engine's KNN beam-loop implementation (True = on-device, the serving
+    default); ``shards`` (None = the platform's ``default_shards``)
+    serves through the T-sharded multi-device path; ``precision``
+    selects the mixed-precision tile scan (rows identical to fp32).
+    ``clock`` injects the monotonic time source (tests and the load
+    harness pass a controllable clock; deadlines, latency accounting and
+    QBS service times all read it).
 
-    ``device_loop`` picks the engine's KNN beam-loop implementation
-    (True = on-device ``lax.while_loop``, the serving default; False =
-    the host-driven exactness oracle); it configures the server's
-    ``Session``. ``shards`` (None = the platform's ``default_shards``)
-    serves through the T-sharded multi-device execution path: the
-    tile-major layout is split over an N-device ("shards",) mesh and
-    each batch's beam rounds run per shard with a cross-shard top-k
-    merge — an exact top-k at every shard count (see the engine's
-    merge notes for the kth-boundary tie caveat).
-
-    Async surface: ``submit(request)`` enqueues and returns a
-    ``RetrievalFuture``; a batch flushes automatically once
-    ``batch_size`` requests are pending, explicitly via ``flush()``, or
-    lazily when a future's ``result()`` is read. ``serve`` is
-    submit-all + flush + gather. ``append(...)`` ingests new rows
-    between batches (freshness-exact; see its docstring for the
-    ordering and exception-safety contract).
-
-    Ordering contract: results come back in SUBMISSION order — one
-    ``RetrievalResult`` per request, positionally — regardless of how
-    the planner groups, reorders, or scalar-fallbacks queries inside
-    the engine. Within each result, rows are ALWAYS distance-ordered:
-    the planned path returns filtered-KNN (And) results as ascending
-    row ids, so the server re-ranks them by distance to the request
-    embedding before returning.
+    ``append(...)`` ingests new rows between micro-batches
+    (freshness-exact; see its docstring for the ordering and
+    exception-safety contract).
     """
 
     def __init__(self, platform, embedder: EmbeddingServer, *,
                  batch_size: int = 64, pad_token: int = 0,
                  project=None, device_loop: bool = True,
                  shards: Optional[int] = None,
-                 precision: Optional[str] = None):
+                 precision: Optional[str] = None,
+                 coalesce: bool = True,
+                 max_queue: Optional[int] = None,
+                 max_delay_ms: float = 0.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.platform = platform
         self.embedder = embedder
         self.batch_size = batch_size
-        self.pad_token = pad_token
+        self.pad_token = pad_token   # kept for API compat; prompts are
+        #                              no longer padded (length buckets)
         self.project = project
         self.device_loop = device_loop
         self.shards = shards
         # mixed-precision tile scan (None = platform default): results
         # are row-identical to fp32, only the scan cost changes
         self.precision = precision
+        self.coalesce = coalesce
+        # batching window for poll(): how long a lone request may wait
+        # for archetype-mates before a partial micro-batch runs anyway.
+        # 0 = eager (poll == flush_one); the open-arrival drive loop
+        # sets ~one full-batch service time — without a window, trickle
+        # arrivals execute as size-1 chunks and throughput collapses to
+        # the per-chunk overhead floor
+        self.max_delay_ms = float(max_delay_ms)
+        self.max_queue = max_queue if max_queue is not None \
+            else 64 * batch_size
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        self._clock = clock
         self.session = platform.session(device_loop=device_loop,
                                         shards=shards,
                                         precision=precision)
-        self._pending: List[tuple] = []   # (request, future) FIFO
+        self._pending: List[_Pending] = []   # admission FIFO
+        self._sig_cache: Dict[Tuple, str] = {}
+        # serving counters + per-signature end-to-end latencies
+        self.n_submitted = 0
+        self.n_served = 0
+        self.n_shed = 0
+        self.n_batches = 0
+        self._e2e: Dict[str, List[float]] = {}
 
+    # ------------------------------------------------------------ embedding
     def _embed_tokens(self, token_lists: Sequence[np.ndarray]) -> np.ndarray:
-        """THE prompt -> vector recipe (right-pad to the batch max with
-        ``pad_token``, one forward pass, optional projection) — shared
-        by query serving and ``append`` so ingested embeddings always
-        live in the same space queries search."""
-        plen = max(len(t) for t in token_lists)
-        toks = np.full((len(token_lists), plen), self.pad_token, np.int32)
-        for j, t in enumerate(token_lists):
-            toks[j, :len(t)] = t
-        emb = self.embedder.embed(toks)
-        if self.project is not None:
-            emb = np.asarray(self.project(emb))
-        return emb
+        """THE prompt -> vector recipe — shared by query serving and
+        ``append`` so ingested embeddings always live in the same space
+        queries search. Prompts are bucketed by length into padding-free
+        forward passes (one per distinct length), so an embedding
+        depends only on the prompt itself — never on the longest
+        neighbor that happened to share its batch. That invariance is
+        what makes coalesced serving exact: moving a request between
+        micro-batches cannot change its embedding, hence its result."""
+        lens = [len(t) for t in token_lists]
+        out: List[Optional[np.ndarray]] = [None] * len(token_lists)
+        for plen in sorted(set(lens)):
+            idx = [i for i, n in enumerate(lens) if n == plen]
+            toks = np.stack([np.asarray(token_lists[i], np.int32)
+                             for i in idx])
+            emb = self.embedder.embed(toks)
+            if self.project is not None:
+                emb = np.asarray(self.project(emb))
+            for j, i in enumerate(idx):
+                out[i] = np.asarray(emb[j])
+        return np.stack(out)  # type: ignore[arg-type]
 
     def _queries(self, reqs: Sequence[RetrievalRequest],
                  emb: np.ndarray) -> List[Q.Query]:
@@ -272,6 +397,21 @@ class RetrievalServer:
         d2 = ((col - emb[None, :]) ** 2).sum(1)
         return rows[np.argsort(d2, kind="stable")]
 
+    def signature(self, request: RetrievalRequest) -> str:
+        """The plan signature this request coalesces under — computed
+        WITHOUT its embedding (signatures elide vector constants, so a
+        placeholder vector signs identically; see
+        ``Session.signature``). Cached per (attr, k, predicate)."""
+        key = (request.attr, int(request.k), request.predicate)
+        sig = self._sig_cache.get(key)
+        if sig is None:
+            vk = Q.VK.of(request.attr, (), int(request.k))
+            q = vk if request.predicate is None \
+                else Q.And.of(request.predicate, vk)
+            sig = self.session.signature(q)
+            self._sig_cache[key] = sig
+        return sig
+
     # ------------------------------------------------------------- writes
     def append(self, *, numeric=None, vectors=None, tokens=None,
                attr: Optional[str] = None,
@@ -282,20 +422,20 @@ class RetrievalServer:
 
         ``vectors`` supplies embedding columns directly; ``tokens`` (a
         list of int32 prompt arrays) is embedded through the server's
-        embedder — padded and projected exactly like query prompts —
+        embedder — bucketed and projected exactly like query prompts —
         into the ``attr`` vector column. Returns the number of live
         (un-folded) delta rows; ``fold`` is forwarded to
         ``MQRLD.append`` (None = the platform's auto-fold policy).
 
         Ordering / concurrency contract: the append is applied
-        atomically BETWEEN batches. Futures already resolved are
+        atomically BETWEEN micro-batches. Futures already resolved are
         immutable; requests still pending — including those submitted
-        before this call — observe the appended rows when their batch
-        flushes (freshness-exact: every flushed batch queries
-        base+delta at its flush epoch). There is no state in which an
-        in-flight batch sees a half-applied append, because execution
-        is synchronous batched compute and ``MQRLD.append`` validates
-        the whole batch of rows before mutating the region.
+        before this call — observe the appended rows when their
+        micro-batch flushes (freshness-exact: every executed batch
+        queries base+delta at its flush epoch). There is no state in
+        which an in-flight batch sees a half-applied append, because
+        execution is synchronous batched compute and ``MQRLD.append``
+        validates the whole batch of rows before mutating the region.
 
         Exception safety: embedding or validation failures propagate
         WITHOUT touching the platform, the pending queue, or any
@@ -310,14 +450,41 @@ class RetrievalServer:
                                     raw_uri=raw_uri, fold=fold)
 
     # ------------------------------------------------------------- async
-    def submit(self, request: RetrievalRequest) -> RetrievalFuture:
-        """Enqueue one request; flushes a batch once ``batch_size`` are
-        pending. The returned future resolves on that flush (or on an
-        explicit ``flush()`` / its own ``result()``)."""
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
+
+    def submit(self, request: RetrievalRequest, *,
+               now: Optional[float] = None) -> RetrievalFuture:
+        """Admit one request; returns its future. ``now`` overrides the
+        arrival timestamp (server clock) — trace replay uses it so
+        recorded latencies measure from true arrival, not from when the
+        replay loop got around to submitting.
+
+        Auto-flush: with coalescing, a micro-batch runs as soon as some
+        signature has ``batch_size`` requests queued; legacy FIFO mode
+        runs once ``batch_size`` total are queued. Backpressure: when
+        the queue is at ``max_queue``, oldest work is executed (not
+        dropped) until the new request fits."""
+        t = self._clock() if now is None else now
+        self._shed_expired(t)
+        while len(self._pending) >= self.max_queue:
+            self.flush_one()          # backpressure: execute, never drop
         fut = RetrievalFuture(self)
-        self._pending.append((request, fut))
-        if len(self._pending) >= self.batch_size:
-            self.flush()
+        dl = None if request.deadline_ms is None \
+            else t + float(request.deadline_ms) / 1e3
+        self._pending.append(_Pending(
+            req=request, fut=fut, sig=self.signature(request),
+            t_submit=t, deadline=dl))
+        self.n_submitted += 1
+        if self.coalesce:
+            counts: Dict[str, int] = {}
+            for p in self._pending:
+                counts[p.sig] = counts.get(p.sig, 0) + 1
+            if any(c >= self.batch_size for c in counts.values()):
+                self.flush_one()
+        elif len(self._pending) >= self.batch_size:
+            self.flush_one()
         return fut
 
     def result(self, future: RetrievalFuture) -> RetrievalResult:
@@ -325,24 +492,166 @@ class RetrievalServer:
         return future.result()
 
     def flush(self):
-        """Run every pending request, in ``batch_size`` chunks. A chunk
-        is dequeued only after it executed: if the embedder or engine
-        raises, the exception propagates but the chunk's requests stay
-        pending (their futures unresolved) and the next flush retries
-        them instead of silently dropping them."""
+        """Run every pending request, one micro-batch at a time. A
+        chunk is dequeued only after it executed (see the class retry
+        contract): on a raise, the failed chunk's requests stay pending
+        and the next flush retries them."""
         while self._pending:
-            self._run_chunk(self._pending[:self.batch_size])
-            del self._pending[:self.batch_size]
+            self.flush_one()
 
-    def _run_chunk(self, chunk: Sequence[tuple]):
-        reqs = [r for r, _ in chunk]
+    def flush_one(self) -> int:
+        """Shed expired work, then execute ONE micro-batch (the chunk
+        ``_next_chunk`` picks), regardless of the batching window.
+        Returns the number of requests served (0 when shedding emptied
+        the queue)."""
+        self._shed_expired(self._clock())
+        if not self._pending:
+            return 0
+        chunk = self._next_chunk()
+        self._run_chunk(chunk)
+        return len(chunk)
+
+    def poll(self) -> int:
+        """Window-respecting variant of ``flush_one`` for open-arrival
+        drive loops: sheds expired work, then runs one micro-batch only
+        if one is DUE — a signature group (or the whole queue) reached
+        ``batch_size``, the oldest admitted request has waited out
+        ``max_delay_ms``, or some deadline would expire within the
+        window. Returns requests served this call (0 = nothing due yet;
+        see ``next_due`` for when to come back)."""
+        now = self._clock()
+        self._shed_expired(now)
+        if not self._pending or not self._due(now):
+            return 0
+        chunk = self._next_chunk()
+        self._run_chunk(chunk)
+        return len(chunk)
+
+    def next_due(self) -> Optional[float]:
+        """Clock time at which the queue's oldest entry exhausts the
+        batching window (or its deadline, whichever is sooner) — the
+        wake-up time for a drive loop whose ``poll`` returned 0. None
+        when nothing is pending."""
+        if not self._pending:
+            return None
+        t = self._pending[0].t_submit + self.max_delay_ms / 1e3
+        dls = [p.deadline for p in self._pending
+               if p.deadline is not None]
+        return min(t, min(dls)) if dls else t
+
+    def _due(self, now: float) -> bool:
+        """Is a micro-batch worth running right now? (queue non-empty
+        is the caller's precondition)"""
+        delay = self.max_delay_ms / 1e3
+        if delay <= 0 or len(self._pending) >= self.batch_size:
+            return True
+        if self.coalesce:
+            counts: Dict[str, int] = {}
+            for p in self._pending:
+                counts[p.sig] = counts.get(p.sig, 0) + 1
+                if counts[p.sig] >= self.batch_size:
+                    return True
+        if now - self._pending[0].t_submit >= delay:
+            return True
+        dls = [p.deadline for p in self._pending
+               if p.deadline is not None]
+        return bool(dls) and min(dls) <= now + delay
+
+    # ------------------------------------------------------ admission ctrl
+    def _service_estimate(self, sig: str) -> float:
+        """Expected per-request service time for an archetype, from the
+        QBS serving stats (0.0 until >= 8 samples exist — predictive
+        shedding stays off for cold archetypes rather than guessing)."""
+        lq = self.platform.qbs.latency_quantiles(sig)
+        if lq is None or lq["n"] < 8:
+            return 0.0
+        return float(lq["p50"])
+
+    def _shed_expired(self, now: float):
+        """Resolve-with-shed every pending request whose deadline has
+        passed — or whose archetype's QBS p50 service time says it
+        cannot finish in the remaining budget even starting now.
+        Shedding is an explicit resolution (``shed=True``), never a
+        drop: counters and the future both record it."""
+        keep: List[_Pending] = []
+        est: Dict[str, float] = {}   # one QBS lookup per sig per pass
+        for p in self._pending:
+            if p.deadline is None:
+                keep.append(p)
+                continue
+            if p.sig not in est:
+                est[p.sig] = self._service_estimate(p.sig)
+            if p.deadline <= now + est[p.sig]:
+                p.fut._set(RetrievalResult(
+                    rows=np.empty(0, np.int64), query=None, shed=True,
+                    latency_s=max(0.0, now - p.t_submit)))
+                self.n_shed += 1
+            else:
+                keep.append(p)
+        self._pending = keep
+
+    def _next_chunk(self) -> List[_Pending]:
+        """Pick the next micro-batch (queue is non-empty). Coalescing:
+        prefer the signature group that has ``batch_size`` requests and
+        the oldest head; otherwise the oldest request's group. Sizes are
+        quantized to powers of two (<= ``batch_size``) so the compiled
+        shape universe stays |signatures| x log2(batch_size). Legacy
+        FIFO: the first ``batch_size`` entries regardless of signature.
+        Entries are SELECTED here, not removed — ``_run_chunk`` dequeues
+        only after the batch succeeded."""
+        if not self.coalesce:
+            return self._pending[:self.batch_size]
+        groups: Dict[str, List[_Pending]] = {}
+        for p in self._pending:           # FIFO order within each group
+            groups.setdefault(p.sig, []).append(p)
+        full = [g for g in groups.values() if len(g) >= self.batch_size]
+        if full:
+            grp = min(full, key=lambda g: g[0].t_submit)
+        else:
+            grp = groups[self._pending[0].sig]
+        # full groups always run at batch_size itself; partial groups
+        # round DOWN to a power of two (the leftovers stay queued for
+        # the next micro-batch), so per signature the engine only ever
+        # compiles sizes {1, 2, 4, ..., batch_size}
+        take = self.batch_size if len(grp) >= self.batch_size \
+            else 2 ** int(math.log2(len(grp)))
+        return grp[:take]
+
+    # ---------------------------------------------------------- execution
+    def _run_chunk(self, chunk: Sequence[_Pending]):
+        """Execute one single-signature (coalesced) or mixed (FIFO)
+        micro-batch, all-or-nothing: every result is computed and ranked
+        before ANY future resolves or queue entry leaves ``_pending``.
+        Past the mutation point nothing can raise (plain list/dict
+        bookkeeping), so either the whole chunk resolves and dequeues,
+        or none of it does."""
+        reqs = [p.req for p in chunk]
+        t0 = self._clock()
         emb = self._embed_tokens([r.tokens for r in reqs])
         queries = self._queries(reqs, emb)
         rows, _ = self.session.plan(
             queries, device_loop=self.device_loop).execute()
-        for (req, fut), e, r, q in zip(chunk, emb, rows, queries):
-            fut._set(RetrievalResult(rows=self._ranked(req, e, r),
-                                     query=q))
+        ranked = [self._ranked(req, e, r)
+                  for req, e, r in zip(reqs, emb, rows)]
+        t1 = self._clock()
+        # ------------------------------------------------ mutation point
+        per_req_s = (t1 - t0) / max(1, len(chunk))
+        sig_counts: Dict[str, int] = {}
+        for p, rk, q in zip(chunk, ranked, queries):
+            p.fut._set(RetrievalResult(rows=rk, query=q,
+                                       latency_s=max(0.0,
+                                                     t1 - p.t_submit)))
+            sig_counts[p.sig] = sig_counts.get(p.sig, 0) + 1
+            e2e = self._e2e.setdefault(p.sig, [])
+            e2e.append(max(0.0, t1 - p.t_submit))
+            if len(e2e) > _E2E_KEEP:
+                del e2e[:len(e2e) - _E2E_KEEP]
+        for sig, n in sig_counts.items():
+            self.platform.qbs.record_latency(sig, per_req_s, n=n)
+        done = {id(p) for p in chunk}
+        self._pending = [p for p in self._pending if id(p) not in done]
+        self.n_served += len(chunk)
+        self.n_batches += 1
 
     # ------------------------------------------------------------- sync
     def serve(self, requests: Sequence[RetrievalRequest]
@@ -350,3 +659,18 @@ class RetrievalServer:
         futures = [self.submit(r) for r in requests]
         self.flush()
         return [f.result() for f in futures]
+
+    def stats(self) -> dict:
+        """Serving counters plus per-signature end-to-end latency
+        quantiles (seconds; service-time quantiles live in the QBS
+        table, see ``QBSTable.latency_quantiles``)."""
+        by_sig = {}
+        for sig, ls in self._e2e.items():
+            a = np.asarray(ls, np.float64)
+            by_sig[sig] = {"p50_s": float(np.quantile(a, 0.5)),
+                           "p99_s": float(np.quantile(a, 0.99)),
+                           "n": len(ls)}
+        return {"submitted": self.n_submitted, "served": self.n_served,
+                "shed": self.n_shed, "batches": self.n_batches,
+                "queue_depth": len(self._pending),
+                "by_signature": by_sig}

@@ -338,8 +338,12 @@ class _StubEmbedder:
 
 
 def test_retrieval_server_futures(platform):
+    # coalesce=False pins the LEGACY strict-FIFO chunking this test's
+    # batch boundaries assume (the mixed-k requests would otherwise
+    # micro-batch by signature; tests/test_serve.py covers that mode)
     p = platform
-    server = RetrievalServer(p, _StubEmbedder(p.table), batch_size=3)
+    server = RetrievalServer(p, _StubEmbedder(p.table), batch_size=3,
+                             coalesce=False)
     reqs = [RetrievalRequest(tokens=np.asarray([i, 1], np.int32),
                              attr="img", k=4 + i % 3,
                              predicate=Q.NR("price", 5, 95))
@@ -352,7 +356,8 @@ def test_retrieval_server_futures(platform):
     assert futs[-1].done()
     results = [server.result(f) for f in futs]
     assert results[-1] is res_last
-    # parity with the sync path, positionally
+    # parity with the sync path, positionally (coalescing on: execution
+    # order differs, results must not)
     sync = RetrievalServer(p, _StubEmbedder(p.table), batch_size=3) \
         .serve(reqs)
     for i, (req, a, b) in enumerate(zip(reqs, results, sync)):

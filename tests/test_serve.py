@@ -1,0 +1,430 @@
+"""Serving tier: dynamic signature-coalesced micro-batching, bounded
+admission with backpressure, deadline shedding, all-or-nothing chunk
+resolution, and the mixed-length ``ServeEngine`` parity fix.
+
+The retrieval tests run a stub embedder (deterministic per prompt,
+independent of batch composition) over a small prepared platform, so
+"exact" here means: every served result is row-identical to serving the
+request alone, and its rowset equals the brute-force oracle of the query
+the server built. Deadlines run on an injected fake clock — nothing here
+sleeps.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import query as Q
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+from repro.serve.engine import (EmbeddingServer, GenRequest,
+                                RetrievalRequest, RetrievalServer,
+                                ServeEngine)
+
+
+def _sorted(rows):
+    return np.sort(np.asarray(rows))
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def platform():
+    rng = np.random.default_rng(11)
+    n, d = 900, 8
+    centers = rng.normal(size=(5, d)).astype(np.float32) * 6
+    lab = rng.integers(0, 5, n)
+    vec = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    t = (MMOTable("serve_shop")
+         .add_vector("img", vec)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32)))
+    p = MQRLD(t, seed=0)
+    p.prepare(min_leaf=8, max_leaf=64, dpc_max_clusters=5)
+    return p
+
+
+class _StubEmbedder:
+    """Deterministic per prompt, independent of batch composition —
+    the property that lets exactness assertions compare results across
+    different batchings."""
+
+    def __init__(self, table):
+        self.table = table
+        self.calls = 0
+
+    def embed(self, tokens):
+        self.calls += 1
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["img"][rows] + 0.01
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _req(i, k=6, predicate=None, deadline_ms=None):
+    return RetrievalRequest(tokens=np.asarray([i, 1], np.int32),
+                            attr="img", k=k, predicate=predicate,
+                            deadline_ms=deadline_ms)
+
+
+def _mixed_requests(n=14):
+    """Three interleaved archetypes: plain VK, VK with a wider k, and
+    predicate+VK — the shape mixture FIFO chunking pessimizes."""
+    out = []
+    for i in range(n):
+        if i % 3 == 0:
+            out.append(_req(i, k=5))
+        elif i % 3 == 1:
+            out.append(_req(i, k=9))
+        else:
+            out.append(_req(i, k=4, predicate=Q.NR("price", 10, 90)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exactness of coalesced serving
+# ---------------------------------------------------------------------------
+def test_coalesced_exactness_vs_per_request_oracle(platform):
+    """Coalescing may change WHEN a request executes, never its result:
+    per-request serving, FIFO chunking, and signature coalescing must
+    return array-identical rows, each equal to the brute-force oracle."""
+    p = platform
+    reqs = _mixed_requests()
+    solo = []
+    for r in reqs:  # per-request oracle: each request served alone
+        srv1 = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4)
+        solo.append(srv1.serve([r])[0])
+    fifo = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                           coalesce=False).serve(reqs)
+    coal = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4)
+    res = coal.serve(reqs)
+    assert coal.n_batches > 1            # actually micro-batched
+    for i, (a, b, c) in enumerate(zip(res, fifo, solo)):
+        assert np.array_equal(a.rows, b.rows), i
+        assert np.array_equal(a.rows, c.rows), i
+        assert not a.shed and a.latency_s >= 0.0
+        assert _sorted(a.rows).tolist() == \
+            _sorted(p.oracle(a.query)).tolist(), i
+
+
+def test_submission_order_under_coalescing(platform):
+    """Futures always resolve to their OWN request's result even when a
+    later-submitted full signature group executes first."""
+    p = platform
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=3)
+    fa = srv.submit(_req(0, k=5))            # lone archetype A
+    fbs = [srv.submit(_req(10 + i, k=8)) for i in range(3)]  # B fills
+    # B's group hit batch_size and flushed; A is still queued
+    assert all(f.done() for f in fbs) and not fa.done()
+    assert srv.queue_depth == 1
+    srv.flush()
+    assert fa.done()
+    # positional identity: each result equals serving that request alone
+    for f, r in zip([fa] + fbs, [_req(0, k=5)] +
+                    [_req(10 + i, k=8) for i in range(3)]):
+        alone = RetrievalServer(p, _StubEmbedder(p.table)).serve([r])[0]
+        assert np.array_equal(f.result().rows, alone.rows)
+
+
+def test_chunk_sizes_pow2_quantized(platform):
+    """Coalesced micro-batch sizes are power-of-two (capped at
+    batch_size), bounding the compiled-shape universe: 6 queued
+    same-signature requests flush as 4 + 2, not one batch of 6."""
+    p = platform
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=8)
+    futs = [srv.submit(_req(i, k=6)) for i in range(6)]
+    assert srv.queue_depth == 6          # below batch_size: no autoflush
+    assert srv.flush_one() == 4
+    assert srv.flush_one() == 2
+    assert srv.n_batches == 2
+    assert all(f.done() for f in futs)
+
+
+# ---------------------------------------------------------------------------
+# deadline shedding
+# ---------------------------------------------------------------------------
+def test_deadline_shedding_observable(platform):
+    """An expired request is shed BEFORE compute: its future resolves to
+    an explicit shed result, the embedder never runs for it, and
+    counters report it — never a silent drop."""
+    p = platform
+    clk = _FakeClock()
+    emb = _StubEmbedder(p.table)
+    srv = RetrievalServer(p, emb, batch_size=4, clock=clk)
+    f_live = srv.submit(_req(0, k=6))
+    f_dead = srv.submit(_req(1, k=6, deadline_ms=50.0))
+    clk.advance(0.2)                     # 200ms > 50ms budget
+    srv.flush()
+    r = f_dead.result()
+    assert r.shed and r.query is None and len(r.rows) == 0
+    assert r.latency_s == pytest.approx(0.2)
+    live = f_live.result()
+    assert not live.shed and len(live.rows) == 6
+    st = srv.stats()
+    assert st["shed"] == 1 and st["served"] == 1 and st["submitted"] == 2
+
+
+def test_shed_only_queue_runs_no_compute(platform):
+    p = platform
+    clk = _FakeClock()
+    emb = _StubEmbedder(p.table)
+    srv = RetrievalServer(p, emb, batch_size=4, clock=clk)
+    futs = [srv.submit(_req(i, deadline_ms=10.0)) for i in range(3)]
+    clk.advance(1.0)
+    calls0 = emb.calls
+    srv.flush()
+    assert emb.calls == calls0           # shed before any embedding
+    assert all(f.result().shed for f in futs)
+    assert srv.stats()["shed"] == 3 and srv.n_served == 0
+
+
+def test_predictive_shedding_uses_qbs_service_time(platform):
+    """With >= 8 QBS service samples for an archetype, a request whose
+    remaining budget is below the p50 service time sheds even before
+    its deadline wall-clock expires."""
+    p = platform
+    clk = _FakeClock()
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          clock=clk)
+    sig = srv.signature(_req(0, k=6))
+    p.qbs.record_latency(sig, 0.5, n=8)  # p50 service: 500ms
+    f = srv.submit(_req(0, k=6, deadline_ms=100.0))   # budget < p50
+    srv.flush()
+    assert f.result().shed
+    # same deadline, cold archetype (no stats): must NOT predictively shed
+    f2 = srv.submit(_req(1, k=7, deadline_ms=100.0))
+    srv.flush()
+    assert not f2.result().shed
+    del p.qbs.latency[sig]               # module-scoped platform: clean up
+
+
+# ---------------------------------------------------------------------------
+# bounded admission / backpressure
+# ---------------------------------------------------------------------------
+def test_backpressure_bounds_queue(platform):
+    """The admission queue never exceeds max_queue: a submit against a
+    full queue executes oldest work to make room (requests are never
+    dropped), and every request still resolves exactly once."""
+    p = platform
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=16,
+                          max_queue=5)
+    futs = []
+    for i in range(30):
+        futs.append(srv.submit(_mixed_requests(30)[i]))
+        assert srv.queue_depth <= 5
+    srv.flush()
+    assert all(f.done() for f in futs)
+    st = srv.stats()
+    assert st["submitted"] == 30
+    assert st["served"] + st["shed"] == 30 and st["shed"] == 0
+    assert st["queue_depth"] == 0
+
+
+def test_max_queue_validation(platform):
+    with pytest.raises(ValueError, match="max_queue"):
+        RetrievalServer(platform, _StubEmbedder(platform.table),
+                        max_queue=0)
+
+
+# ---------------------------------------------------------------------------
+# failure injection: all-or-nothing chunks, immutable futures
+# ---------------------------------------------------------------------------
+def test_embedder_raises_mid_flush_retryable(platform):
+    """A transient embedder failure leaves the whole chunk pending and
+    unresolved; the next flush retries and serves it."""
+    class _Flaky(_StubEmbedder):
+        def __init__(self, table):
+            super().__init__(table)
+            self.fail = True
+
+        def embed(self, tokens):
+            if self.fail:
+                self.fail = False
+                raise RuntimeError("transient embedder failure")
+            return super().embed(tokens)
+
+    p = platform
+    srv = RetrievalServer(p, _Flaky(p.table), batch_size=4)
+    futs = [srv.submit(_req(i, k=6)) for i in range(3)]
+    with pytest.raises(RuntimeError, match="transient"):
+        srv.flush()
+    assert not any(f.done() for f in futs)
+    assert srv.queue_depth == 3          # nothing dropped
+    srv.flush()
+    for f in futs:
+        assert len(f.result().rows) == 6
+
+
+def test_failed_chunk_never_reresolves_earlier_chunk(platform):
+    """First micro-batch resolves; the second raises mid-rank. The first
+    chunk's futures must keep their exact result objects (immutable),
+    and the failed chunk must stay fully pending."""
+    p = platform
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=2)
+    f_ok = [srv.submit(_req(i, k=5)) for i in range(2)]   # autoflushes
+    assert all(f.done() for f in f_ok)
+    first_results = [f.result() for f in f_ok]
+
+    f_bad = [srv.submit(_req(10 + i, k=9)) for i in range(1)]
+    orig_ranked = srv._ranked
+
+    def _boom(req, emb, rows):
+        raise RuntimeError("rank gather failed")
+
+    srv._ranked = _boom
+    try:
+        with pytest.raises(RuntimeError, match="rank gather"):
+            srv.flush()
+    finally:
+        srv._ranked = orig_ranked
+    # failed chunk: unresolved, still pending, retried successfully
+    assert not any(f.done() for f in f_bad) and srv.queue_depth == 1
+    srv.flush()
+    assert all(f.done() for f in f_bad)
+    # earlier chunk: same objects, byte-identical rows
+    for f, r0 in zip(f_ok, first_results):
+        assert f.result() is r0
+
+
+def test_mid_chunk_rank_failure_leaves_all_unresolved(platform):
+    """The raise happens after SOME results ranked — all-or-nothing
+    means even the already-ranked requests' futures stay unresolved."""
+    p = platform
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4)
+    futs = [srv.submit(_req(i, k=6)) for i in range(3)]
+    orig = srv._ranked
+    n_calls = [0]
+
+    def _boom_on_second(req, emb, rows):
+        n_calls[0] += 1
+        if n_calls[0] == 2:
+            raise RuntimeError("mid-chunk failure")
+        return orig(req, emb, rows)
+
+    srv._ranked = _boom_on_second
+    try:
+        with pytest.raises(RuntimeError, match="mid-chunk"):
+            srv.flush()
+    finally:
+        srv._ranked = orig
+    assert not any(f.done() for f in futs)   # incl. the ranked one
+    srv.flush()
+    results = [f.result() for f in futs]
+    for r in results:
+        assert _sorted(r.rows).tolist() == \
+            _sorted(p.oracle(r.query)).tolist()
+
+
+def test_future_set_is_idempotent(platform):
+    from repro.serve.engine import RetrievalFuture, RetrievalResult
+    srv = RetrievalServer(platform, _StubEmbedder(platform.table))
+    fut = RetrievalFuture(srv)
+    first = RetrievalResult(rows=np.asarray([1, 2]))
+    fut._set(first)
+    fut._set(RetrievalResult(rows=np.asarray([9])))   # must be ignored
+    assert fut.result() is first
+
+
+# ---------------------------------------------------------------------------
+# latency accounting -> QBS -> explain()
+# ---------------------------------------------------------------------------
+def test_latency_feeds_qbs_and_explain(platform):
+    p = platform
+    clk = _FakeClock()
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          clock=clk)
+    reqs = [_req(i, k=3, predicate=Q.NR("price", 20, 80))
+            for i in range(5)]
+    sig = srv.signature(reqs[0])
+    before = p.qbs.latency_quantiles(sig)
+    srv.serve(reqs)
+    lq = p.qbs.latency_quantiles(sig)
+    assert lq is not None and lq["n"] == (before["n"] if before else 0) + 5
+    assert lq["p50"] >= 0.0 and lq["p99"] >= lq["p50"]
+    # the signature the server coalesces under IS a plan signature: the
+    # session's explain() surfaces the measured service latency
+    emb = p.table.vector["img"][0]
+    q = Q.And.of(Q.NR("price", 20, 80), Q.VK.of("img", emb, 3))
+    ex = srv.session.explain([q])
+    frag = ex["fragments"][0]
+    assert frag["query"] == sig
+    assert frag["latency"] is not None and frag["latency"]["n"] == lq["n"]
+    st = srv.stats()
+    assert sig in st["by_signature"]
+    assert st["by_signature"][sig]["n"] == 5
+
+
+def test_qbs_latency_persist_roundtrip(tmp_path):
+    from repro.core.qbs import QBSTable
+    t = QBSTable()
+    t.record_latency("VK:img:k4:global", 0.01, n=3)
+    t.record_latency("And(NR:price,VK:img:k2:post)", 0.25)
+    path = str(tmp_path / "qbs.json")
+    t.save(path)
+    t2 = QBSTable.load(path)
+    assert t2.latency == t.latency
+    assert t2.latency_quantiles("VK:img:k4:global")["n"] == 3
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: mixed-length batches token-identical to per-request
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["olmo-1b", "hymba-1.5b"])
+def test_mixed_length_batch_parity(name):
+    """Batched generation over mixed-length prompts must be
+    token-identical to per-request generation (length-bucketed
+    padding-free batches; hymba exercises the cache-replay prefill)."""
+    cfg = get_config(name).reduced()
+    eng = ServeEngine(cfg, max_len=48, batch_size=4, seed=0)
+    rng = np.random.default_rng(7)
+    reqs = [GenRequest(rng.integers(1, cfg.vocab_size // 2, size=n)
+                       .astype(np.int32), 5)
+            for n in (5, 9, 7, 9)]
+    batched = eng.generate(reqs)
+    assert len(batched) == len(reqs)
+    for i, r in enumerate(reqs):
+        solo = eng.generate([r])[0]
+        np.testing.assert_array_equal(batched[i].tokens, solo.tokens,
+                                      err_msg=f"request {i}")
+
+
+def test_no_phantom_rows_in_short_batch():
+    """A final chunk smaller than batch_size runs at its true size (no
+    zero-padded phantom rows) and returns one result per request."""
+    cfg = get_config("olmo-1b").reduced()
+    eng = ServeEngine(cfg, max_len=32, batch_size=8, seed=0)
+    reqs = [GenRequest(np.arange(1, 7, dtype=np.int32), 4),
+            GenRequest(np.arange(2, 8, dtype=np.int32), 4)]
+    res = eng.generate(reqs)
+    assert len(res) == 2
+    for r in res:
+        assert r.tokens.shape == (4,)
+
+
+def test_embed_tokens_bucketing_padding_invariance(platform):
+    """RetrievalServer embeddings are padding-free: each mixed-length
+    prompt's embedding matches embedding it alone, and any permutation
+    of the batch produces identical per-prompt vectors."""
+    cfg = get_config("mqrld-embedder-100m").reduced()
+    emb_srv = EmbeddingServer(cfg, seed=0)
+    srv = RetrievalServer(platform, emb_srv)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 60, size=n).astype(np.int32)
+               for n in (4, 9, 6, 9, 4)]
+    got = srv._embed_tokens(prompts)
+    assert got.shape == (5, cfg.d_model)
+    for i, t in enumerate(prompts):
+        solo = np.asarray(emb_srv.embed(t[None, :]))[0]
+        np.testing.assert_allclose(got[i], solo, rtol=2e-5, atol=1e-6)
+    perm = [3, 0, 4, 1, 2]
+    got_p = srv._embed_tokens([prompts[i] for i in perm])
+    for j, i in enumerate(perm):
+        np.testing.assert_array_equal(got_p[j], got[i])
