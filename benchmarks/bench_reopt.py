@@ -1,0 +1,294 @@
+"""Online re-optimization — zero-downtime generation swaps (ISSUE 8).
+
+The paper's §5.2.2 Step 4 loop is usually shown offline: optimize the
+hyperspace transform against a workload, re-prepare, measure. This
+harness measures the ONLINE version — ``ReoptController`` tuning
+against live QBS traffic and installing the winner as a new index
+generation while a ``RetrievalServer`` keeps serving:
+
+  * before/after — closed-loop QPS, mean CBR, mean nodes scanned, and
+    a recall sample vs the brute-force oracle, measured on the same
+    skewed request mixture BEFORE the controller's cycle and AFTER its
+    swap. Recall must be 1.0 on both sides — the swap trades scan
+    efficiency, never exactness (results are compared by logical row
+    identity: a generation re-permutes physical layout);
+  * swap pause — wall time of every cooperative ``step()`` the serving
+    loop drives, grouped by what the step did. The pause a swap inflicts
+    on serving is the duration of the ONE step that returned
+    ``"swapped"`` (state pointers + cache flips); build/tune steps are
+    longer but happen between micro-batches by construction. Acceptance:
+    the swap step is bounded by one micro-batch service time;
+  * warm vs cold plan — latency of the first post-swap ``plan()`` for a
+    hot signature through the PREWARMED serving session (the controller
+    prewarms hot signatures under the incoming build id) versus a cold
+    session planning the same query from scratch;
+  * rollback — one-call ``rollback()`` restores the previous
+    generation; exactness is re-sampled on the rolled-back platform.
+
+The tuner is run with ``min_improvement = -10`` (always install the
+best candidate): the bench measures the MACHINERY — pause, warm plans,
+exactness across the swap — on every run, not only on seeds where BO
+finds a genuine win at smoke scale. The before/after efficiency delta
+is recorded as measured, whichever sign it has.
+
+Machine-readable output: every run (smoke included) rewrites
+``BENCH_reopt.json`` at the repo root — before/after blocks, per-kind
+step times, swap pause, warm/cold plan latency, rollback flag, git
+commit + dirty stamp of the tree that actually ran.
+
+``--smoke`` (also via ``benchmarks.run --smoke``): toy sizes, still
+exercising every section.
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import Csv, git_stamp
+from repro.core import query as Q
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+from repro.core.reopt import ReoptConfig, ReoptController
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+N_ROWS = 12_000
+BATCH = 16
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_reopt.json")
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+def _platform(n, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)).astype(np.float32) * 6
+    lab = rng.integers(0, 8, n)
+    img = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    t = (MMOTable("reopt_bench").add_vector("img", img)
+         .add_numeric("price", price))
+    p = MQRLD(t, seed=seed)
+    p.prepare(min_leaf=32, max_leaf=512)
+    return p
+
+
+class _TableEmbedder:
+    """Deterministic stub (prompt -> stored vector + eps): the harness
+    measures the serving loop, engine, and reopt machinery — not an
+    embedding backbone — and determinism keeps oracle checks meaningful
+    across generations."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def embed(self, tokens):
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["img"][rows] + 0.01
+
+
+def _requests(n_req, n_rows, seed):
+    """Skewed mixture: most requests probe one hot region of the table
+    (the query-aware tuner's reason to exist), three plan signatures."""
+    rng = np.random.default_rng(seed)
+    hot = n_rows // 8
+    out = []
+    for _ in range(n_req):
+        row = int(rng.integers(0, hot if rng.random() < 0.8 else n_rows))
+        r = rng.random()
+        if r < 0.5:
+            out.append(RetrievalRequest(
+                tokens=np.asarray([row, 1], np.int32), attr="img", k=10))
+        elif r < 0.8:
+            out.append(RetrievalRequest(
+                tokens=np.asarray([row, 1], np.int32), attr="img", k=20))
+        else:
+            out.append(RetrievalRequest(
+                tokens=np.asarray([row, 1], np.int32), attr="img", k=8,
+                predicate=Q.NR("price", 20, 80)))
+    return out
+
+
+def _logical(ids, rows):
+    return {int(ids[r]) for r in np.asarray(rows)}
+
+
+def _measure(p, srv, reqs, rng, n_check=24):
+    """Closed-loop serve of ``reqs``: QPS over the serve span, recall
+    sample vs the oracle (logical row identity), mean CBR / nodes from
+    a recorded replay of a query sample through the planned path."""
+    t0 = time.perf_counter()
+    results = srv.serve(reqs)
+    span = time.perf_counter() - t0
+    ids = p.view().row_ids
+    pick = rng.choice(len(results), min(n_check, len(results)),
+                      replace=False)
+    recalls = []
+    for i in pick:
+        got = _logical(ids, results[i].rows)
+        truth = _logical(ids, p.oracle(results[i].query))
+        recalls.append(len(got & truth) / max(1, len(truth)))
+    stats = [p.execute(r.query, record=False)[1]
+             for r in (results[i] for i in pick[:8])]
+    return {
+        "qps": len(reqs) / max(span, 1e-9),
+        "recall": float(np.mean(recalls)),
+        "n_checked": int(len(pick)),
+        "mean_cbr": float(np.mean([s.cbr for s in stats])),
+        "mean_nodes": float(np.mean([s.nodes_scanned for s in stats])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# bench
+# ---------------------------------------------------------------------------
+def run(csv: Csv):
+    n = common.smoke_n(N_ROWS, 1_500)
+    n_req = common.smoke_n(256, 48)
+    p = _platform(n)
+    rng = np.random.default_rng(7)
+    head, dirty = git_stamp()
+    bench = {
+        "smoke": bool(common.SMOKE), "n_rows": n, "batch_size": BATCH,
+        "n_req": n_req, "git_commit": head, "git_dirty": dirty,
+    }
+
+    srv = RetrievalServer(p, _TableEmbedder(p.table), batch_size=BATCH)
+    cfg = ReoptConfig(
+        interval_s=0.0, min_queries=8,
+        sample_rows=common.smoke_n(1024, 256),
+        max_workload=common.smoke_n(12, 6),
+        n_params=common.smoke_n(4, 2),
+        n_init=common.smoke_n(6, 3),
+        tune_cycles=common.smoke_n(2, 1), evals_per_step=2,
+        min_improvement=-10.0,        # always install (see module doc)
+        prewarm_sizes=(1, 2, 4, 8), seed=0)
+    ctl = ReoptController(p, config=cfg)
+    srv.attach_reopt(ctl)
+
+    # time every cooperative step the serving loop drives
+    step_times = []
+    orig_step = ctl.step
+
+    def timed_step():
+        t0 = time.perf_counter()
+        evt = orig_step()
+        step_times.append((evt, time.perf_counter() - t0))
+        return evt
+    ctl.step = timed_step
+
+    # ---- BEFORE: warm compiles + measured closed-loop run --------------
+    srv.serve(_requests(n_req, n, seed=50))            # compile shapes
+    srv.serve(_requests(n_req, n, seed=51))            # QBS-seeded shapes
+    reqs = _requests(n_req, n, seed=52)
+    before = _measure(p, srv, reqs, rng)
+    bench["before"] = before
+    csv.add("reopt/before_qps", before["qps"],
+            f"recall={before['recall']:.3f} cbr={before['mean_cbr']:.3f} "
+            f"nodes={before['mean_nodes']:.1f}")
+
+    # ---- serve under load until the controller swaps -------------------
+    gen0 = p.generation
+    drive = _requests(common.smoke_n(512, 96), n, seed=53)
+    i, batch_s = 0, []
+    while ctl.n_swaps == 0 and i < 4 * len(drive):
+        req = drive[i % len(drive)]
+        ids = p.view().row_ids                         # batch-epoch map
+        f = srv.submit(req)
+        t0 = time.perf_counter()
+        served = srv.poll()                            # batch + step()
+        if served:
+            batch_s.append((time.perf_counter() - t0) / served * BATCH)
+        if f.done():                                   # exact across swap
+            got = _logical(ids, f.result().rows)
+            truth = _logical(p.view().row_ids,
+                             p.oracle(f.result().query))
+            assert got == truth, "served result diverged from oracle"
+        i += 1
+    srv.flush()
+    swapped = ctl.n_swaps >= 1
+    bench["swapped"] = swapped
+    bench["generations"] = p.generation - gen0
+    bench["polls_to_swap"] = i
+
+    by_kind = {}
+    for evt, s in step_times:
+        by_kind.setdefault(evt, []).append(s)
+    bench["step_ms_by_kind"] = {
+        k: {"max": float(np.max(v) * 1e3), "n": len(v)}
+        for k, v in by_kind.items()}
+    swap_ms = float(np.max(by_kind["swapped"]) * 1e3) if swapped \
+        else float("nan")
+    batch_ms = float(np.median(batch_s) * 1e3) if batch_s else float("nan")
+    bench["swap_pause_ms"] = swap_ms
+    bench["full_batch_service_ms"] = batch_ms
+    csv.add("reopt/swap_pause_ms", swap_ms,
+            f"full_batch_service_ms={batch_ms:.1f} swapped={swapped} "
+            f"polls={i}")
+
+    # ---- AFTER: same mixture on the new generation ---------------------
+    # one unmeasured pass first: the new generation's compiled-shape
+    # universe warms exactly like "before" did, so the comparison is
+    # steady-state vs steady-state (the swap's one-off costs are
+    # reported separately: swap_pause_ms, plan_warm/cold below)
+    srv.serve(_requests(n_req, n, seed=54))
+    after = _measure(p, srv, _requests(n_req, n, seed=52), rng)
+    bench["after"] = after
+    csv.add("reopt/after_qps", after["qps"],
+            f"recall={after['recall']:.3f} cbr={after['mean_cbr']:.3f} "
+            f"nodes={after['mean_nodes']:.1f} "
+            f"qps_ratio={after['qps'] / max(before['qps'], 1e-9):.2f}")
+
+    # ---- warm vs cold plan latency after the swap ----------------------
+    # warm: the serving session's cache (the controller prewarmed hot
+    # signatures under the incoming build id, so post-swap plans are
+    # hits); cold: a fresh session building the same logical plan from
+    # scratch, one fresh session per rep so every call is a true miss
+    hot_q = srv.serve([_requests(1, n, seed=52)[0]])[0].query
+    reps = 20
+    hits0 = srv.session.cache_hits
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        srv.session.plan([hot_q])
+    warm_ms = (time.perf_counter() - t0) / reps * 1e3
+    assert srv.session.cache_hits == hits0 + reps, "warm plans missed"
+    cold = []
+    for _ in range(reps):
+        sess_c = p.session()
+        t0 = time.perf_counter()
+        sess_c.plan([hot_q])
+        cold.append(time.perf_counter() - t0)
+    cold_ms = float(np.median(cold)) * 1e3
+    bench["plan_warm_ms"] = warm_ms
+    bench["plan_cold_ms"] = cold_ms
+    csv.add("reopt/plan_warm_ms", warm_ms,
+            f"cold_ms={cold_ms:.3f} "
+            f"ratio={cold_ms / max(warm_ms, 1e-9):.1f}x")
+
+    # ---- rollback ------------------------------------------------------
+    rollback_ok = False
+    if swapped:
+        p.rollback()
+        r = srv.serve([_requests(1, n, seed=99)[0]])[0]
+        ids = p.view().row_ids
+        rollback_ok = _logical(ids, r.rows) == \
+            _logical(ids, p.oracle(r.query))
+    bench["rollback_ok"] = bool(rollback_ok)
+    csv.add("reopt/rollback_ok", float(rollback_ok),
+            f"generation={p.generation}")
+
+    bench["csv"] = [[name, v, d] for name, v, d in csv.rows]
+    with open(_JSON_PATH, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.normpath(_JSON_PATH)}")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        common.SMOKE = True
+    c = Csv()
+    run(c)
+    c.emit()

@@ -21,7 +21,7 @@ def main() -> None:
                             bench_clustering, bench_engine, bench_highdim,
                             bench_hybrid, bench_learned_index,
                             bench_measurement, bench_range_knn,
-                            bench_scalability, bench_serve,
+                            bench_reopt, bench_scalability, bench_serve,
                             bench_transform, bench_vector_index)
     modules = [
         ("table6", bench_clustering),
@@ -36,6 +36,7 @@ def main() -> None:
         ("fig24", bench_hybrid),
         ("engine", bench_engine),
         ("serve", bench_serve),
+        ("reopt", bench_reopt),
         ("fig25_26", bench_highdim),
         ("fig27", bench_ablation),
     ]

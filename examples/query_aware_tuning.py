@@ -1,15 +1,24 @@
-"""Query-aware optimization end to end: MORBO over the hyperspace
-transformation (Algorithm 1) + sibling reordering (Algorithm 3), driven by
-the QBS table — the paper's full optimization loop.
+"""Query-aware optimization ONLINE: the paper's §5.2.2 Step 4 loop run
+against a live platform — serve a skewed workload, let the background
+``ReoptController`` tune the hyperspace transform on the measured QBS
+traffic, build the winner as a new index generation beside the serving
+one, and swap it in with zero downtime (then roll it back, from the
+same one-call API).
 
     PYTHONPATH=src python examples/query_aware_tuning.py
+
+Contrast examples of the OFFLINE loop (``morbo_minimize`` +
+``objectives_for_morbo``): there the platform is re-prepared in place
+between evaluations — queries stop while the index rebuilds. Here the
+serving index is never touched until the single atomic ``swap()``:
+every ``execute`` before, during, and after the cycle is oracle-exact.
 """
 import numpy as np
 
 from repro.core import query as Q
 from repro.core.lake import MMOTable
-from repro.core.morbo import morbo_minimize
 from repro.core.platform import MQRLD
+from repro.core.reopt import ReoptConfig, ReoptController
 
 
 def main():
@@ -21,43 +30,63 @@ def main():
     table = (MMOTable("tune").add_vector("v", vec)
              .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32)))
     p = MQRLD(table, seed=0)
+    p.prepare(use_transform=True, use_lpgf=False, min_leaf=16, max_leaf=256)
+    p.fold_mode = "background"           # appends never pay the merge
 
-    # skewed workload (the query-aware mechanism's reason to exist)
+    # skewed live traffic (the query-aware mechanism's reason to exist):
+    # hot vector probes + one filtered archetype, recorded into the QBS
     hot = vec[rng.integers(0, 400, 12)]
     workload = [Q.VK.of("v", h, 10) for h in hot]
+    workload += [Q.And.of(Q.NR("price", 20, 80), Q.VK.of("v", h, 8))
+                 for h in hot[:4]]
+    base = [p.execute(q)[1] for q in workload]       # record=True: QBS
+    print(f"serving gen {p.generation}: "
+          f"cbr={np.mean([s.cbr for s in base]):.3f} "
+          f"time={np.mean([s.time_s for s in base]) * 1e3:.2f}ms")
 
-    p.prepare(use_transform=True, use_lpgf=False, min_leaf=16, max_leaf=256)
-    base = [p.execute(q, record=False)[1] for q in workload]
-    print(f"Initialized_T: cbr={np.mean([s.cbr for s in base]):.3f} "
-          f"nodes={np.mean([s.nodes_scanned for s in base]):.1f}")
+    # the background tuner: each step() is one bounded unit of work the
+    # serving loop runs between micro-batches (RetrievalServer.poll()
+    # drives it automatically via attach_reopt; here we step by hand)
+    ctl = ReoptController(p, config=ReoptConfig(
+        interval_s=0.0, min_queries=8, sample_rows=512, max_workload=10,
+        n_params=4, n_init=5, tune_cycles=2, evals_per_step=2, seed=0))
+    events, steps = [], 0
+    while ctl.n_swaps == 0 and steps < 80:
+        evt = ctl.step()
+        steps += 1
+        if evt != events[-1] if events else True:
+            events.append(evt)
+        if evt == "no-improvement":      # keep measuring, try again
+            for q in workload:
+                p.execute(q)
+    print(f"reopt: {steps} cooperative steps -> {' -> '.join(events)}")
 
-    # Algorithm 1: MORBO over (theta x2, log-scale deltas x2)
-    f = p.objectives_for_morbo(workload)
-    res = morbo_minimize(
-        f, (np.array([-0.6] * 4), np.array([0.6] * 4)),
-        n_objectives=3, n_init=5, iters=3, n_tr=2, batch=2, n_cand=64,
-        seed=0)
-    best = res.best_scalarized([0.2, 0.6, 0.2])
-    print(f"MORBO: {len(res.y)} evaluations, "
-          f"{int(res.pareto.sum())} Pareto points, "
-          f"{res.n_restarts} trust-region restarts")
-    p.prepare(use_transform=True, use_lpgf=False, min_leaf=16, max_leaf=256,
-              theta=best[:2], delta_scales=best[2:])
-    opt = [p.execute(q, record=False)[1] for q in workload]
-    print(f"Optimized_T:   cbr={np.mean([s.cbr for s in opt]):.3f} "
-          f"nodes={np.mean([s.nodes_scanned for s in opt]):.1f}")
+    if ctl.n_swaps:
+        win = next(e for e in ctl.history if e.kind == "swap")
+        opt = [p.execute(q, record=False)[1] for q in workload]
+        print(f"swapped to gen {win.gen_id}: "
+              f"cbr={np.mean([s.cbr for s in opt]):.3f} "
+              f"baseline->best objectives {win.baseline} -> {win.best}")
 
-    # Algorithm 3 on top
-    changed = p.optimize_index(workload)
-    post = [p.execute(q, record=False)[1] for q in workload]
-    print(f"Optimized_Index ({changed} lists reordered): "
-          f"nodes={np.mean([s.nodes_scanned for s in post]):.1f}")
+        # background fold: appends mark fold_due; the controller folds
+        # beside and swaps — the appender never blocks on the merge
+        p.append(numeric={"price": np.float32([55.0])},
+                 vector={"v": hot[:1] + 0.1}, fold=None)
+        p.auto_fold_ratio = 1e-9
+        while p.n_delta:
+            ctl.step()
+        print(f"background fold drained the delta (gen {p.generation})")
 
-    # every step keeps exactness
-    q = workload[0]
-    assert set(p.execute(q, record=False)[0].tolist()) == \
-        set(p.oracle(q).tolist())
-    print("exactness preserved through all optimization stages")
+        # one-call rollback: the previous generation was retained
+        p.rollback()
+        print(f"rolled back (gen {p.generation})")
+
+    # every phase keeps exactness — including across swap and rollback
+    # (physical layout changed, so compare logically via the oracle)
+    for q in workload[:4]:
+        assert set(p.execute(q, record=False)[0].tolist()) == \
+            set(p.oracle(q).tolist())
+    print("exactness preserved through tuning, swap, fold, rollback")
 
 
 if __name__ == "__main__":

@@ -140,5 +140,62 @@ print(f"ok: {len(levels)} levels, coalesce/fifo ratio "
       f"{cmp_['ratio']:.1f}x, commit {bench['git_commit']}")
 EOF
 
+# online re-optimization suite: swap-under-load exactness, rollback
+# round-trips, background-vs-inline fold equivalence, crash-mid-save
+# recovery, adaptive batching window, and the seeded fuzz interleaving —
+# runs inside tier-1 above, but the explicit step keeps the subsystem's
+# suite greppable under a stable heading (mirrors the sharding rerun).
+echo "== online re-optimization suite =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q tests/test_reopt.py
+
+# reopt bench: background tuning under live serving, zero-downtime swap.
+# The explicit step (bench_reopt also runs inside benchmarks.run below)
+# keeps the before/after QPS + swap-pause rows greppable and rewrites
+# BENCH_reopt.json for the guard that follows.
+echo "== online re-optimization smoke benchmark (swap pause, before/after) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m benchmarks.bench_reopt --smoke
+
+# BENCH_reopt.json must record a completed swap with its pause, the
+# before/after QPS + recall blocks (recall exactly 1.0 on BOTH sides —
+# the zero-downtime claim is exactness across the swap), warm/cold plan
+# latency, a successful rollback, and an accurate commit stamp.
+echo "== BENCH_reopt.json guard =="
+HEAD_SHORT="$(git rev-parse --short HEAD)" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json
+import os
+import sys
+
+with open("BENCH_reopt.json") as f:
+    bench = json.load(f)
+if not bench.get("git_commit") or bench["git_commit"] == "unknown":
+    sys.exit("BENCH_reopt.json: missing git_commit tag")
+if bench["git_commit"] != os.environ["HEAD_SHORT"]:
+    sys.exit(f"BENCH_reopt.json: stamped {bench['git_commit']} but the "
+             f"run just executed at HEAD {os.environ['HEAD_SHORT']}")
+if "git_dirty" not in bench:
+    sys.exit("BENCH_reopt.json: missing git_dirty flag")
+if not bench.get("swapped"):
+    sys.exit("BENCH_reopt.json: no generation swap completed")
+for side in ("before", "after"):
+    blk = bench.get(side) or {}
+    for key in ("qps", "recall", "mean_cbr", "n_checked"):
+        if key not in blk:
+            sys.exit(f"BENCH_reopt.json: {side} block lacks {key}")
+    if blk["recall"] != 1.0:
+        sys.exit(f"BENCH_reopt.json: {side} recall {blk['recall']} != 1.0 "
+                 f"(served results diverged from the oracle)")
+for key in ("swap_pause_ms", "plan_warm_ms", "plan_cold_ms"):
+    if key not in bench:
+        sys.exit(f"BENCH_reopt.json: missing {key}")
+if not bench.get("rollback_ok"):
+    sys.exit("BENCH_reopt.json: rollback did not restore an exact platform")
+print(f"ok: swap pause {bench['swap_pause_ms']:.2f}ms, before/after qps "
+      f"{bench['before']['qps']:.0f}/{bench['after']['qps']:.0f}, "
+      f"recall 1.0 both sides, commit {bench['git_commit']}")
+EOF
+
 echo "== benchmarks (--smoke) =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke

@@ -1,17 +1,40 @@
 """Index persistence: the cluster tree + enhanced features + transform live
 next to the MMO table in the lake, so a platform restarts without a rebuild
-(the paper's offline-build / online-serve split)."""
+(the paper's offline-build / online-serve split).
+
+Versioned snapshot layout (crash-atomic, rollback-capable):
+
+    <directory>/
+      CURRENT            -> "gen-0003"   (the serving snapshot)
+      gen-0002/          table/ index/ qbs.json platform.json [quant.npz
+      gen-0003/           delta.npz]    — one COMPLETE platform state each
+
+``save_platform`` materializes the whole snapshot in a hidden temp dir
+and ``os.replace``s it to its ``gen-XXXX`` name, then flips ``CURRENT``
+through the same write-temp + rename step — a crash at ANY point leaves
+either the old serving snapshot fully intact or the new one fully
+installed, never a mixed-generation directory (the pre-versioned layout
+wrote files in place and even ``os.remove``d stale snapshots mid-save).
+``load_platform`` resolves ``CURRENT`` (legacy flat directories still
+load); ``rollback_platform`` flips ``CURRENT`` back to the previous
+retained generation — the durable end of ``MQRLD.rollback()``. Retention
+is bounded (``_KEEP_GENERATIONS``): the serving snapshot plus its
+rollback target survive, older ones are pruned after the flip."""
 from __future__ import annotations
 
 import json
 import os
-from typing import Optional
+import shutil
+import uuid
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core.index import ClusterTree
 from repro.core.lake import MMOTable
 from repro.core.transform import HyperspaceTransform
+
+_KEEP_GENERATIONS = 2   # serving + rollback target
 
 
 def save_index(directory: str, tree: ClusterTree,
@@ -67,13 +90,53 @@ def load_index(directory: str):
     return tree, z["enhanced"], transform
 
 
-def save_platform(platform, directory: str):
-    """Lake table + index + transform in one place; live (un-folded)
-    delta rows are persisted alongside so a restart keeps serving the
-    freshest data without a fold. The serving topology
-    (``default_shards``) rides in platform.json so a reloaded platform
-    rebuilds its T-sharded device layout on first query — the sharded
-    state itself is derived (pad + permute + upload), never stored."""
+# ---------------------------------------------------------------- layout
+def _gen_name(g: int) -> str:
+    return f"gen-{g:04d}"
+
+
+def list_generations(directory: str) -> List[int]:
+    """Generation numbers retained under ``directory``, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("gen-") and os.path.isdir(
+                os.path.join(directory, d)):
+            try:
+                out.append(int(d[4:]))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def current_generation(directory: str) -> Optional[int]:
+    """The generation ``CURRENT`` points at, or None (legacy layout /
+    empty directory)."""
+    cur = os.path.join(directory, "CURRENT")
+    if not os.path.exists(cur):
+        return None
+    with open(cur) as f:
+        name = f.read().strip()
+    try:
+        return int(name[4:]) if name.startswith("gen-") else None
+    except ValueError:
+        return None
+
+
+def _set_current(directory: str, g: int):
+    """Atomically flip the ``CURRENT`` pointer (write-temp + rename —
+    the commit point of every save and rollback)."""
+    tmp = os.path.join(directory, f".CURRENT.tmp-{uuid.uuid4().hex[:8]}")
+    with open(tmp, "w") as f:
+        f.write(_gen_name(g))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(directory, "CURRENT"))
+
+
+def _write_snapshot(platform, directory: str):
+    """One complete platform state into ``directory`` (assumed fresh)."""
     platform.table.save(os.path.join(directory, "table"))
     save_index(os.path.join(directory, "index"), platform.tree,
                platform.enhanced, platform.transform,
@@ -81,14 +144,14 @@ def save_platform(platform, directory: str):
     platform.qbs.save(os.path.join(directory, "qbs.json"))
     with open(os.path.join(directory, "platform.json"), "w") as f:
         json.dump({"default_shards": platform.default_shards,
-                   "default_precision": platform.default_precision}, f)
+                   "default_precision": platform.default_precision,
+                   "generation": getattr(platform, "generation", 0)}, f)
     # mixed-precision tile planes: when an engine matching the persisted
     # default precision has quantized its BASE layouts, snapshot them so
     # a reloaded platform serves without re-quantizing (load feeds the
     # arrays back through ``quant_cache``; shapes are re-validated there,
     # so a stale snapshot only costs a requantize, never wrong results).
     # int8 only — bf16 planes are a cast, cheaper to rebuild than store.
-    quant_path = os.path.join(directory, "quant.npz")
     planes = None
     if platform.default_precision == "int8":
         for eng in getattr(platform, "_engines", {}).values():
@@ -98,10 +161,7 @@ def save_platform(platform, directory: str):
                 planes = eng.snapshot_planes()
                 break
     if planes:
-        np.savez_compressed(quant_path, **planes)
-    elif os.path.exists(quant_path):   # overwrite of a dirtier snapshot
-        os.remove(quant_path)
-    delta_path = os.path.join(directory, "delta.npz")
+        np.savez_compressed(os.path.join(directory, "quant.npz"), **planes)
     d = platform.delta
     if d is not None and d.m:
         arrays = {f"num__{k}": d.live_numeric(k) for k in d.numeric_keys}
@@ -109,15 +169,76 @@ def save_platform(platform, directory: str):
                        for k in d.vector_dims})
         if d.raw_uri is not None:
             arrays["raw_uri"] = np.asarray(d.raw_uri, dtype=np.str_)
-        np.savez_compressed(delta_path, **arrays)
-    elif os.path.exists(delta_path):   # overwrite of a dirtier snapshot
-        os.remove(delta_path)
+        np.savez_compressed(os.path.join(directory, "delta.npz"), **arrays)
 
 
-def load_platform(directory: str, shards: Optional[int] = None):
+def save_platform(platform, directory: str):
+    """Lake table + index + transform in one crash-atomic generation
+    snapshot; live (un-folded) delta rows are persisted alongside so a
+    restart keeps serving the freshest data without a fold. The serving
+    topology (``default_shards``) rides in platform.json so a reloaded
+    platform rebuilds its T-sharded device layout on first query — the
+    sharded state itself is derived (pad + permute + upload), never
+    stored.
+
+    Lifecycle: the snapshot lands as ``<directory>/gen-XXXX`` (XXXX =
+    ``platform.generation``, monotone across prepare/fold/swap/rollback)
+    via a temp-dir + ``os.replace`` install, and ``CURRENT`` flips to it
+    as the single commit point — a crash mid-save leaves the previous
+    snapshot serving. The previous generation is retained for
+    ``rollback_platform``; older ones are pruned. Sets
+    ``platform.snapshot_dir`` so ``MQRLD.rollback()`` can fall back to
+    disk when no in-memory previous generation exists."""
+    os.makedirs(directory, exist_ok=True)
+    # never overwrite a retained snapshot (a re-save of an unchanged
+    # generation — e.g. only appends since the last save — takes the
+    # next free number): the CURRENT flip stays the only commit point
+    g = getattr(platform, "generation", 0)
+    while os.path.isdir(os.path.join(directory, _gen_name(g))):
+        g += 1
+    target = os.path.join(directory, _gen_name(g))
+    tmp = os.path.join(directory, f".tmp-{uuid.uuid4().hex[:8]}")
+    os.makedirs(tmp)
+    try:
+        _write_snapshot(platform, tmp)
+        os.replace(tmp, target)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _set_current(directory, g)         # commit point
+    # bounded retention: serving + rollback target (the serving
+    # generation is never pruned, whatever its number)
+    gens = list_generations(directory)
+    keep = set(gens[-_KEEP_GENERATIONS:]) | {g}
+    for old in gens:
+        if old not in keep:
+            shutil.rmtree(os.path.join(directory, _gen_name(old)),
+                          ignore_errors=True)
+    platform.snapshot_dir = directory
+
+
+def _resolve_snapshot(directory: str,
+                      generation: Optional[int] = None) -> str:
+    """The directory holding the flat snapshot files: a ``gen-XXXX``
+    subdir in the versioned layout, ``directory`` itself for legacy
+    flat snapshots."""
+    if generation is not None:
+        return os.path.join(directory, _gen_name(generation))
+    g = current_generation(directory)
+    return directory if g is None else os.path.join(directory,
+                                                    _gen_name(g))
+
+
+def load_platform(directory: str, shards: Optional[int] = None,
+                  generation: Optional[int] = None):
     """Reconstruct a ready-to-query MQRLD without rebuilding the index
     (un-folded delta rows, when present, are re-appended — folding is
     left to the caller / the auto-fold policy).
+
+    Resolves the versioned layout through ``CURRENT`` (``generation``
+    pins a specific retained snapshot instead — the durable-rollback
+    read path); a directory without ``CURRENT`` loads as a legacy flat
+    snapshot.
 
     Shard-aware layout rebuild: the saved ``default_shards`` topology
     is restored (``shards`` overrides it — e.g. the restarted host has
@@ -127,6 +248,8 @@ def load_platform(directory: str, shards: Optional[int] = None):
     between hosts with different meshes."""
     from repro.core.platform import MQRLD
     from repro.core.qbs import QBSTable
+    root = directory
+    directory = _resolve_snapshot(directory, generation)
     table = MMOTable.load(os.path.join(directory, "table"))
     tree, enhanced, transform = load_index(os.path.join(directory, "index"))
     p = MQRLD(table)
@@ -140,6 +263,9 @@ def load_platform(directory: str, shards: Optional[int] = None):
             pconf = json.load(f)
         p.default_shards = pconf.get("default_shards")
         p.default_precision = pconf.get("default_precision", "fp32")
+        p.generation = int(pconf.get("generation", 0))
+    if directory != root:
+        p.snapshot_dir = root     # versioned layout: disk rollback works
     quant_path = os.path.join(directory, "quant.npz")
     if os.path.exists(quant_path):
         z = np.load(quant_path, allow_pickle=False)
@@ -174,3 +300,43 @@ def load_platform(directory: str, shards: Optional[int] = None):
                if "raw_uri" in z.files else None)
         p.append(numeric=numeric, vector=vector, raw_uri=uri, fold=False)
     return p
+
+
+def rollback_platform(directory: str, into=None,
+                      shards: Optional[int] = None):
+    """Restore the previous retained generation from disk — the durable
+    end of ``MQRLD.rollback()``.
+
+    Loads the newest generation BELOW the one ``CURRENT`` points at and
+    flips ``CURRENT`` back to it (atomic, same rename step as save).
+    With ``into`` set, the loaded state is grafted onto that live
+    platform in place — its ``build_id`` bumps so cached plans, engines,
+    and device state invalidate exactly like any index change — and the
+    same object is returned; otherwise a fresh platform is returned."""
+    cur = current_generation(directory)
+    if cur is None:
+        raise RuntimeError(f"{directory!r} has no versioned snapshots "
+                           "(no CURRENT pointer) — nothing to roll back")
+    prior = [g for g in list_generations(directory) if g < cur]
+    if not prior:
+        raise RuntimeError(f"no generation older than {_gen_name(cur)} "
+                           "retained on disk")
+    target = max(prior)
+    p = load_platform(directory, shards=shards, generation=target)
+    _set_current(directory, target)    # commit point
+    if into is None:
+        return p
+    for attr in ("raw_table", "table", "tree", "meta", "enhanced",
+                 "transform", "layout", "report", "qbs", "delta",
+                 "default_shards", "default_precision", "_quant_cache"):
+        setattr(into, attr, getattr(p, attr))
+    into.delta_epoch += 1
+    into._view_cache = None
+    into._oracle_cache.clear()
+    into._engines.clear()
+    into._fold_requested = False
+    into._prev_gen = None
+    into.build_id += 1                 # monotone: plans can never alias
+    into.generation += 1
+    into.snapshot_dir = directory
+    return into

@@ -221,6 +221,16 @@ class ExecutablePlan:
         for i in lp.scalar_idx:         # work is not in engine counters)
             results[i] = p.execute(self.norm[i], record=False)[0]
         stats.time_s = time.time() - t0
+        # tuner feedback: one representative AST per signature per batch
+        # (with the batch's count) into the QBS workload ring — what the
+        # online re-optimization controller replays against candidate
+        # transforms
+        reps: Dict[str, list] = {}
+        for q, frag in zip(self.norm, lp.fragments):
+            slot = reps.setdefault(frag.signature, [q, 0])
+            slot[1] += 1
+        for sig, (q, cnt) in reps.items():
+            p.qbs.record_workload(sig, q, cnt)
         return results, stats  # type: ignore[return-value]
 
     # ------------------------------------------------------------- explain
@@ -378,11 +388,17 @@ class Session:
         dl = self.device_loop if device_loop is None else device_loop
         shards = (self.shards or 0) if dl else 0
         if self._cache_build != self.platform.build_id:
-            # prepare() rebuilt the index: every cached plan is stale,
-            # and keeping dead-build entries would grow without bound
-            # in a long-lived serving process
-            self._cache.clear()
-            self._cache_build = self.platform.build_id
+            # prepare()/fold()/swap() changed the index: dead-build
+            # entries are stale and would grow without bound in a
+            # long-lived serving process — but entries prewarmed FOR
+            # this build (reopt warms the incoming generation's hot
+            # signatures before the swap) must survive the flip, or the
+            # first post-swap batch pays the cold-plan cost the warm-up
+            # existed to avoid
+            b = self.platform.build_id
+            self._cache = {k: v for k, v in self._cache.items()
+                           if k[-1] == b}
+            self._cache_build = b
         key = (tuple(Q.signature(q) for q in norm), dl, shards,
                self.precision, self.platform.build_id)
         logical = self._cache.get(key)
@@ -394,6 +410,35 @@ class Session:
             logical = build_logical_plan(norm, dl, shards)
             self._cache[key] = logical
         return ExecutablePlan(self, logical, queries, norm, hit)
+
+    def prewarm(self, queries: Sequence[Q.Query], *,
+                build_id: Optional[int] = None,
+                device_loop: Optional[bool] = None,
+                sizes: Sequence[int] = (1,)) -> int:
+        """Insert plan skeletons for the given query shapes, keyed under
+        ``build_id`` (default: the current build) — the swap warm-up
+        path. The reopt controller calls this with ``build_id =
+        platform.build_id + 1`` (the id the incoming generation will
+        serve under) and the pow2 batch ``sizes`` the server's
+        coalescing emits, so the first post-swap micro-batch of every
+        hot signature is a plan-cache HIT instead of paying
+        plannability analysis + job-layout derivation at serving time.
+        Returns the number of skeletons inserted (already-cached shapes
+        are skipped)."""
+        dl = self.device_loop if device_loop is None else device_loop
+        shards = (self.shards or 0) if dl else 0
+        b = self.platform.build_id if build_id is None else build_id
+        n_new = 0
+        for q in queries:
+            norm = Q.normalize(q)
+            sig = Q.signature(norm)
+            for size in sizes:
+                key = ((sig,) * int(size), dl, shards, self.precision, b)
+                if key not in self._cache:
+                    self._cache[key] = build_logical_plan(
+                        [norm] * int(size), dl, shards)
+                    n_new += 1
+        return n_new
 
     def signature(self, query: Q.Query) -> str:
         """The archetype string ``plan()`` would key this query under

@@ -58,6 +58,36 @@ far cheaper than a cold rebuild — and bumps ``build_id`` so cached
 ``LogicalPlan``s invalidate cleanly. Un-folded appends only advance
 ``delta_epoch``, which engine state and plan execution check at execute
 time; a warm plan stays warm across appends.
+
+Index generations (online re-optimization + zero-downtime maintenance):
+every heavyweight index change can be built BESIDE the serving state and
+installed atomically, instead of mutating in place while queries wait.
+``build_generation(theta=..., delta_scales=...)`` runs the full feature
+representation + index build over the current data (base + the live
+delta rows present at build start) with a perturbed hyperspace transform
+— the output of the background MORBO tuner (``repro.core.reopt``) — and
+``build_fold_generation()`` runs the incremental fold the same way, on
+COPIES of the tree/enhanced state, so neither touches what queries are
+executing against. ``swap(gen)`` then installs a built generation in one
+bounded step: state pointers flip, ``build_id`` bumps (cached plans and
+device state invalidate exactly like ``prepare()``), delta rows appended
+AFTER the build started carry over into a fresh delta region (freshness
+is never lost to a swap), and engines prewarmed against the incoming
+generation (``repro.core.reopt`` warm-up) replace the stale ones, so the
+first post-swap batch is not a cold trace. The previous serving state is
+retained in memory — ``rollback()`` restores it (including every row
+appended since the swap) in one call; ``repro.core.persist`` retains
+generations on disk (``gen-XXXX/`` + ``CURRENT``) for durable rollback
+across restarts. Every path stays oracle-exact before, during, and
+after a swap: only WHICH transform/index serves changes, never the row
+set a query answers over.
+
+Background folds: ``fold_mode = "background"`` makes the auto-fold
+trigger in ``append()`` non-blocking — instead of folding inline (the
+caller pays the merge), the platform marks ``fold_due`` and the attached
+``ReoptController``/serving loop builds the fold generation beside and
+swaps it between micro-batches. ``fold_mode = "inline"`` (default)
+keeps the original blocking behavior.
 """
 from __future__ import annotations
 
@@ -85,6 +115,125 @@ class LeafMeta:
     vec_radius: Dict[str, np.ndarray]     # attr -> (L,)
     num_lo: Dict[str, np.ndarray]         # attr -> (L,)
     num_hi: Dict[str, np.ndarray]
+
+
+def build_leaf_meta(tree: ClusterTree, table: MMOTable) -> LeafMeta:
+    """Exact original-space pruning metadata for every leaf of ``tree``
+    over the PERMUTED ``table`` (bucket ranges index it directly)."""
+    leaves = tree.leaf_ids
+    vc, vr, nlo, nhi = {}, {}, {}, {}
+    for attr, col in table.vector.items():
+        cs, rs = [], []
+        for lid in leaves:
+            s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+            pts = col[s:e]
+            c = pts.mean(axis=0) if e > s else np.zeros(col.shape[1])
+            cs.append(c)
+            rs.append(float(np.sqrt(
+                np.max(((pts - c) ** 2).sum(1), initial=0.0))))
+        vc[attr] = np.stack(cs).astype(np.float32)
+        vr[attr] = np.asarray(rs, np.float32)
+    for attr, col in table.numeric.items():
+        los, his = [], []
+        for lid in leaves:
+            s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+            los.append(float(col[s:e].min(initial=np.inf)))
+            his.append(float(col[s:e].max(initial=-np.inf)))
+        nlo[attr] = np.asarray(los, np.float32)
+        nhi[attr] = np.asarray(his, np.float32)
+    return LeafMeta(vec_centroid=vc, vec_radius=vr, num_lo=nlo, num_hi=nhi)
+
+
+def _build_state(raw_table: MMOTable, *, seed: int,
+                 columns: Optional[List[str]] = None,
+                 use_transform: bool = True, use_lpgf: bool = True,
+                 lpgf_iters: int = 1, delta: float = 0.951,
+                 min_leaf: int = 32, max_leaf: int = 4096,
+                 max_depth: int = 12, dpc_max_clusters: int = 8,
+                 dpc_sample: int = 4096,
+                 theta: Optional[Sequence[float]] = None,
+                 delta_scales: Optional[Sequence[float]] = None) -> Dict:
+    """The full feature-representation + index-build pipeline as a PURE
+    function of an input table: transform init (+ optional (θ, δ)
+    perturbation), LPGF movement, learned-index build, physical
+    re-layout, leaf metadata. ``prepare()`` installs the result into the
+    live platform; ``build_generation()`` keeps it beside the serving
+    state until ``swap()``. Mutates nothing it did not create."""
+    d, layout = raw_table.concat_features(columns)
+    feats = d
+    transform = None
+    if use_transform:
+        transform = init_transform(d)
+        if theta is not None or delta_scales is not None:
+            transform = perturb(
+                transform,
+                theta if theta is not None else [],
+                delta_scales if delta_scales is not None else [])
+        feats = transform.apply(d)
+    if use_lpgf:
+        feats = lpgf(feats, iters=lpgf_iters, seed=seed)
+    tree, perm, report = build_index(
+        feats, delta=delta, min_leaf=min_leaf, max_leaf=max_leaf,
+        max_depth=max_depth, dpc_max_clusters=dpc_max_clusters,
+        dpc_sample=dpc_sample, seed=seed)
+    leaves = tree.leaf_ids
+    bucket_id = np.zeros(len(perm), np.int32)
+    for b, lid in enumerate(leaves):
+        s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
+        bucket_id[s:e] = b
+    bucket_starts = np.concatenate(
+        [tree.bucket_start[leaves], [len(perm)]]).astype(np.int32)
+    table = raw_table.apply_permutation(perm, bucket_id, bucket_starts)
+    return dict(table=table, tree=tree, report=report, transform=transform,
+                enhanced=feats[perm], enhanced_unpermuted=feats,
+                layout=layout, meta=build_leaf_meta(tree, table))
+
+
+def _copy_tree(tree: ClusterTree) -> ClusterTree:
+    """Deep copy of a ``ClusterTree`` — fold-beside mutates bucket
+    ranges, radii, and last-mile fits, which must never be visible to
+    the serving generation before the swap."""
+    return ClusterTree(
+        centroid=tree.centroid.copy(), radius=tree.radius.copy(),
+        parent=tree.parent.copy(),
+        children=[list(c) for c in tree.children],
+        is_leaf=tree.is_leaf.copy(),
+        bucket_start=tree.bucket_start.copy(),
+        bucket_end=tree.bucket_end.copy(),
+        lm_a=tree.lm_a.copy(), lm_b=tree.lm_b.copy(),
+        depth=tree.depth.copy(),
+        access_count=tree.access_count.copy())
+
+
+@dataclass
+class Generation:
+    """One complete, self-consistent index+layout state.
+
+    Two roles: (a) the OUTPUT of a beside-build
+    (``build_generation``/``build_fold_generation``) waiting to be
+    swapped in — ``delta_consumed`` records how many live delta rows the
+    build baked into its base, so ``swap()`` knows which delta tail must
+    carry over; (b) the RETAINED previous serving state after a swap
+    (``kind="serving"``), holding the old delta region and
+    ``post_swap_tail`` so ``rollback()`` can restore it without losing
+    rows appended after the swap."""
+    gen_id: int
+    kind: str                               # "reopt" | "fold" | "serving"
+    raw_table: MMOTable
+    table: MMOTable
+    tree: ClusterTree
+    meta: LeafMeta
+    enhanced: np.ndarray
+    transform: Optional[HyperspaceTransform]
+    layout: Dict
+    report: Optional[BuildReport]
+    delta_consumed: int = 0                 # live delta rows in this base
+    base_build_id: int = -1                 # serving build it was built from
+    params: Optional[Tuple] = None          # (theta, delta_scales) | None
+    engines: Dict = field(default_factory=dict)   # prewarmed HybridEngines
+    # rollback bookkeeping (kind == "serving" only)
+    delta: Optional[DeltaRegion] = None
+    post_swap_tail: int = 0                 # delta rows carried into next gen
 
 
 class MQRLD:
@@ -124,6 +273,28 @@ class MQRLD:
         self._oracle_cache: Dict = {}
         self._engines: Dict = {}
         self._sessions: Dict = {}
+        # index generations (online re-optimization; see module doc):
+        # ``generation`` counts installed index states monotonically
+        # (prepare/fold/swap/rollback all advance it — it can never
+        # alias, so it also numbers the on-disk gen-XXXX snapshots);
+        # ``_prev_gen`` retains the pre-swap serving state for one-call
+        # in-memory rollback; ``snapshot_dir`` (set by persist.save /
+        # the owner) enables the disk-rollback fallback.
+        self.generation = 0
+        self._prev_gen: Optional[Generation] = None
+        self.snapshot_dir: Optional[str] = None
+        # background folds: "inline" folds inside append() (caller
+        # pays); "background" marks ``fold_due`` for the attached
+        # controller to build-beside + swap between micro-batches
+        self.fold_mode: str = "inline"
+        self._fold_requested = False
+        # the build configuration of the LAST prepare(), so beside-
+        # builds reproduce the serving index's parameters exactly
+        self._prepare_cfg: Dict = dict(
+            columns=None, use_transform=True, use_lpgf=True,
+            lpgf_iters=1, delta=0.951, min_leaf=32, max_leaf=4096,
+            max_depth=12, dpc_max_clusters=8, dpc_sample=4096)
+        self._transform_params: Tuple = (None, None)   # (theta, delta_scales)
 
     # ------------------------------------------------------------ build
     def prepare(self, columns: Optional[List[str]] = None, *,
@@ -139,73 +310,56 @@ class MQRLD:
         A pending delta region is folded into the rebuild: its rows join
         ``raw_table`` before the transform/index build, so ``prepare()``
         is the full-rebuild end of the append -> union -> fold
-        lifecycle (``fold()`` is the cheap incremental end)."""
+        lifecycle (``fold()`` is the cheap incremental end).
+
+        Lifecycle note: ``prepare()`` records its configuration so later
+        beside-builds (``build_generation``) reproduce the serving
+        index's parameters; it installs the built state in place and is
+        therefore the BLOCKING end of the rebuild spectrum — the online
+        path is ``build_generation()`` + ``swap()``."""
         if self.delta is not None and self.delta.m:
             self.raw_table = self._merged_raw()
             self.delta = None
             self.delta_epoch += 1
             self._view_cache = None
-        d, self.layout = self.raw_table.concat_features(columns)
-        feats = d
-        if use_transform:
-            self.transform = init_transform(d)
-            if theta is not None or delta_scales is not None:
-                self.transform = perturb(
-                    self.transform,
-                    theta if theta is not None else [],
-                    delta_scales if delta_scales is not None else [])
-            feats = self.transform.apply(d)
-        if use_lpgf:
-            feats = lpgf(feats, iters=lpgf_iters, seed=self.seed)
-        self.enhanced_unpermuted = feats
-        tree, perm, report = build_index(
-            feats, delta=delta, min_leaf=min_leaf, max_leaf=max_leaf,
-            max_depth=max_depth, dpc_max_clusters=dpc_max_clusters,
-            dpc_sample=dpc_sample, seed=self.seed)
-        self.tree, self.report = tree, report
-        # physical re-layout of the MMO table (bucket-contiguous)
-        leaves = tree.leaf_ids
-        starts = tree.bucket_start[leaves]
-        bucket_id = np.zeros(len(perm), np.int32)
-        for b, lid in enumerate(leaves):
-            s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
-            bucket_id[s:e] = b
-        bucket_starts = np.concatenate(
-            [tree.bucket_start[leaves], [len(perm)]]).astype(np.int32)
-        self.table = self.raw_table.apply_permutation(
-            perm, bucket_id, bucket_starts)
-        self.enhanced = feats[perm]
-        self._build_meta()
+        self._prepare_cfg = dict(
+            columns=columns, use_transform=use_transform,
+            use_lpgf=use_lpgf, lpgf_iters=lpgf_iters, delta=delta,
+            min_leaf=min_leaf, max_leaf=max_leaf, max_depth=max_depth,
+            dpc_max_clusters=dpc_max_clusters, dpc_sample=dpc_sample)
+        self._transform_params = (
+            None if theta is None else np.asarray(theta, np.float64),
+            None if delta_scales is None
+            else np.asarray(delta_scales, np.float64))
+        st = _build_state(self.raw_table, seed=self.seed, theta=theta,
+                          delta_scales=delta_scales, **self._prepare_cfg)
+        self._install_state(st)
+        return st["report"]
+
+    def _install_state(self, st: Dict):
+        """Install a ``_build_state`` result as the serving state and
+        invalidate everything derived from the old one (the tail of the
+        original ``prepare()``, shared with ``swap``-less rebuilds)."""
+        self.table = st["table"]
+        self.tree = st["tree"]
+        self.report = st["report"]
+        self.transform = st["transform"]
+        self.layout = st["layout"]
+        self.enhanced = st["enhanced"]
+        self.enhanced_unpermuted = st["enhanced_unpermuted"]
+        self.meta = st["meta"]
+        self._view_cache = None
         self._oracle_cache.clear()
         self._engines.clear()  # device state is stale after a rebuild
+        # quantized planes were built from the PREVIOUS layout; a rebuild
+        # at the same row count would otherwise pass the engine's
+        # precision+shape validation and serve stale bounds
+        self._quant_cache = None
         self.build_id += 1   # cached ExecutablePlans are keyed on this
-        return report
+        self.generation += 1
 
     def _build_meta(self):
-        tree, table = self.tree, self.table
-        leaves = tree.leaf_ids
-        vc, vr, nlo, nhi = {}, {}, {}, {}
-        for attr, col in table.vector.items():
-            cs, rs = [], []
-            for lid in leaves:
-                s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
-                pts = col[s:e]
-                c = pts.mean(axis=0) if e > s else np.zeros(col.shape[1])
-                cs.append(c)
-                rs.append(float(np.sqrt(
-                    np.max(((pts - c) ** 2).sum(1), initial=0.0))))
-            vc[attr] = np.stack(cs).astype(np.float32)
-            vr[attr] = np.asarray(rs, np.float32)
-        for attr, col in table.numeric.items():
-            los, his = [], []
-            for lid in leaves:
-                s, e = int(tree.bucket_start[lid]), int(tree.bucket_end[lid])
-                los.append(float(col[s:e].min(initial=np.inf)))
-                his.append(float(col[s:e].max(initial=-np.inf)))
-            nlo[attr] = np.asarray(los, np.float32)
-            nhi[attr] = np.asarray(his, np.float32)
-        self.meta = LeafMeta(vec_centroid=vc, vec_radius=vr,
-                             num_lo=nlo, num_hi=nhi)
+        self.meta = build_leaf_meta(self.tree, self.table)
 
     # ----------------------------------------------------- async ingest
     @property
@@ -231,42 +385,89 @@ class MQRLD:
         ``delta_epoch`` advances; plans re-read delta state at execute
         time); ``fold`` controls merging into the learned index:
         None = auto (fold once delta rows exceed ``auto_fold_ratio`` x
-        base rows), False = never, True = fold immediately. Returns the
-        number of live (un-folded) delta rows after the call."""
+        base rows), False = never, True = fold immediately (inline,
+        regardless of ``fold_mode``). Under ``fold_mode =
+        "background"`` the auto trigger marks ``fold_due`` instead of
+        folding inline — the attached controller/serving loop builds
+        the fold generation beside and swaps it in. Returns the number
+        of live (un-folded) delta rows after the call."""
         assert self.tree is not None, "call prepare() first"
         if self.delta is None:
             self.delta = DeltaRegion.for_table(self.table)
         self.delta.append(dict(numeric or {}), dict(vector or {}), raw_uri)
         self.delta_epoch += 1
         self._view_cache = None
-        if fold is True or (fold is None and self.auto_fold_ratio
-                            and self.delta.m
-                            > self.auto_fold_ratio * self.table.n_rows):
+        if fold is True:
             self.fold()
+        elif (fold is None and self.auto_fold_ratio
+              and self.delta.m
+              > self.auto_fold_ratio * self.table.n_rows):
+            if self.fold_mode == "background":
+                self._fold_requested = True
+            else:
+                self.fold()
         return self.n_delta
 
+    @property
+    def fold_due(self) -> bool:
+        """True when a background fold is wanted: the auto-fold trigger
+        fired under ``fold_mode = "background"`` (or the delta is past
+        the ratio right now). Consumed by ``ReoptController.step()``;
+        cleared by any fold/swap/prepare that drains the delta."""
+        if self.delta is None or self.delta.m == 0:
+            return False
+        if self._fold_requested:
+            return True
+        return bool(self.fold_mode == "background" and self.auto_fold_ratio
+                    and self.delta.m
+                    > self.auto_fold_ratio * self.table.n_rows)
+
     def _concat_delta(self, t: MMOTable,
-                      row_ids: Optional[np.ndarray] = None) -> MMOTable:
+                      row_ids: Optional[np.ndarray] = None,
+                      limit: Optional[int] = None) -> MMOTable:
         """``t`` with the live delta rows appended column-wise — the one
         concatenation recipe behind both ``view()`` (over the physical
-        table) and ``_merged_raw`` (over ``raw_table``)."""
+        table) and ``_merged_raw`` (over ``raw_table``). ``limit``
+        restricts to the FIRST ``limit`` live rows — beside-builds pin
+        the delta prefix that existed when the build started, so rows
+        appended during the build stay out of the new base."""
         d = self.delta
+        m = d.m if limit is None else min(limit, d.m)
         uri = None
         if t.raw_uri is not None:
-            extra = d.raw_uri if d.raw_uri is not None else [""] * d.m
+            extra = d.raw_uri if d.raw_uri is not None else [""] * m
             uri = np.concatenate([t.raw_uri,
-                                  np.asarray(list(extra), dtype=object)])
+                                  np.asarray(list(extra)[:m], dtype=object)])
         return MMOTable(
             name=t.name,
-            numeric={k: np.concatenate([v, d.live_numeric(k)])
+            numeric={k: np.concatenate([v, d.live_numeric(k)[:m]])
                      for k, v in t.numeric.items()},
-            vector={k: np.concatenate([v, d.live_vector(k)])
+            vector={k: np.concatenate([v, d.live_vector(k)[:m]])
                     for k, v in t.vector.items()},
             raw_uri=uri, embed_model=dict(t.embed_model), row_ids=row_ids)
 
-    def _merged_raw(self) -> MMOTable:
+    def _merged_raw(self, limit: Optional[int] = None) -> MMOTable:
         """raw_table + live delta rows appended (raw order)."""
-        return self._concat_delta(self.raw_table)
+        return self._concat_delta(self.raw_table, limit=limit)
+
+    def _delta_feats(self, m0: Optional[int] = None) -> np.ndarray:
+        """The first ``m0`` live delta rows pushed through the FROZEN
+        feature representation (transform applied, no re-fit; LPGF — a
+        global build-time movement — is skipped: it shapes layout
+        quality, never exactness), in the column order ``prepare()``
+        used (``self.layout`` preserves it). Shared by the inline fold
+        and ``build_fold_generation`` so the two are bit-identical."""
+        d = self.delta
+        m0 = d.m if m0 is None else min(m0, d.m)
+        parts = []
+        for c in self.layout:
+            a = (d.live_vector(c)[:m0] if c in d.vector_dims
+                 else d.live_numeric(c)[:m0, None])
+            parts.append(a.astype(np.float32))
+        feats = np.concatenate(parts, axis=1)
+        if self.transform is not None:
+            feats = self.transform.apply(feats)
+        return feats
 
     def fold(self) -> int:
         """Merge the delta region into the learned index incrementally.
@@ -287,32 +488,26 @@ class MQRLD:
         number of rows folded (0 = nothing to do)."""
         from repro.core.index import fold_into_tree
         if self.delta is None or self.delta.m == 0:
+            self._fold_requested = False
             return 0
-        d = self.delta
-        m = d.m
+        m = self.delta.m
         comb = self.view()           # before raw merge: ids stay consistent
         self.raw_table = self._merged_raw()
-        # delta features through the frozen representation, in the
-        # column order prepare() used (self.layout preserves it)
-        parts = []
-        for c in self.layout:
-            a = (d.live_vector(c) if c in d.vector_dims
-                 else d.live_numeric(c)[:, None])
-            parts.append(a.astype(np.float32))
-        feats = np.concatenate(parts, axis=1)
-        if self.transform is not None:
-            feats = self.transform.apply(feats)
+        feats = self._delta_feats(m)
         perm, bucket_id, bucket_starts = fold_into_tree(
             self.tree, self.enhanced, feats)
         self.table = comb.apply_permutation(perm, bucket_id, bucket_starts)
         self.enhanced = np.concatenate([self.enhanced, feats])[perm]
         self._build_meta()
         self.delta = None
+        self._fold_requested = False
         self.delta_epoch += 1
         self._view_cache = None
         self._oracle_cache.clear()
         self._engines.clear()        # device tiles are stale
+        self._quant_cache = None     # planes quantized from the old layout
         self.build_id += 1           # cached plans invalidate
+        self.generation += 1
         return m
 
     def view(self) -> MMOTable:
@@ -335,6 +530,194 @@ class MQRLD:
         v = self._concat_delta(self.table, row_ids=row_ids)
         self._view_cache = (key, v)
         return v
+
+    # -------------------------------------------------- index generations
+    @staticmethod
+    def _engine_key(interpret: bool, beam: int, tile: int,
+                    shards: Optional[int], precision: str) -> Tuple:
+        """The cache key of ``engine()`` — exposed so the reopt warm-up
+        can prewarm a ``Generation.engines`` entry under the exact key
+        ``swap()`` will serve it from."""
+        return (interpret, beam, tile, shards, precision)
+
+    def snapshot_generation(self) -> Generation:
+        """The current serving state as a ``Generation`` (no copies —
+        after a swap nothing mutates these objects, so retaining the
+        references is enough for in-memory rollback)."""
+        return Generation(
+            gen_id=self.generation, kind="serving",
+            raw_table=self.raw_table, table=self.table, tree=self.tree,
+            meta=self.meta, enhanced=self.enhanced,
+            transform=self.transform, layout=self.layout,
+            report=self.report, base_build_id=self.build_id,
+            params=self._transform_params, delta=self.delta)
+
+    def build_generation(self, *,
+                         theta: Optional[Sequence[float]] = None,
+                         delta_scales: Optional[Sequence[float]] = None
+                         ) -> Generation:
+        """Full rebuild BESIDE the serving state with a perturbed
+        hyperspace transform — the materialization step of the online
+        tuner. Uses the last ``prepare()`` configuration over the
+        current data (base + the delta prefix live right now); the
+        serving state is not touched. Install with ``swap()``."""
+        assert self.tree is not None, "call prepare() first"
+        m0 = self.n_delta
+        raw = self._merged_raw(limit=m0) if m0 else self.raw_table
+        st = _build_state(raw, seed=self.seed, theta=theta,
+                          delta_scales=delta_scales, **self._prepare_cfg)
+        return Generation(
+            gen_id=self.generation + 1, kind="reopt", raw_table=raw,
+            table=st["table"], tree=st["tree"], meta=st["meta"],
+            enhanced=st["enhanced"], transform=st["transform"],
+            layout=st["layout"], report=st["report"], delta_consumed=m0,
+            base_build_id=self.build_id,
+            params=(None if theta is None
+                    else np.asarray(theta, np.float64),
+                    None if delta_scales is None
+                    else np.asarray(delta_scales, np.float64)))
+
+    def build_fold_generation(self) -> Optional[Generation]:
+        """The incremental fold as a beside-build: identical math to
+        ``fold()`` (same ``fold_into_tree`` over the same frozen-
+        representation delta features) but run on COPIES of the tree
+        and enhanced matrix, so the serving state keeps answering
+        queries untouched until ``swap()``. Returns None when the delta
+        is empty. Rows appended while the build runs stay live in the
+        delta; ``swap()`` carries them over."""
+        from repro.core.index import fold_into_tree
+        if self.delta is None or self.delta.m == 0:
+            return None
+        m0 = self.delta.m
+        tree = _copy_tree(self.tree)
+        enhanced = self.enhanced
+        feats = self._delta_feats(m0)
+        perm, bucket_id, bucket_starts = fold_into_tree(
+            tree, enhanced, feats)
+        row_ids = None
+        if self.table.row_ids is not None:
+            row_ids = np.concatenate([
+                self.table.row_ids,
+                self.raw_table.n_rows + np.arange(m0)]).astype(np.int64)
+        comb = self._concat_delta(self.table, row_ids=row_ids, limit=m0)
+        table = comb.apply_permutation(perm, bucket_id, bucket_starts)
+        return Generation(
+            gen_id=self.generation + 1, kind="fold",
+            raw_table=self._merged_raw(limit=m0), table=table, tree=tree,
+            meta=build_leaf_meta(tree, table),
+            enhanced=np.concatenate([enhanced, feats])[perm],
+            transform=self.transform, layout=self.layout,
+            report=self.report, delta_consumed=m0,
+            base_build_id=self.build_id, params=self._transform_params)
+
+    def swap(self, gen: Generation) -> int:
+        """Atomically install a beside-built generation as the serving
+        state — the one bounded step of the zero-downtime path.
+
+        Delta rows appended AFTER the build started (positions >=
+        ``gen.delta_consumed``) carry over into a fresh delta region, so
+        freshness survives the swap; the displaced serving state is
+        retained as ``_prev_gen`` for one-call ``rollback()``. Cached
+        plans/engines invalidate through the ``build_id`` bump exactly
+        like ``prepare()``; engines prewarmed into ``gen.engines``
+        (keyed by ``_engine_key``) become the serving engines so the
+        first post-swap batch is not a cold trace. Raises if the
+        serving index changed since the build started (a fold or
+        another swap landed first) — rebuild and retry. Returns the new
+        generation id."""
+        if gen.base_build_id != self.build_id:
+            raise RuntimeError(
+                f"stale generation: built against build_id "
+                f"{gen.base_build_id}, serving is {self.build_id} — "
+                f"rebuild against the current state")
+        prev = self.snapshot_generation()
+        # carry over the delta tail appended during the build
+        tail: Optional[DeltaRegion] = None
+        carried = 0
+        if self.delta is not None and self.delta.m > gen.delta_consumed:
+            d = self.delta
+            sl = slice(gen.delta_consumed, d.m)
+            carried = d.m - gen.delta_consumed
+            tail = DeltaRegion.for_table(gen.table)
+            tail.append(
+                {k: d.live_numeric(k)[sl] for k in d.numeric_keys},
+                {k: d.live_vector(k)[sl] for k in d.vector_dims},
+                None if d.raw_uri is None else d.raw_uri[sl])
+        prev.post_swap_tail = carried
+        self.raw_table = gen.raw_table
+        self.table = gen.table
+        self.tree = gen.tree
+        self.meta = gen.meta
+        self.enhanced = gen.enhanced
+        self.transform = gen.transform
+        self.layout = gen.layout
+        self.report = gen.report
+        if gen.params is not None:
+            self._transform_params = gen.params
+        self.delta = tail
+        self._fold_requested = False
+        self.delta_epoch += 1
+        self._view_cache = None
+        self._oracle_cache.clear()
+        self._engines = dict(gen.engines)   # prewarmed, or empty
+        self._quant_cache = None
+        self.build_id += 1
+        self.generation += 1
+        gen.gen_id = self.generation
+        self._prev_gen = prev
+        return self.generation
+
+    def rollback(self) -> int:
+        """Restore the pre-swap serving state in one call.
+
+        The in-memory ``_prev_gen`` is preferred; when this process has
+        none (e.g. restarted since the swap) and ``snapshot_dir`` is
+        set, the previous on-disk generation is loaded instead
+        (``repro.core.persist.rollback_platform``). Rows appended AFTER
+        the swap are re-appended to the restored delta region, so no
+        write is lost to a rollback. Bumps ``build_id`` like any index
+        change. Returns the new generation counter value."""
+        prev = self._prev_gen
+        if prev is None:
+            if self.snapshot_dir is not None:
+                from repro.core import persist
+                persist.rollback_platform(self.snapshot_dir, into=self)
+                return self.generation
+            raise RuntimeError("no previous generation retained "
+                               "(no swap since startup, or already "
+                               "rolled back) and no snapshot_dir set")
+        cur = self.delta                     # post-swap delta region
+        self.raw_table = prev.raw_table
+        self.table = prev.table
+        self.tree = prev.tree
+        self.meta = prev.meta
+        self.enhanced = prev.enhanced
+        self.transform = prev.transform
+        self.layout = prev.layout
+        self.report = prev.report
+        if prev.params is not None:
+            self._transform_params = prev.params
+        self.delta = prev.delta
+        # rows appended after the swap sit past the carried tail in the
+        # current delta; re-append them so the rollback loses nothing
+        if cur is not None and cur.m > prev.post_swap_tail:
+            sl = slice(prev.post_swap_tail, cur.m)
+            if self.delta is None:
+                self.delta = DeltaRegion.for_table(self.table)
+            self.delta.append(
+                {k: cur.live_numeric(k)[sl] for k in cur.numeric_keys},
+                {k: cur.live_vector(k)[sl] for k in cur.vector_dims},
+                None if cur.raw_uri is None else cur.raw_uri[sl])
+        self._fold_requested = False
+        self.delta_epoch += 1
+        self._view_cache = None
+        self._oracle_cache.clear()
+        self._engines.clear()
+        self._quant_cache = None
+        self.build_id += 1
+        self.generation += 1
+        self._prev_gen = None
+        return self.generation
 
     # ------------------------------------------------------------ leaves
     def _leaf_rows(self, leaf_pos: int) -> np.ndarray:
@@ -463,6 +846,8 @@ class MQRLD:
                 recall_at_k=recall_at_k(rows, truth),
                 cbr=stats.cbr, query_time_s=stats.time_s,
                 accuracy=accuracy(rows, truth), task=task)
+            self.qbs.record_workload(Q.signature(Q.normalize(query)),
+                                     query)
         return rows, stats
 
     def _exec(self, q, stats: QueryStats,
@@ -541,7 +926,7 @@ class MQRLD:
             shards = self.default_shards
         shards = shards or None
         prec = self._resolve_precision(precision)
-        key = (interpret, beam, tile, shards, prec)
+        key = self._engine_key(interpret, beam, tile, shards, prec)
         eng = self._engines.get(key)
         if eng is None:
             # bounded LRU: each engine pins device-resident copies of

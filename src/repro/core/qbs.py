@@ -20,9 +20,20 @@ The table feeds five consumers:
      (``record_latency``); ``latency_quantiles`` feeds the server's
      deadline shedding (a request whose deadline cannot be met even if
      its archetype started compute right now is shed before the batch
-     runs) and ``ExecutablePlan.explain()``'s per-fragment latency
-     block — the same query-aware loop as beam seeding, applied to
-     admission control.
+     runs), the server's ADAPTIVE batching window (a signature's window
+     tracks its own full-batch service time instead of one static
+     ``max_delay_ms``), and ``ExecutablePlan.explain()``'s per-fragment
+     latency block — the same query-aware loop as beam seeding, applied
+     to admission control.
+  6. the online re-optimization controller (``repro.core.reopt``):
+     ``snapshot()`` exports a point-in-time view — archetype mix,
+     convergence rings, latency quantiles, and a sample of recently
+     EXECUTED query ASTs (``record_workload``, a bounded ring per
+     signature fed by every planned execution) — that the background
+     MORBO tuner evaluates candidate transforms against. The workload
+     ring holds live query objects (vector constants included) and is
+     deliberately NOT persisted: it describes the current serving
+     process's traffic, which a restarted process re-learns in seconds.
 """
 from __future__ import annotations
 
@@ -50,6 +61,28 @@ class QBSRow:
 
 _CONVERGENCE_KEEP = 64  # recent widths kept per archetype (ring buffer)
 _LATENCY_KEEP = 512     # recent service times kept per archetype
+_WORKLOAD_KEEP = 16     # recent executed query ASTs kept per signature
+
+
+@dataclass
+class QBSSnapshot:
+    """Point-in-time export of the query-aware state — what the online
+    re-optimization controller tunes against (``QBSTable.snapshot``).
+
+    ``workload`` is a sample of recently executed query ASTs, ordered
+    hottest-signature-first (round-robin across signatures by recent
+    execution count), so evaluating the first K queries measures the
+    traffic that actually dominates serving."""
+    ts: float
+    mix: Dict[str, int]                       # signature -> executed count
+    convergence: Dict[str, List[int]]         # archetype -> widths (copy)
+    latency: Dict[str, Dict[str, float]]      # signature -> {p50, p99, n}
+    workload: List                            # sampled Q.Query objects
+    n_rows: int = 0                           # QBS rows at snapshot time
+
+    @property
+    def total_executed(self) -> int:
+        return sum(self.mix.values())
 
 
 class QBSTable:
@@ -62,6 +95,12 @@ class QBSTable:
         # micro-batch wall time / batch size), most recent last; same
         # bounded-ring rationale as ``convergence``
         self.latency: Dict[str, List[float]] = {}
+        # plan signature -> recent executed query ASTs (live objects,
+        # constants included) + cumulative execution counts — the
+        # workload sample the online tuner re-plays against candidate
+        # transforms. In-memory only (see module doc).
+        self.workload: Dict[str, List] = {}
+        self.mix: Dict[str, int] = {}
         self.sample_rate = sample_rate
         self._rng = np.random.default_rng(seed)
 
@@ -114,6 +153,47 @@ class QBSTable:
             return default
         w = int(np.ceil(np.quantile(np.asarray(ws, np.float64), 0.9)))
         return w if w > 0 else default
+
+    # ------------------------------------------------ tuner feedback
+    def record_workload(self, signature: str, query, n: int = 1):
+        """Record one executed query AST under its plan signature (the
+        batched path calls this once per signature per batch with the
+        batch's count). The ring keeps the most recent
+        ``_WORKLOAD_KEEP`` ASTs; ``mix`` accumulates execution counts
+        so ``snapshot()`` can weight signatures by actual traffic."""
+        ring = self.workload.setdefault(signature, [])
+        ring.append(query)
+        if len(ring) > _WORKLOAD_KEEP:
+            del ring[:len(ring) - _WORKLOAD_KEEP]
+        self.mix[signature] = self.mix.get(signature, 0) + max(1, int(n))
+
+    def snapshot(self, max_queries: int = 32) -> QBSSnapshot:
+        """Export the query-aware state for the background tuner.
+
+        The workload sample interleaves signatures hottest-first
+        (cumulative execution count), most recent query first within
+        each signature, up to ``max_queries`` ASTs — so a tuner that
+        replays the sample in order measures the dominant traffic even
+        under a tight evaluation budget. All containers are copies; the
+        snapshot stays consistent while serving continues to record."""
+        sigs = sorted(self.mix, key=lambda s: -self.mix[s])
+        rings = {s: list(reversed(self.workload.get(s, []))) for s in sigs}
+        sample: List = []
+        i = 0
+        while len(sample) < max_queries and any(rings.values()):
+            sig = sigs[i % len(sigs)]
+            if rings[sig]:
+                sample.append(rings[sig].pop(0))
+            i += 1
+            if i > max_queries * max(1, len(sigs)):
+                break
+        return QBSSnapshot(
+            ts=time.time(),
+            mix=dict(self.mix),
+            convergence={k: list(v) for k, v in self.convergence.items()},
+            latency={k: q for k in self.latency
+                     if (q := self.latency_quantiles(k)) is not None},
+            workload=sample, n_rows=len(self.rows))
 
     # --------------------------------------------- serving-tier feedback
     def record_latency(self, archetype: str, seconds: float, n: int = 1):

@@ -265,7 +265,13 @@ class RetrievalServer:
     ``flush_one``: ``max_delay_ms`` is the batching window a partial
     micro-batch may wait for archetype-mates before running anyway
     (full groups, full queues, and imminent deadlines run immediately;
-    0 = eager).
+    0 = eager). With ``adaptive_window=True`` the window is derived PER
+    SIGNATURE from the QBS service-time stats instead of the one static
+    knob: a signature whose p50 service time is known (>= 8 samples)
+    waits at most one full-batch service time (``p50 * batch_size``) —
+    waiting longer than it would take to serve a full batch can only
+    add latency, never amortization — capped by ``max_delay_ms`` when
+    that is set (> 0). Cold signatures fall back to the static window.
 
     Query-aware feedback: every executed micro-batch records its
     per-request service time under its plan signature via
@@ -309,6 +315,21 @@ class RetrievalServer:
     ``append(...)`` ingests new rows between micro-batches
     (freshness-exact; see its docstring for the ordering and
     exception-safety contract).
+
+    Online re-optimization: ``attach_reopt(controller)`` hands the
+    server a ``repro.core.reopt.ReoptController``; ``poll()`` then
+    drives one ``controller.step()`` at every idle point and after
+    every executed micro-batch — the cooperative-scheduling contract
+    the controller's module doc describes. Index-generation swaps
+    therefore land exactly BETWEEN micro-batches, under the same
+    ordering contract as ``append``: futures already resolved are
+    immutable, requests still pending execute against the new
+    generation at their flush epoch, and every served result stays
+    oracle-exact across the swap (results are compared by logical row
+    identity — ``platform.view().row_ids`` — since a new generation
+    re-permutes physical layout). ``stats()`` reports the serving
+    generation / build id and, when a controller is attached, its
+    progress (``ReoptController.status()``).
     """
 
     def __init__(self, platform, embedder: EmbeddingServer, *,
@@ -319,6 +340,7 @@ class RetrievalServer:
                  coalesce: bool = True,
                  max_queue: Optional[int] = None,
                  max_delay_ms: float = 0.0,
+                 adaptive_window: bool = False,
                  clock: Callable[[], float] = time.monotonic):
         self.platform = platform
         self.embedder = embedder
@@ -339,6 +361,9 @@ class RetrievalServer:
         # arrivals execute as size-1 chunks and throughput collapses to
         # the per-chunk overhead floor
         self.max_delay_ms = float(max_delay_ms)
+        # per-signature window from QBS service stats (see class doc);
+        # max_delay_ms becomes the cap rather than the window itself
+        self.adaptive_window = bool(adaptive_window)
         self.max_queue = max_queue if max_queue is not None \
             else 64 * batch_size
         if self.max_queue < 1:
@@ -349,6 +374,7 @@ class RetrievalServer:
                                         precision=precision)
         self._pending: List[_Pending] = []   # admission FIFO
         self._sig_cache: Dict[Tuple, str] = {}
+        self.reopt = None                    # see attach_reopt()
         # serving counters + per-signature end-to-end latencies
         self.n_submitted = 0
         self.n_served = 0
@@ -515,35 +541,64 @@ class RetrievalServer:
         """Window-respecting variant of ``flush_one`` for open-arrival
         drive loops: sheds expired work, then runs one micro-batch only
         if one is DUE — a signature group (or the whole queue) reached
-        ``batch_size``, the oldest admitted request has waited out
-        ``max_delay_ms``, or some deadline would expire within the
-        window. Returns requests served this call (0 = nothing due yet;
-        see ``next_due`` for when to come back)."""
+        ``batch_size``, some admitted request has waited out its
+        signature's batching window, or some deadline would expire
+        within it. Returns requests served this call (0 = nothing due
+        yet; see ``next_due`` for when to come back).
+
+        When a re-optimization controller is attached, every ``poll``
+        also drives one ``controller.step()`` — after the micro-batch
+        when one ran (the swap-safe boundary), otherwise at the idle
+        point — so background tuning, beside-builds, and generation
+        swaps make progress exactly when the serving loop has slack."""
         now = self._clock()
         self._shed_expired(now)
         if not self._pending or not self._due(now):
+            self._reopt_step()
             return 0
         chunk = self._next_chunk()
         self._run_chunk(chunk)
+        self._reopt_step()
         return len(chunk)
 
+    def _window_s(self, sig: str) -> float:
+        """Batching window (seconds) for one signature. Static mode:
+        ``max_delay_ms`` for every signature. Adaptive mode: one
+        full-batch service time (QBS p50 x ``batch_size``) once >= 8
+        service samples exist — the longest wait that amortization can
+        still pay for — capped by ``max_delay_ms`` when set; the static
+        window until the signature is warm."""
+        base = self.max_delay_ms / 1e3
+        if not self.adaptive_window:
+            return base
+        lq = self.platform.qbs.latency_quantiles(sig)
+        if lq is None or lq["n"] < 8:
+            return base
+        w = float(lq["p50"]) * self.batch_size
+        return min(base, w) if base > 0 else w
+
     def next_due(self) -> Optional[float]:
-        """Clock time at which the queue's oldest entry exhausts the
-        batching window (or its deadline, whichever is sooner) — the
-        wake-up time for a drive loop whose ``poll`` returned 0. None
-        when nothing is pending."""
+        """Earliest clock time at which some pending entry exhausts its
+        signature's batching window (or its deadline, whichever is
+        sooner) — the wake-up time for a drive loop whose ``poll``
+        returned 0. None when nothing is pending."""
         if not self._pending:
             return None
-        t = self._pending[0].t_submit + self.max_delay_ms / 1e3
-        dls = [p.deadline for p in self._pending
-               if p.deadline is not None]
-        return min(t, min(dls)) if dls else t
+        win: Dict[str, float] = {}
+        due = []
+        for p in self._pending:
+            if p.sig not in win:
+                win[p.sig] = self._window_s(p.sig)
+            t = p.t_submit + win[p.sig]
+            due.append(t if p.deadline is None else min(t, p.deadline))
+        return min(due)
 
     def _due(self, now: float) -> bool:
         """Is a micro-batch worth running right now? (queue non-empty
-        is the caller's precondition)"""
-        delay = self.max_delay_ms / 1e3
-        if delay <= 0 or len(self._pending) >= self.batch_size:
+        is the caller's precondition) Per-signature windows: an entry
+        whose signature's window is exhausted (or zero) makes the
+        queue due, as does a deadline inside that window."""
+        if len(self._pending) >= self.batch_size:
             return True
         if self.coalesce:
             counts: Dict[str, int] = {}
@@ -551,11 +606,36 @@ class RetrievalServer:
                 counts[p.sig] = counts.get(p.sig, 0) + 1
                 if counts[p.sig] >= self.batch_size:
                     return True
-        if now - self._pending[0].t_submit >= delay:
-            return True
-        dls = [p.deadline for p in self._pending
-               if p.deadline is not None]
-        return bool(dls) and min(dls) <= now + delay
+        win: Dict[str, float] = {}   # one QBS lookup per sig per pass
+        for p in self._pending:
+            if p.sig not in win:
+                win[p.sig] = self._window_s(p.sig)
+            w = win[p.sig]
+            if w <= 0 or now - p.t_submit >= w:
+                return True
+            if p.deadline is not None and p.deadline <= now + w:
+                return True
+        return False
+
+    # ------------------------------------------------- re-optimization
+    def attach_reopt(self, controller) -> None:
+        """Attach a ``repro.core.reopt.ReoptController``; ``poll()``
+        will drive one ``controller.step()`` per call (see ``poll``).
+        The controller inherits this server's session when it was built
+        without one, so plan prewarming lands in the cache the serving
+        path actually reads."""
+        if controller.session is None:
+            controller.session = self.session
+        self.reopt = controller
+
+    def _reopt_step(self) -> Optional[str]:
+        """One unit of cooperative background work (no-op when no
+        controller is attached). Called only between micro-batches /
+        at idle points, so a generation swap inside ``step()`` can
+        never be observed by a half-executed batch."""
+        if self.reopt is None:
+            return None
+        return self.reopt.step()
 
     # ------------------------------------------------------ admission ctrl
     def _service_estimate(self, sig: str) -> float:
@@ -663,7 +743,10 @@ class RetrievalServer:
     def stats(self) -> dict:
         """Serving counters plus per-signature end-to-end latency
         quantiles (seconds; service-time quantiles live in the QBS
-        table, see ``QBSTable.latency_quantiles``)."""
+        table, see ``QBSTable.latency_quantiles``). ``generation`` /
+        ``build_id`` identify the index generation currently serving;
+        ``reopt`` is the attached controller's progress (None when no
+        controller is attached)."""
         by_sig = {}
         for sig, ls in self._e2e.items():
             a = np.asarray(ls, np.float64)
@@ -673,4 +756,8 @@ class RetrievalServer:
         return {"submitted": self.n_submitted, "served": self.n_served,
                 "shed": self.n_shed, "batches": self.n_batches,
                 "queue_depth": len(self._pending),
+                "generation": self.platform.generation,
+                "build_id": self.platform.build_id,
+                "reopt": None if self.reopt is None
+                else self.reopt.status(),
                 "by_signature": by_sig}

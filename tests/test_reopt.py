@@ -1,0 +1,537 @@
+"""Online re-optimization: background MORBO tuning with zero-downtime
+index-generation swaps, background folds, versioned persistence with
+one-call rollback, and the adaptive per-signature batching window.
+
+The load tests drive a real ``RetrievalServer`` (stub embedder, fake
+clock) with an attached ``ReoptController`` stepping cooperatively
+between micro-batches. "Exact" is asserted the only way that survives a
+swap: a new generation re-permutes PHYSICAL row positions, so results
+and oracles are compared by LOGICAL row identity through
+``platform.view().row_ids`` — the mapping is captured at the epoch the
+micro-batch executed (before the poll's ``step()`` could swap), the
+oracle's mapping at validation time.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import persist
+from repro.core import query as Q
+from repro.core.lake import MMOTable
+from repro.core.morbo import GP, MorboDriver
+from repro.core.platform import MQRLD
+from repro.core.qbs import QBSTable
+from repro.core.reopt import ReoptConfig, ReoptController
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+
+# ---------------------------------------------------------------------------
+# fixtures / helpers
+# ---------------------------------------------------------------------------
+def _make_platform(seed=0, n=650, d=8):
+    rng = np.random.default_rng(seed + 17)
+    centers = rng.normal(size=(5, d)).astype(np.float32) * 6
+    lab = rng.integers(0, 5, n)
+    vec = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    t = (MMOTable("reopt_shop")
+         .add_vector("img", vec)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32)))
+    p = MQRLD(t, seed=0)
+    p.prepare(min_leaf=8, max_leaf=64, dpc_max_clusters=5)
+    return p
+
+
+def _extra_rows(rng, k, d=8):
+    return ({"price": rng.uniform(0, 100, k).astype(np.float32)},
+            {"img": rng.normal(size=(k, d)).astype(np.float32) * 4})
+
+
+def _append(p, rng, k, fold=False):
+    num, vec = _extra_rows(rng, k)
+    return p.append(numeric=num, vector=vec, fold=fold)
+
+
+# fast controller knobs: one init batch + one ask/tell pair, tiny shadow
+def _fast_cfg(**over):
+    kw = dict(interval_s=0.0, min_queries=4, sample_rows=256,
+              max_workload=6, n_params=2, n_init=3, tune_cycles=1,
+              evals_per_step=2, prewarm_sizes=(1, 2), seed=0)
+    kw.update(over)
+    return ReoptConfig(**kw)
+
+
+class _StubEmbedder:
+    """Deterministic per prompt, independent of batch composition."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def embed(self, tokens):
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["img"][rows] + 0.01
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _req(i, k=6, predicate=None, deadline_ms=None):
+    return RetrievalRequest(tokens=np.asarray([i, 1], np.int32),
+                            attr="img", k=k, predicate=predicate,
+                            deadline_ms=deadline_ms)
+
+
+def _logical(ids, rows):
+    return {int(ids[r]) for r in np.asarray(rows)}
+
+
+def _logical_view(platform):
+    return _logical(platform.view().row_ids,
+                    np.arange(platform.view().n_rows))
+
+
+def _check_exact(platform, result, exec_ids):
+    """One served result vs the brute-force oracle, compared by logical
+    row identity: ``exec_ids`` is the view's row_ids at the epoch the
+    result's micro-batch executed; the oracle maps through the CURRENT
+    row_ids (the platform may have swapped generations in between —
+    logical content is invariant across swaps/folds)."""
+    got = _logical(exec_ids, result.rows)
+    truth = _logical(platform.view().row_ids,
+                     platform.oracle(result.query))
+    assert got == truth
+
+
+def _drain(pending, platform, exec_ids):
+    """Validate futures resolved since the last action; return the rest."""
+    still = []
+    for f in pending:
+        if f.done():
+            res = f.result()
+            if not res.shed:
+                _check_exact(platform, res, exec_ids)
+        else:
+            still.append(f)
+    return still
+
+
+# ---------------------------------------------------------------------------
+# swap under load: exactness across a mid-stream generation swap
+# ---------------------------------------------------------------------------
+def test_swap_under_load_stays_oracle_exact():
+    """Serve continuously while the attached controller tunes, builds
+    beside, warms, and swaps. Every served result — before, during, and
+    after the swap — must equal the brute-force oracle by logical row
+    identity, and the swap must land only between micro-batches (a
+    future resolved by a poll always reflects the single generation its
+    batch executed against)."""
+    p = _make_platform()
+    clk = _FakeClock()
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          clock=clk)
+    ctl = ReoptController(p, config=_fast_cfg())
+    srv.attach_reopt(ctl)
+    assert ctl.session is srv.session     # prewarm lands in serving cache
+
+    gen0 = p.generation
+    pending = []
+    for i in range(60):
+        pending.append(srv.submit(_req(i, k=5)))
+        pending.append(srv.submit(
+            _req(100 + i, k=4, predicate=Q.NR("price", 10, 90))))
+        pending = _drain(pending, p, p.view().row_ids.copy())
+        exec_ids = p.view().row_ids.copy()   # batch-epoch mapping
+        clk.advance(0.002)
+        srv.poll()                           # micro-batch + one step()
+        pending = _drain(pending, p, exec_ids)
+        if ctl.n_swaps >= 1 and not pending:
+            break
+    exec_ids = p.view().row_ids.copy()
+    srv.flush()                              # flush never steps reopt
+    _drain(pending, p, exec_ids)
+
+    assert ctl.n_swaps >= 1, "controller never swapped under load"
+    assert p.generation > gen0
+    assert any(e.kind == "swap" for e in ctl.history)
+    st = srv.stats()
+    assert st["generation"] == p.generation
+    assert st["reopt"]["swaps"] == ctl.n_swaps
+    assert st["served"] >= 40 and st["shed"] == 0
+    # post-swap serving still exact (fresh request on the new generation)
+    f = srv.submit(_req(7, k=6))
+    srv.flush()
+    _check_exact(p, f.result(), p.view().row_ids)
+
+
+def test_swap_prewarms_serving_plan_cache():
+    """The generation built by the controller is warmed against the
+    serving session's plan cache under the build id it WILL serve under:
+    the first post-swap plan for a hot signature is a cache hit."""
+    p = _make_platform(seed=3)
+    sess = p.session()
+    ctl = ReoptController(p, session=sess, config=_fast_cfg())
+    emb = p.table.vector["img"][:8] + 0.01
+    queries = [Q.VK.of("img", emb[i], 5) for i in range(8)]
+    for q in queries:
+        p.execute(q)                         # records workload + mix
+    evt, steps = None, 0
+    while evt != "swapped" and steps < 60:
+        evt = ctl.step()
+        steps += 1
+        assert evt != "no-improvement" or ctl.state == "idle"
+        if evt == "no-improvement":          # tuning is stochastic: rerun
+            for q in queries:
+                p.execute(q)
+    if evt != "swapped":
+        pytest.skip("tuner found no improvement on this seed")
+    hits0 = sess.cache_hits
+    sess.plan([Q.VK.of("img", emb[0], 5)])
+    assert sess.cache_hits == hits0 + 1      # warm, not re-traced
+
+
+# ---------------------------------------------------------------------------
+# rollback round-trip (memory + disk)
+# ---------------------------------------------------------------------------
+def test_rollback_roundtrip_memory():
+    p = _make_platform(seed=1)
+    rng = np.random.default_rng(5)
+    q = Q.And.of(Q.NR("price", 15, 85),
+                 Q.VK.of("img", p.table.vector["img"][3] + 0.02, 6))
+    _append(p, rng, 3, fold=False)
+    before = _logical_view(p)
+    bid0, gen0 = p.build_id, p.generation
+
+    gen = p.build_generation(theta=[0.08, -0.05],
+                             delta_scales=[0.12, -0.07])
+    p.swap(gen)
+    assert p.build_id == bid0 + 1 and p.generation == gen0 + 1
+    assert _logical_view(p) == before        # logical content invariant
+    rows, _ = p.execute(q, record=False)
+    assert _logical(p.view().row_ids, rows) == \
+        _logical(p.view().row_ids, p.oracle(q))
+
+    _append(p, rng, 2, fold=False)   # post-swap writes
+    after_appends = _logical_view(p)
+    p.rollback()
+    assert p.generation == gen0 + 2          # rollback is itself a bump
+    # post-swap appends survive the rollback; nothing else changed
+    assert _logical_view(p) == after_appends
+    rows, _ = p.execute(q, record=False)
+    assert _logical(p.view().row_ids, rows) == \
+        _logical(p.view().row_ids, p.oracle(q))
+
+
+def test_rollback_from_disk(tmp_path):
+    """A freshly loaded platform (no in-memory previous generation)
+    rolls back from the versioned snapshot directory."""
+    d = str(tmp_path / "snap")
+    p = _make_platform(seed=2)
+    persist.save_platform(p, d)
+    pre_swap = _logical_view(p)
+    g_pre = persist.current_generation(d)
+
+    p.swap(p.build_generation(theta=[0.06, -0.04],
+                              delta_scales=[0.05, -0.05]))
+    persist.save_platform(p, d)
+    assert persist.current_generation(d) > g_pre
+
+    p2 = persist.load_platform(d)
+    assert p2._prev_gen is None and p2.snapshot_dir == d
+    q = Q.VK.of("img", p2.table.vector["img"][1] + 0.01, 5)
+    p2.rollback()                            # disk path
+    assert persist.current_generation(d) == g_pre
+    assert _logical_view(p2) == pre_swap
+    rows, _ = p2.execute(q, record=False)
+    assert _logical(p2.view().row_ids, rows) == \
+        _logical(p2.view().row_ids, p2.oracle(q))
+
+
+def test_rollback_without_history_raises():
+    p = _make_platform(seed=4)
+    with pytest.raises(RuntimeError, match="roll"):
+        p.rollback()
+
+
+# ---------------------------------------------------------------------------
+# background fold == inline fold
+# ---------------------------------------------------------------------------
+def test_background_fold_matches_inline():
+    """The controller's beside-built fold generation must be
+    bit-identical to the inline ``fold()`` on the same state: same
+    feature push-through, same tree mutation, same permutation."""
+    rng1 = np.random.default_rng(9)
+    rng2 = np.random.default_rng(9)
+    p1 = _make_platform(seed=6)
+    p2 = _make_platform(seed=6)
+
+    _append(p1, rng1, 12, fold=True)       # inline
+
+    p2.fold_mode = "background"
+    p2.auto_fold_ratio = 1e-9
+    _append(p2, rng2, 12, fold=None)       # marks only
+    assert p2.fold_due and p2.delta.m == 12            # append unblocked
+    ctl = ReoptController(p2, config=_fast_cfg(interval_s=1e9))
+    assert ctl.step() == "fold-built"
+    assert ctl.step() == "fold-swapped"
+    assert ctl.n_folds == 1 and p2.n_delta == 0
+
+    np.testing.assert_array_equal(p1.table.row_ids, p2.table.row_ids)
+    np.testing.assert_allclose(p1.enhanced, p2.enhanced,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(p1.tree.bucket_start,
+                                  p2.tree.bucket_start)
+    q = Q.VK.of("img", p1.table.vector["img"][2] + 0.01, 7)
+    r1, _ = p1.execute(q, record=False)
+    r2, _ = p2.execute(q, record=False)
+    assert _logical(p1.view().row_ids, r1) == \
+        _logical(p2.view().row_ids, r2)
+
+
+def test_fold_generation_pins_delta_prefix():
+    """Rows appended AFTER a beside-build started stay in the delta
+    across the swap (freshness-exact: they are served from the new
+    generation's delta tail, not silently dropped)."""
+    p = _make_platform(seed=7)
+    rng = np.random.default_rng(11)
+    p.fold_mode = "background"
+    p.auto_fold_ratio = 1e-9
+    _append(p, rng, 6, fold=None)
+    gen = p.build_fold_generation()          # consumes the 6-row prefix
+    _append(p, rng, 2, fold=False)   # lands mid-build
+    before = _logical_view(p)
+    p.swap(gen)
+    assert p.delta.m == 2                    # tail carried, not folded
+    assert _logical_view(p) == before
+    q = Q.VK.of("img", p.table.vector["img"][0] + 0.01, 5)
+    rows, _ = p.execute(q, record=False)
+    assert _logical(p.view().row_ids, rows) == \
+        _logical(p.view().row_ids, p.oracle(q))
+
+
+def test_stale_generation_rejected():
+    """A generation built against an older build id must be refused by
+    ``swap`` (and discarded, not installed, by the controller)."""
+    p = _make_platform(seed=8)
+    gen = p.build_generation(theta=[0.03, 0.02],
+                             delta_scales=[0.0, 0.0])
+    _append(p, np.random.default_rng(1), 4, fold=True)
+    with pytest.raises(RuntimeError, match="stale"):
+        p.swap(gen)
+
+
+# ---------------------------------------------------------------------------
+# atomic persistence: crash mid-save never corrupts the current snapshot
+# ---------------------------------------------------------------------------
+def test_crash_mid_save_recovery(tmp_path, monkeypatch):
+    d = str(tmp_path / "snap")
+    p = _make_platform(seed=9)
+    persist.save_platform(p, d)
+    g0 = persist.current_generation(d)
+    ref = _logical_view(p)
+
+    real = persist._write_snapshot
+
+    def _boom(platform, directory):
+        os.makedirs(directory, exist_ok=True)
+        with open(os.path.join(directory, "platform.json"), "w") as f:
+            f.write('{"partial": tru')         # torn write, then crash
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(persist, "_write_snapshot", _boom)
+    _append(p, np.random.default_rng(2), 2, fold=False)
+    with pytest.raises(RuntimeError, match="disk full"):
+        persist.save_platform(p, d)
+    monkeypatch.setattr(persist, "_write_snapshot", real)
+
+    # CURRENT still points at the intact snapshot; no temp litter
+    assert persist.current_generation(d) == g0
+    assert not [e for e in os.listdir(d) if e.startswith(".tmp-")]
+    p2 = persist.load_platform(d)
+    assert _logical_view(p2) == ref
+
+    # the retried save commits a NEW generation and loads round-trip
+    persist.save_platform(p, d)
+    assert persist.current_generation(d) > g0
+    p3 = persist.load_platform(d)
+    assert _logical_view(p3) == _logical_view(p)
+
+
+def test_retention_keeps_rollback_window(tmp_path):
+    d = str(tmp_path / "snap")
+    p = _make_platform(seed=10)
+    for _ in range(4):
+        persist.save_platform(p, d)
+        p.swap(p.build_generation(theta=[0.01, -0.01],
+                                  delta_scales=[0.0, 0.0]))
+    gens = persist.list_generations(d)
+    assert len(gens) == persist._KEEP_GENERATIONS
+    assert persist.current_generation(d) == gens[-1]
+    persist.load_platform(d, generation=gens[0])   # rollback target loads
+
+
+# ---------------------------------------------------------------------------
+# GP / MORBO robustness: degenerate evaluations must not kill the tuner
+# ---------------------------------------------------------------------------
+def test_gp_survives_duplicate_and_constant_points():
+    x = np.zeros((6, 3))                     # all-duplicate inputs
+    y = np.full(6, 2.5)                      # constant objective
+    gp = GP(x, y)
+    mu, var = gp.posterior(np.random.default_rng(0).normal(size=(4, 3)))
+    assert np.all(np.isfinite(mu)) and np.all(np.isfinite(var))
+    assert np.all(var >= 0)
+    s = gp.sample(np.zeros((2, 3)), np.random.default_rng(1))
+    assert np.all(np.isfinite(s))
+
+
+def test_morbo_driver_survives_degenerate_tell():
+    lo = np.array([-1.0, -1.0])
+    drv = MorboDriver((lo, -lo), n_objectives=2, n_init=4, n_tr=1,
+                      batch=2, seed=0)
+    for _ in range(3):
+        xb = drv.ask()
+        assert np.all(xb >= lo - 1e-9) and np.all(xb <= -lo + 1e-9)
+        drv.tell(np.zeros((len(xb), 2)))     # constant multi-objective
+    res = drv.result()
+    assert len(res.x) == drv.n_evals and np.all(np.isfinite(res.y))
+
+
+# ---------------------------------------------------------------------------
+# adaptive per-signature batching window
+# ---------------------------------------------------------------------------
+def test_adaptive_window_from_qbs_service_time():
+    """A warm signature's window is p50 x batch_size (capped by
+    ``max_delay_ms``); cold signatures keep the static window."""
+    p = _make_platform(seed=12)
+    clk = _FakeClock()
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          max_delay_ms=500.0, adaptive_window=True,
+                          clock=clk)
+    warm = _req(0, k=5)
+    sig = srv.signature(warm)
+    p.qbs.record_latency(sig, 0.01, n=8)     # p50 = 10ms -> window 40ms
+    assert srv._window_s(sig) == pytest.approx(0.04)
+
+    f = srv.submit(warm)
+    assert srv.poll() == 0                   # inside the adaptive window
+    assert srv.next_due() == pytest.approx(clk() + 0.04)
+    clk.advance(0.05)
+    assert srv.poll() == 1 and f.done()
+
+    cold = _req(1, k=9)                      # no service stats yet
+    assert srv._window_s(srv.signature(cold)) == pytest.approx(0.5)
+    srv.submit(cold)
+    clk.advance(0.05)
+    assert srv.poll() == 0                   # static 500ms window holds
+    clk.advance(0.5)
+    assert srv.poll() == 1
+    del p.qbs.latency[sig]
+
+
+def test_adaptive_window_off_keeps_static_knob():
+    p = _make_platform(seed=13)
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          max_delay_ms=200.0, adaptive_window=False)
+    sig = srv.signature(_req(0, k=5))
+    p.qbs.record_latency(sig, 0.001, n=16)
+    assert srv._window_s(sig) == pytest.approx(0.2)   # stats ignored
+    del p.qbs.latency[sig]
+
+
+def test_adaptive_window_uncapped_when_eager():
+    """``max_delay_ms=0`` + adaptive: warm signatures still earn a
+    window (one full-batch service time); cold ones stay eager."""
+    p = _make_platform(seed=14)
+    clk = _FakeClock()
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          max_delay_ms=0.0, adaptive_window=True,
+                          clock=clk)
+    sig = srv.signature(_req(0, k=5))
+    p.qbs.record_latency(sig, 0.02, n=8)
+    assert srv._window_s(sig) == pytest.approx(0.08)
+    assert srv._window_s("never-served") == 0.0
+    srv.submit(_req(0, k=5))
+    assert srv.poll() == 0                   # warm: waits for mates
+    clk.advance(0.09)
+    assert srv.poll() == 1
+    del p.qbs.latency[sig]
+
+
+def test_stats_reports_generation_and_reopt():
+    p = _make_platform(seed=15)
+    srv = RetrievalServer(p, _StubEmbedder(p.table))
+    st = srv.stats()
+    assert st["generation"] == p.generation
+    assert st["build_id"] == p.build_id
+    assert st["reopt"] is None
+    ctl = ReoptController(p, config=_fast_cfg(min_queries=10 ** 9))
+    srv.attach_reopt(ctl)
+    st = srv.stats()
+    assert st["reopt"]["state"] == "idle"
+    assert st["reopt"]["generation"] == p.generation
+    assert srv.poll() == 0                   # idle poll steps the (idle)
+    assert st["reopt"]["swaps"] == 0         # controller harmlessly
+
+
+# ---------------------------------------------------------------------------
+# seeded fuzz: interleave append / serve / reopt, everything stays exact
+# ---------------------------------------------------------------------------
+def test_fuzz_append_serve_reopt_interleaving():
+    """Randomized interleaving of submits, polls (each stepping the
+    controller: tuning, beside-builds, swaps, background folds), and
+    appends. Invariants: every future resolves exactly once, every
+    served result is oracle-exact by logical row identity at its
+    execution epoch, and counters reconcile."""
+    rng = np.random.default_rng(42)
+    p = _make_platform(seed=16, n=500)
+    p.fold_mode = "background"
+    p.auto_fold_ratio = 0.02                 # folds fire under the fuzz
+    clk = _FakeClock()
+    srv = RetrievalServer(p, _StubEmbedder(p.table), batch_size=4,
+                          max_delay_ms=1.0, clock=clk)
+    ctl = ReoptController(p, config=_fast_cfg(min_queries=8))
+    srv.attach_reopt(ctl)
+
+    pending, n_sub = [], 0
+    for i in range(80):
+        r = rng.random()
+        if r < 0.55:
+            kind = int(rng.integers(3))
+            req = (_req(i, k=5) if kind == 0 else
+                   _req(i, k=8) if kind == 1 else
+                   _req(i, k=4, predicate=Q.NR("price", 20, 80)))
+            ids = p.view().row_ids.copy()    # submit may auto-flush
+            pending.append(srv.submit(req))
+            n_sub += 1
+            pending = _drain(pending, p, ids)
+        elif r < 0.85:
+            ids = p.view().row_ids.copy()
+            clk.advance(float(rng.uniform(0, 0.003)))
+            srv.poll()
+            pending = _drain(pending, p, ids)
+        else:
+            srv.append(numeric=_extra_rows(rng, 2)[0],
+                       vectors=_extra_rows(rng, 2)[1])
+    clk.advance(10.0)
+    ids = p.view().row_ids.copy()
+    srv.flush()
+    pending = _drain(pending, p, ids)
+
+    assert not pending                       # all futures resolved
+    st = srv.stats()
+    assert st["submitted"] == n_sub
+    assert st["served"] + st["shed"] == n_sub and st["shed"] == 0
+    assert ctl.n_folds + ctl.n_swaps >= 1    # background work happened
+    assert st["generation"] == p.generation
+    # end state is still exact and rollback-capable after >= 1 swap/fold
+    q = Q.VK.of("img", p.table.vector["img"][5] + 0.01, 6)
+    rows, _ = p.execute(q, record=False)
+    assert _logical(p.view().row_ids, rows) == \
+        _logical(p.view().row_ids, p.oracle(q))
