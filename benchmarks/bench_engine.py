@@ -53,6 +53,15 @@ the frontier and the rescue work is marginal) with the speedup
 measured loop-only; the JSON records both so trajectories compare
 like with like across hosts.
 
+Calibrated cost-model planning: fits the per-stage cost model
+(``MQRLD.calibrate``), reports per-kind fit quality (Spearman rank
+correlation of predicted vs steady-state observed seconds + median
+relative error), the cost-chosen loop/topology provenance, and the
+cost-chosen configuration's QPS against the fixed-threshold baseline
+(model detached). Acceptance: ratio >= 0.9, every cost-chosen result
+oracle-exact; all recorded under ``cost_model`` in the JSON and
+guarded by scripts/check.sh.
+
 ``--smoke`` (also via ``benchmarks.run --smoke``): toy n / batch,
 repeat=1 — keeps this module executed in CI.
 """
@@ -431,6 +440,103 @@ def run(csv: Csv):
     # mixed-precision scalability sweep (fresh platforms per n)
     # ------------------------------------------------------------------
     _scale_sweep(csv, bench)
+
+    # ---- calibrated cost-model planning ------------------------------
+    # Fit the per-stage cost model from a calibration sweep (the QBS
+    # rings already hold this run's organic stage samples too), then
+    # measure (a) in-sample predicted-vs-observed quality per stage
+    # kind — Spearman rank correlation over steady-state samples, the
+    # property the planner actually needs (ORDERING candidates
+    # correctly), plus the fit's median relative error — and (b) the
+    # cost-chosen configuration's end-to-end QPS against the
+    # fixed-threshold baseline (same platform with the model detached,
+    # i.e. exactly the pre-calibration default path). Acceptance:
+    # ratio >= 0.9 and every cost-chosen result oracle-exact.
+    from repro.core import cost as costm
+    from repro.core.qbs import recall_at_k
+
+    p.calibrate(batch=common.smoke_n(16, 8),
+                repeats=1 if common.SMOKE else 2, seed=5)
+
+    def _spearman(a, b):
+        ra = np.argsort(np.argsort(a)).astype(np.float64)
+        rb = np.argsort(np.argsort(b)).astype(np.float64)
+        ra -= ra.mean()
+        rb -= rb.mean()
+        den = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+        return float((ra * rb).sum() / den) if den > 0 else 0.0
+
+    cm = p.cost_model
+    kind_stats, corrs = {}, []
+    for kind_ in sorted(cm.kinds):
+        s_ = p.qbs.cost_samples(kind_)
+        if s_ is None:
+            continue
+        Xs, ys = costm.steady_samples(*s_)
+        preds = np.maximum(Xs @ np.asarray(cm.kinds[kind_]["w"]), 1e-9)
+        rc = _spearman(preds, ys)
+        corrs.append(rc)
+        kind_stats[kind_] = {
+            "n": int(cm.kinds[kind_]["n"]),
+            "median_rel_err": float(cm.kinds[kind_]["err"]),
+            "rank_corr": rc,
+        }
+    rank_corr = float(np.mean(corrs)) if corrs else 0.0
+
+    from repro.core.planner import Session
+    sess_cost = Session(p, interpret=True, auto_topology=True)
+    plan_cost = sess_cost.plan(queries)
+    plan_cost.execute()                      # warm + record QBS widths
+    rows_cost = plan_cost.execute()[0]       # compile seeded shapes
+    choices = sess_cost.plan(queries).choices
+    oracle_cost = all(
+        recall_at_k(r_, p.oracle(q_)) == 1.0
+        and len(set(np.asarray(r_).tolist()))
+        == len(set(np.asarray(p.oracle(q_)).tolist()))
+        for r_, q_ in zip(rows_cost, queries))
+
+    cm_detached, p.cost_model = p.cost_model, None
+    try:
+        sess_fix = Session(p, interpret=True)
+        sess_fix.plan(queries).execute()
+        sess_fix.plan(queries).execute()
+    finally:
+        p.cost_model = cm_detached
+    # interleaved min-of-5: alternate the two sessions per repeat so
+    # compile-cache fills, QBS width drift from the measured executes
+    # themselves, and CPU frequency wander hit both equally — two
+    # back-to-back timing blocks systematically favor whichever runs
+    # second
+    t_cost = t_fix = float("inf")
+    for _ in range(1 if common.SMOKE else 5):
+        tc, _ = timeit(lambda: sess_cost.plan(queries).execute(),
+                       repeat=1)
+        t_cost = min(t_cost, tc)
+        p.cost_model = None
+        try:
+            tf, _ = timeit(lambda: sess_fix.plan(queries).execute(),
+                           repeat=1)
+        finally:
+            p.cost_model = cm_detached
+        t_fix = min(t_fix, tf)
+    qps_cost = len(queries) / t_cost
+    qps_fix = len(queries) / t_fix
+    ratio = qps_cost / max(qps_fix, 1e-12)
+    bench["cost_model"] = {
+        "kinds": kind_stats,
+        "rank_corr": rank_corr,
+        "choices": choices,
+        "qps_cost_chosen": qps_cost,
+        "qps_fixed_threshold": qps_fix,
+        "qps_ratio_vs_fixed": ratio,
+        "oracle_exact": bool(oracle_cost),
+    }
+    csv.add("engine/cost_model_rank_corr", rank_corr,
+            f"kinds={sorted(cm.kinds)} "
+            f"errs={[round(v['median_rel_err'], 3) for v in kind_stats.values()]}")
+    csv.add("engine/cost_model_qps_ratio_vs_fixed", ratio,
+            f"target>=0.9 oracle_exact={oracle_cost} "
+            f"chosen={choices.get('chosen')} by={choices.get('by')}")
 
     bench["csv"] = [[name, v, d] for name, v, d in csv.rows]
     with open(_JSON_PATH, "w") as f:

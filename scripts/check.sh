@@ -29,7 +29,8 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 echo "== engine + sharding suites under 8 simulated devices =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-  python -m pytest -x -q tests/test_sharding.py tests/test_engine.py
+  python -m pytest -x -q tests/test_sharding.py tests/test_engine.py \
+  tests/test_cost.py
 
 # mixed-precision: the tier-1 suites above run with the default fp32
 # scan; rerun the kernel + engine + precision suites with int8 forced
@@ -50,7 +51,10 @@ MQRLD_PRECISION=int8 \
 # and the sharded QPS sweep greppable under a stable heading even if the
 # full smoke suite is trimmed. The 8-device flag lets the shard sweep
 # cover every count; the run rewrites BENCH_engine.json (machine-readable
-# perf trajectory).
+# perf trajectory). The run also FITS the planner cost model from its
+# own smoke calibration sweep (MQRLD.calibrate) and records the fit
+# quality + cost-chosen-vs-fixed-threshold QPS under "cost_model" for
+# the guard below.
 echo "== planner + ingest + sharded smoke benchmark (plan cache, delta QPS, shard sweep) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
@@ -63,7 +67,7 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
 # above rewrote the file, so it must equal HEAD, with a dirty flag for
 # uncommitted edits) — rows stamped with an inherited seed commit were
 # exactly the bug git_stamp() exists to prevent.
-echo "== BENCH_engine.json precision-row guard =="
+echo "== BENCH_engine.json precision-row + cost-model guard =="
 HEAD_SHORT="$(git rev-parse --short HEAD)" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
 import json
@@ -88,7 +92,33 @@ for n, row in scale.items():
             sys.exit(f"BENCH_engine.json: scale[{n}] lacks {prec} row")
     if not row.get("int8_rows_identical"):
         sys.exit(f"BENCH_engine.json: scale[{n}] int8 rows NOT identical")
-print(f"ok: scale rows for n={sorted(scale, key=int)}, "
+# calibrated cost-model planning: the smoke run must fit the model,
+# log the plan's loop/topology provenance, keep predicted-vs-observed
+# rank agreement positive, and stay near the fixed-threshold baseline
+# with every cost-chosen result oracle-exact. Bounds are LOOSE (rank
+# 0.2, ratio 0.5) — smoke scale on a noisy CI host ranks candidates,
+# it does not reproduce the >=0.9 acceptance ratio measured at full
+# scale; exactness is the only hard bar.
+cm = bench.get("cost_model") or {}
+if not cm.get("kinds"):
+    sys.exit("BENCH_engine.json: cost_model fitted no stage kinds")
+for key in ("rank_corr", "qps_ratio_vs_fixed", "choices", "oracle_exact"):
+    if key not in cm:
+        sys.exit(f"BENCH_engine.json: cost_model lacks {key}")
+if cm["rank_corr"] < 0.2:
+    sys.exit(f"BENCH_engine.json: cost_model rank_corr {cm['rank_corr']:.2f}"
+             f" < 0.2 (predictions do not even order the observations)")
+if cm["qps_ratio_vs_fixed"] < 0.5:
+    sys.exit(f"BENCH_engine.json: cost-chosen config at "
+             f"{cm['qps_ratio_vs_fixed']:.2f}x the fixed-threshold "
+             f"baseline (< 0.5 smoke floor)")
+if not cm["oracle_exact"]:
+    sys.exit("BENCH_engine.json: cost-chosen results NOT oracle-exact")
+if "by" not in (cm["choices"] or {}):
+    sys.exit("BENCH_engine.json: cost_model.choices lacks provenance")
+print(f"ok: scale rows for n={sorted(scale, key=int)}, cost model "
+      f"kinds={sorted(cm['kinds'])} rank_corr={cm['rank_corr']:.2f} "
+      f"ratio={cm['qps_ratio_vs_fixed']:.2f} by={cm['choices']['by']}, "
       f"commit {bench['git_commit']}")
 EOF
 

@@ -1,0 +1,455 @@
+"""Calibrated per-host execution cost model for planner path choices.
+
+The planner historically picked execution paths — host vs device beam
+loop, the V.R dense-column fallback, shard topology, beam/round budget —
+by fixed constants (``engine._VR_DENSE_CUTOFF`` and session defaults)
+that are only right on one host: the 2-core CI container and a real
+8-device mesh want opposite answers. This module replaces those
+constants with a small learned model, calibrated per host:
+
+  stage kinds     one linear model per compiled stage family:
+                    "knn:host"          host-driven doubling beam loop
+                    "knn:device"        on-device ``lax.while_loop``
+                    "knn:sharded:sN"    T-sharded loop over an N-mesh
+                    "vr:tile"           V.R union GEMM over survivors
+                    "vr:dense"          V.R dense full-column pass
+  features        analytic per-stage vectors (``knn_features`` /
+                  ``vr_features``): queries, first-round scan FLOPs
+                  (precision-honest via ``repro.utils.roofline``
+                  dtype-aware peaks), candidate rows staged, top-k
+                  work, round budget, collective volume — the same
+                  roofline axes ``utils.hlo.stage_cost_features``
+                  extracts from compiled HLO, specialized to retrieval
+                  quantities the planner knows before compiling.
+  fit             ridge regression (``w = (XtX + lam I)^-1 Xt y``) over
+                  (features, observed seconds) samples from the QBS
+                  cost rings (``QBSTable.record_cost``), populated by
+                  ``HybridEngine`` timing every executed stage.
+  calibration     ``calibrate_platform`` runs a synthetic hybrid batch
+                  sweep (bench_engine-style micro-runs) through every
+                  available loop kind and fits from the recorded rings.
+  persistence     ``cost_model.json`` in the platform snapshot next to
+                  ``platform.json`` (``repro.core.persist``), host
+                  fingerprint included — a snapshot moved to a new
+                  host keeps serving (the model is advisory) but
+                  should recalibrate.
+  online refit    every executed plan feeds observed stage times back
+                  through QBS; ``maybe_refit`` refits after
+                  ``_REFIT_EVERY`` new samples — the same feedback
+                  loop as query-aware beam seeding.
+
+Fallback contract: every consumer treats the model as ADVISORY. A
+platform without a calibrated model (the default) behaves byte-
+identically to the fixed-threshold code: ``Session.plan`` keeps the
+session's configured loop/topology, ``_vr_masks`` keeps the static
+``_VR_DENSE_CUTOFF`` test. A fitted kind only STEERS decisions while
+its in-sample error stays below ``CostModel.RELIABLE_ERR``
+(``reliable``) — a fit polluted beyond that (e.g. compile-laden
+one-shot samples the trimmed refit could not separate) reverts its
+consumers to the same fixed-threshold behavior until recalibration
+cleans it up. ``predict`` likewise declines (returns None) outside the
+fitted feature range (``EXTRAPOLATION_MAX`` x the training max): ridge
+weights can be negative, so far extrapolation inverts — a stage shape
+much bigger than anything calibrated falls back to the fixed
+thresholds too. Predictions only ever move work between exact paths —
+results never depend on them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.utils.roofline import peak_flops
+
+COST_MODEL_VERSION = 1
+_RIDGE_LAMBDA = 1e-3     # relative to mean feature scale (see ridge_fit)
+_MIN_SAMPLES = 8         # per kind; fewer leaves the kind uncalibrated
+_REFIT_EVERY = 32        # new observed samples between online refits
+
+KNN_FEATURE_DIM = 7
+VR_FEATURE_DIM = 5
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 0 else 1
+
+
+def prec_scale(precision: str) -> float:
+    """Relative per-FLOP cost of the scan precision against fp32 (the
+    reference the feature vectors are normalized to): fp32 -> 1.0,
+    bf16 -> 0.5, int8 -> 0.25 on MXU-class hardware — straight from the
+    dtype-aware roofline peaks, so the compute feature is precision-
+    honest (the int8 scan path must not be charged at fp32 rates)."""
+    return peak_flops("fp32") / peak_flops(precision or "fp32")
+
+
+def knn_kind(device_loop: bool, shards: int = 0) -> str:
+    """Stage-kind key for one KNN group execution."""
+    if device_loop and shards:
+        return f"knn:sharded:s{int(shards)}"
+    return "knn:device" if device_loop else "knn:host"
+
+
+def shards_of_kind(kind: str) -> Optional[int]:
+    """Inverse of ``knn_kind`` for sharded kinds: the mesh size, or
+    None for non-sharded kinds."""
+    if kind.startswith("knn:sharded:s"):
+        try:
+            return int(kind.rsplit("s", 1)[1])
+        except ValueError:
+            return None
+    return None
+
+
+def loop_widths(device_loop: bool, shards: int, beam: int, tiles: int,
+                seed: Optional[int] = None) -> Tuple[int, int]:
+    """(first-round width, straggler/doubling width) in tiles of the
+    loop's scan layout — MIRRORS ``HybridEngine._run_jobs`` (and the
+    loop defaults in ``batched_knn_device``/``batched_knn_sharded``) so
+    plan-time predictions and execute-time recordings describe the same
+    program. ``seed`` is the QBS convergence width (or None)."""
+    tiles = max(1, int(tiles))
+    beam = max(1, int(beam))
+    if device_loop and shards:
+        s = max(1, int(shards))
+        w1 = max(1, min(-(-max(1, beam // 2) // s), tiles))
+        ws = max(1, _next_pow2(seed)) if seed else max(1, -(-beam // s))
+        return w1, ws
+    if device_loop:
+        w1 = max(1, min(max(1, beam // 2), tiles))
+        ws = max(beam, _next_pow2(seed)) if seed else beam
+        return w1, ws
+    beam_eff = max(beam, _next_pow2(beam + seed)) if seed else beam
+    w = max(1, min(beam_eff, tiles))
+    return w, w
+
+
+def knn_features(g: int, w1: int, ws: int, cap: int, dim: int, k: int,
+                 tiles: int, shards: int, precision: str
+                 ) -> Tuple[float, ...]:
+    """Feature vector for one KNN group execution.
+
+    [bias, queries, first-round scan MFLOP-equivalents (precision-
+    scaled), candidate rows staged (1e6), top-k merge work (1e3),
+    straggler round budget, collective volume (1e3; 0 unsharded)] —
+    the roofline axes (compute / memory / collective) plus the loop
+    structure terms (rounds, per-query fixed cost)."""
+    g = max(1, int(g))
+    w1 = max(1, int(w1))
+    ws = max(1, int(ws))
+    cap = max(1, int(cap))
+    dim = max(1, int(dim))
+    tiles = max(1, int(tiles))
+    ps = prec_scale(precision)
+    scan = g * w1 * cap * dim * ps / 1e6
+    gather = g * w1 * cap / 1e6
+    topk = g * k * math.log2(max(2.0, float(w1 * cap))) / 1e3
+    rounds = float(-(-(tiles - w1) // ws)) if tiles > w1 else 1.0
+    coll = (shards * g * k / 1e3) if shards else 0.0
+    return (1.0, float(g), scan, gather, topk, rounds, coll)
+
+
+def knn_plan_features(*, device_loop: bool, shards: int, g: int, k: int,
+                      beam: int, tiles: int, cap: int, dim: int,
+                      precision: str, seed: Optional[int] = None
+                      ) -> Tuple[float, ...]:
+    """``knn_features`` with the round widths derived from plan-time
+    quantities via ``loop_widths`` — THE feature builder shared by the
+    engine's execute-time recording and the planner's predictions (one
+    function, so the two can never drift)."""
+    w1, ws = loop_widths(device_loop, shards, beam, tiles, seed)
+    return knn_features(g, w1, ws, cap, dim, k, tiles, shards, precision)
+
+
+def vr_features(kind: str, g: int, union_tiles: int, cap: int, dim: int,
+                n: int) -> Tuple[float, ...]:
+    """Feature vector for one V.R group evaluation. Both kinds share
+    [bias, queries, GEMM MFLOPs, rows staged (1e6), mask decode (1e6)]
+    so their predictions are directly comparable — the dense pass
+    touches every row, the tile pass the pow2-padded union."""
+    g = max(1, int(g))
+    cap = max(1, int(cap))
+    dim = max(1, int(dim))
+    if kind == "vr:dense":
+        rows = float(max(1, n))
+    else:
+        rows = float(_next_pow2(max(1, union_tiles)) * cap)
+    return (1.0, float(g), g * rows * dim / 1e6, rows * dim / 1e6,
+            g * rows / 1e6)
+
+
+def ridge_fit(X: np.ndarray, y: np.ndarray,
+              lam: float = _RIDGE_LAMBDA) -> np.ndarray:
+    """Ridge weights ``(XtX + lam*scale*I)^-1 Xt y`` with the
+    regularizer scaled to the mean diagonal of XtX, so the same lambda
+    works across feature magnitudes."""
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    xtx = X.T @ X
+    scale = float(np.trace(xtx)) / max(1, xtx.shape[0])
+    reg = lam * max(scale, 1e-12) * np.eye(xtx.shape[0])
+    return np.linalg.solve(xtx + reg, X.T @ y)
+
+
+def steady_samples(X: np.ndarray, y: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Steady-state collapse of raw (features, seconds) samples:
+    repeated executions of the same stage shape re-record the same
+    feature row, and the first carries jit compile time — an
+    order-of-magnitude outlier that would dominate a least-squares
+    fit. Keep the MIN observed seconds per distinct feature row (the
+    classic microbenchmark steady-state estimator)."""
+    best: Dict[Tuple, float] = {}
+    for row, sec in zip(X, y):
+        key = tuple(row)
+        if key not in best or sec < best[key]:
+            best[key] = float(sec)
+    return (np.asarray([list(k) for k in best], np.float64),
+            np.asarray([best[k] for k in best], np.float64))
+
+
+class CostModel:
+    """Per-host collection of per-stage-kind ridge models (module doc).
+
+    ``kinds`` maps a stage kind to {"w": weights, "n": training
+    samples, "err": in-sample median relative error}; ``host`` records
+    the calibration host's fingerprint. Serializes to/from the
+    ``cost_model.json`` snapshot file."""
+
+    #: in-sample median relative error above which a fitted kind is no
+    #: longer trusted to STEER decisions (see module doc): predictions
+    #: are still reported (explain), but planners fall back to the
+    #: fixed-threshold behavior for that kind.
+    RELIABLE_ERR = 1.0
+
+    def __init__(self, kinds: Optional[Dict] = None,
+                 host: Optional[Dict] = None):
+        self.kinds: Dict[str, Dict] = dict(kinds or {})
+        self.host: Dict = dict(host or {})
+        # online-refit cursor: QBSTable.cost_total at the last fit
+        self._fit_seen = 0
+
+    # ----------------------------------------------------------- predict
+    def calibrated(self, *kinds: str) -> bool:
+        """True when every named kind has a fitted model (no names:
+        true when ANY kind is fitted)."""
+        if not kinds:
+            return bool(self.kinds)
+        return all(k in self.kinds for k in kinds)
+
+    def reliable(self, *kinds: str) -> bool:
+        """True when every named kind is fitted AND its in-sample err
+        is at most ``RELIABLE_ERR`` — the gate every decision consumer
+        uses. A model whose typical prediction is off by more than
+        ~1x must not override measured defaults or QBS feedback."""
+        return all(k in self.kinds
+                   and float(self.kinds[k].get("err", np.inf))
+                   <= self.RELIABLE_ERR
+                   for k in kinds)
+
+    #: extrapolation bound: predictions are declined once any feature
+    #: exceeds this multiple of the largest value seen in training —
+    #: a ridge fit (weights can be negative) inverts arbitrarily far
+    #: outside its fitted range, so out-of-distribution queries fall
+    #: back to the fixed thresholds instead of trusting extrapolation.
+    EXTRAPOLATION_MAX = 4.0
+
+    def predict(self, kind: str, feats: Sequence[float]
+                ) -> Optional[float]:
+        """Predicted stage seconds, or None when the kind is
+        uncalibrated, the feature vector does not match the fit, or
+        any feature lies beyond ``EXTRAPOLATION_MAX`` times the fitted
+        training range (``hi``) — consumers treat None as "no opinion"
+        and keep their fixed-threshold behavior."""
+        ent = self.kinds.get(kind)
+        if ent is None:
+            return None
+        w = np.asarray(ent["w"], np.float64)
+        x = np.asarray(feats, np.float64)
+        if x.shape != w.shape:
+            return None
+        hi = ent.get("hi")
+        if hi is not None and np.any(
+                x > self.EXTRAPOLATION_MAX * np.asarray(hi, np.float64)
+                + 1e-12):
+            return None
+        return float(max(float(w @ x), 1e-9))
+
+    # --------------------------------------------------------------- fit
+    def fit_from_qbs(self, qbs, min_samples: int = _MIN_SAMPLES
+                     ) -> List[str]:
+        """Fit every stage kind with enough samples in the QBS cost
+        rings; returns the kinds (re)fitted. Kinds below the sample
+        floor keep their previous fit (or stay uncalibrated)."""
+        fitted: List[str] = []
+        for kind in sorted(getattr(qbs, "cost", {})):
+            s = qbs.cost_samples(kind)
+            if s is None:
+                continue
+            X, y = s
+            if len(y) < min_samples:
+                continue
+            X, y = steady_samples(X, y)
+            w = ridge_fit(X, y)
+            pred = np.maximum(X @ w, 1e-9)
+            rel = np.abs(pred - y) / np.maximum(y, 1e-9)
+            # trimmed refit: the min-collapse above removes compile
+            # outliers only for REPEATED shapes — a shape executed
+            # exactly once (cold plan, one-off delta state) leaves its
+            # compile-laden sample in, and ridge is not robust: one
+            # 100x outlier among clean samples wrecks the kind's fit
+            # (observed as knn:device err ~25x from organic bench
+            # traffic). Drop order-of-magnitude relative-residual
+            # outliers and refit once, keeping at least half the data.
+            keep = rel <= max(5.0 * float(np.median(rel)), 1.0)
+            if int(keep.sum()) >= max(4, len(y) // 2) \
+                    and int(keep.sum()) < len(y):
+                w = ridge_fit(X[keep], y[keep])
+                pred = np.maximum(X[keep] @ w, 1e-9)
+                X, y = X[keep], y[keep]
+            err = float(np.median(np.abs(pred - y)
+                                  / np.maximum(y, 1e-9)))
+            self.kinds[kind] = {"w": [float(v) for v in w],
+                                "n": int(len(y)), "err": err,
+                                # per-feature training max: the
+                                # extrapolation bound predict() enforces
+                                "hi": [float(v) for v in X.max(axis=0)]}
+            fitted.append(kind)
+        self._fit_seen = int(getattr(qbs, "cost_total", 0))
+        return fitted
+
+    def maybe_refit(self, qbs) -> bool:
+        """Online recalibration: refit once ``_REFIT_EVERY`` new stage
+        samples have been observed since the last fit (the planner
+        calls this after every executed plan — cheap no-op between
+        refit points)."""
+        total = int(getattr(qbs, "cost_total", 0))
+        if total - self._fit_seen < _REFIT_EVERY:
+            return False
+        return bool(self.fit_from_qbs(qbs))
+
+    # ----------------------------------------------------------- persist
+    def to_dict(self) -> Dict:
+        return {"version": COST_MODEL_VERSION, "host": self.host,
+                "kinds": self.kinds}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CostModel":
+        return cls(kinds=d.get("kinds") or {}, host=d.get("host") or {})
+
+
+def host_fingerprint() -> Dict:
+    """What the calibration was measured on — recorded into the
+    persisted model so a snapshot moved across hosts is recognizably
+    stale (the model stays advisory either way)."""
+    import os
+
+    import jax
+    return {"cpu_count": os.cpu_count() or 1,
+            "device_count": jax.device_count(),
+            "backend": jax.devices()[0].platform}
+
+
+# ---------------------------------------------------------------------------
+# Calibration sweep
+# ---------------------------------------------------------------------------
+def _calibration_batches(p, rng: np.random.Generator, batch: int):
+    """Synthetic hybrid batches over the platform's own columns,
+    covering every stage family: pure V.K, filtered V.K, small-radius
+    V.R (tile route) and large-radius V.R (dense fallback)."""
+    from repro.core import query as Q
+    table = p.table
+    attr = next(iter(table.vector))
+    col = np.asarray(table.vector[attr], np.float32)
+    n = len(col)
+    num = next(iter(table.numeric), None)
+    # Radius scales from an anchor's true distance profile. r_small is
+    # the ~10-nearest-neighbor distance — tight enough that the leaf
+    # union stays a few tiles and the device path genuinely takes the
+    # tile route (a quantile of ALL pairwise distances concentrates far
+    # out in high dimension and routes everything dense, starving the
+    # vr:tile kind of calibration samples). r_large blankets the set.
+    anchor = col[rng.integers(0, n)]
+    d = np.sort(np.sqrt(((col - anchor[None, :]) ** 2).sum(1)))
+    d = d[d > 0]
+    r_small = float(d[min(10, len(d) - 1)]) if len(d) else 1.0
+    r_large = float(d[-1] * 1.1 + 1e-6) if len(d) else 1.0
+
+    def vk(k=8):
+        v = col[rng.integers(0, n)] + rng.normal(0, 1e-3, col.shape[1])
+        return Q.VK.of(attr, v.astype(np.float32), k)
+
+    def vr(radius):
+        v = col[rng.integers(0, n)]
+        return Q.VR.of(attr, v, radius)
+
+    def vr_near(radius):
+        # jittered copies of the SAME anchor: the batch's leaf union
+        # stays a handful of tiles even at full batch width, so the
+        # device path actually exercises the tile route (independent
+        # anchors union across the whole space and always fall back
+        # dense, leaving vr:tile uncalibrated)
+        v = anchor + rng.normal(0, 1e-3, col.shape[1])
+        return Q.VR.of(attr, v.astype(np.float32), radius)
+
+    # two k scales so the fitted top-k term sees kmax variation (one
+    # group per attr per batch means per-batch kmax IS the k feature)
+    batches = [[vk(8) for _ in range(batch)],
+               [vk(32) for _ in range(max(2, batch // 2))],
+               [vr_near(r_small) for _ in range(batch)],
+               [vr(r_large) for _ in range(max(2, batch // 2))]]
+    if num is not None:
+        nv = np.asarray(table.numeric[num], np.float64)
+        lo, hi = float(np.quantile(nv, 0.2)), float(np.quantile(nv, 0.8))
+        batches.append([Q.And.of(Q.NR(num, lo, hi), vk())
+                        for _ in range(batch)])
+        batches.append([Q.And.of(vr_near(r_small), vk(4))
+                        for _ in range(max(2, batch // 2))])
+    return batches
+
+
+def calibrate_platform(p, *, shard_counts: Optional[Sequence[int]] = None,
+                       batch: int = 16, repeats: int = 2,
+                       seed: int = 0) -> "CostModel":
+    """Run the calibration sweep and fit/refresh ``p.cost_model``.
+
+    Micro-runs the synthetic batches through the host loop, the device
+    loop, and each requested shard topology (default: the platform's
+    own ``default_shards`` when it fits the visible devices), letting
+    the engine's stage timers fill the QBS cost rings, then fits one
+    ridge model per observed stage kind. Returns the (installed)
+    model; predictions for kinds below the sample floor stay
+    unavailable, and every consumer falls back to the fixed
+    thresholds for them."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    if shard_counts is None:
+        shard_counts = [s for s in {p.default_shards or 0} if s]
+    shard_counts = [int(s) for s in shard_counts
+                    if 1 <= int(s) <= jax.device_count()]
+    sessions = [(p.session(device_loop=False, shards=0), False),
+                (p.session(device_loop=True, shards=0), True)]
+    for s in shard_counts:
+        sessions.append((p.session(device_loop=True, shards=s), True))
+    for _ in range(max(1, repeats)):
+        batches = _calibration_batches(p, rng, batch)
+        for sess, dl in sessions:
+            for qs in batches:
+                # each execution yields ONE sample per stage group, so
+                # run every batch at three sizes — that multiplies the
+                # sample count past the fit floor AND spreads the group
+                # size g, without which the per-kind regressions would
+                # fit from a single near-constant design point
+                for sub in (qs, qs[::2], qs[1::2],
+                            qs[:max(1, len(qs) // 4)]):
+                    if sub:
+                        sess.plan(sub, device_loop=dl).execute()
+    model = p.cost_model if getattr(p, "cost_model", None) is not None \
+        else CostModel()
+    model.fit_from_qbs(p.qbs)
+    model.host = host_fingerprint()
+    p.cost_model = model
+    return model

@@ -70,7 +70,12 @@ boundary are re-checked on the host with the exact formula. When the
 bound is unselective (surviving tiles cover more than
 ``_VR_DENSE_CUTOFF`` of the table) the planner falls back to the dense
 full-column mask (also the oracle path's behavior), which is cheaper
-than a near-total gather.
+than a near-total gather. With a calibrated cost model attached
+(``cost_model``, see ``repro.core.cost``) the dense-vs-tile decision is
+made by predicted cost instead of the fixed cutoff — the static
+threshold remains as the uncalibrated fallback — and every executed
+KNN/V.R stage reports (kind, features, seconds) through
+``EngineStats.stage_samples`` so the model recalibrates online.
 
 Mixed-precision tile scan (``precision``: "fp32" | "bf16" | "int8"):
 both KNN beam loops can run their tile distances in reduced precision
@@ -122,6 +127,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cost as costm
 from repro.core import query as Q
 from repro.core.lake import _next_pow2
 from repro.kernels import ops
@@ -229,6 +235,12 @@ class EngineStats:
     # (archetype, converged width in tiles) per executed KNN group — the
     # feedback signal Session records into QBS for query-aware seeding
     knn_group_widths: List[Tuple[str, int]] = field(default_factory=list)
+    # (stage kind, feature vector, observed seconds) per executed KNN
+    # group and V.R group (see ``repro.core.cost``) — Session feeds
+    # these into the QBS cost rings, closing the calibrated cost
+    # model's online-recalibration loop
+    stage_samples: List[Tuple[str, Tuple[float, ...], float]] = \
+        field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -1391,8 +1403,17 @@ class HybridEngine:
                  device_loop: bool = True,
                  device_tile: Optional[int] = None,
                  shards: Optional[int] = None, mesh=None,
-                 precision: str = "fp32", quant_cache=None):
+                 precision: str = "fp32", quant_cache=None,
+                 cost_model=None):
         from repro.utils import quant
+        # calibrated cost model (repro.core.cost.CostModel, or None):
+        # ADVISORY — when calibrated for both V.R kinds, ``_vr_masks``
+        # picks dense-vs-tile by predicted cost instead of the static
+        # ``_VR_DENSE_CUTOFF`` threshold; uncalibrated engines keep the
+        # fixed-threshold behavior bit-for-bit. Either path is exact.
+        # The owning platform refreshes this on every ``engine()``
+        # call, so cached engines see later calibrations.
+        self.cost_model = cost_model
         if precision not in quant.PRECISIONS:
             raise ValueError(f"precision must be one of {quant.PRECISIONS},"
                              f" got {precision!r}")
@@ -1871,7 +1892,18 @@ class HybridEngine:
         it is the unselective case where a full-column pass beats any
         gather, sharded or not. tile_route=False (oracle path): always
         the dense full-column pass, masked by the leaf-survival matrix
-        — the original engine behavior."""
+        — the original engine behavior.
+
+        Dense-vs-tile DECISION (cost-model contract): when
+        ``self.cost_model`` is reliably calibrated for BOTH "vr:dense"
+        and "vr:tile" (see ``repro.core.cost``), the route is whichever
+        predicts cheaper on this group's features; otherwise the
+        static ``_VR_DENSE_CUTOFF`` row-fraction threshold decides —
+        the uncalibrated fallback. Both routes return identical masks,
+        so the decision only moves time. Whichever route runs, its
+        (kind, features, seconds) lands in ``stats.stage_samples`` for
+        QBS cost recording / online recalibration."""
+        t_vr0 = time.time()
         vecs = np.stack([b.vec() for b in grp])
         r = np.asarray([b.radius for b in grp], np.float32)
         r2 = r.astype(np.float32) ** 2
@@ -1889,9 +1921,21 @@ class HybridEngine:
         g = len(grp)
         stats.vr_tiles_pruned += g * self.n_tiles - touched
         union = np.nonzero(leaf_ok.any(axis=0))[0]
-        if not tile_route \
-                or len(union) * self.cap > _VR_DENSE_CUTOFF \
-                * max(1, self.n):
+        dim = vecs.shape[1]
+        feats_dense = costm.vr_features("vr:dense", g, len(union),
+                                        self.cap, dim, self.n)
+        feats_tile = costm.vr_features("vr:tile", g, len(union),
+                                       self.cap, dim, self.n)
+        use_dense = len(union) * self.cap > _VR_DENSE_CUTOFF \
+            * max(1, self.n)
+        cm = self.cost_model
+        if tile_route and cm is not None \
+                and cm.reliable("vr:dense", "vr:tile"):
+            pd = cm.predict("vr:dense", feats_dense)
+            pt = cm.predict("vr:tile", feats_tile)
+            if pd is not None and pt is not None:
+                use_dense = pd <= pt
+        if not tile_route or use_dense:
             if tile_route:
                 stats.vr_dense_fallbacks += 1
             m, near = _vr_dense_masks(qs, jnp.asarray(r),
@@ -1904,11 +1948,15 @@ class HybridEngine:
                 col = self.vec_np[attr]
                 exact = (((col[ris] - vecs[gis]) ** 2).sum(1) <= r2[gis])
                 m[gis, ris] = exact
+            stats.stage_samples.append(
+                ("vr:dense", feats_dense, time.time() - t_vr0))
             return m, touched
         stats.vr_tiles_scanned += touched
         if sharded:
-            return self._vr_union_sharded(attr, st, cols, qs, r2,
-                                          vecs), touched
+            m = self._vr_union_sharded(attr, st, cols, qs, r2, vecs)
+            stats.stage_samples.append(
+                ("vr:tile", feats_tile, time.time() - t_vr0))
+            return m, touched
         # pad the union to a power of two so compiled shapes stay
         # bounded across batches; pad columns have no members
         u = len(union)
@@ -1932,6 +1980,8 @@ class HybridEngine:
             rws = rows[cis]
             exact = (((col[rws] - vecs[gis]) ** 2).sum(1) <= r2[gis])
             m[gis, rws] = exact
+        stats.stage_samples.append(
+            ("vr:tile", feats_tile, time.time() - t_vr0))
         return m, touched
 
     # --------------------------------------------------------------- stage 3
@@ -2043,6 +2093,7 @@ class HybridEngine:
         # batches immediately read the clean base seed again.
         suffix = ":delta" if self.delta_tiles else ""
         for grp in groups:
+            t_g0 = time.time()
             idxs = list(grp.jobs)
             attr, kmax, n_masked = grp.attr, grp.kmax, grp.n_masked
             arch = grp.archetype + suffix
@@ -2063,6 +2114,8 @@ class HybridEngine:
                 w1_eff = max(1, min(
                     -(-max(1, self.beam // 2) // s), st.t_total))
                 signal = np.maximum(conv[0] - w1_eff, 0)
+                feat_shards, feat_tiles = s, st.t_total
+                feat_cap, feat_dim = st.cap, qs_np.shape[1]
             else:
                 qs = jnp.asarray(np.stack([jobs[i][0].vec()
                                            for i in idxs]))
@@ -2107,9 +2160,23 @@ class HybridEngine:
                                   stats=stats, conv_out=conv)
                     w_start = max(1, min(beam_eff, l))
                     signal = np.maximum(conv[0] - w_start, 0)
+                feat_shards, feat_tiles = 0, l
+                feat_cap, feat_dim = geom.cap, qs.shape[1]
             width = int(np.ceil(np.quantile(signal, 0.9))) if len(signal) \
                 else 0
             stats.knn_group_widths.append((arch, width))
+            # calibrated-cost feedback: the group's observed seconds
+            # against the same analytic features the planner predicts
+            # from (ONE builder, ``cost.knn_plan_features`` — record
+            # and predict can never drift)
+            stats.stage_samples.append((
+                costm.knn_kind(device_loop, feat_shards),
+                costm.knn_plan_features(
+                    device_loop=device_loop, shards=feat_shards,
+                    g=len(idxs), k=kmax, beam=self.beam,
+                    tiles=feat_tiles, cap=feat_cap, dim=feat_dim,
+                    precision=self.precision, seed=seed),
+                time.time() - t_g0))
             for pos, i in enumerate(idxs):
                 out[i] = rows[pos, :jobs[i][0].k]
         return out  # type: ignore[return-value]

@@ -146,6 +146,14 @@ def _write_snapshot(platform, directory: str):
         json.dump({"default_shards": platform.default_shards,
                    "default_precision": platform.default_precision,
                    "generation": getattr(platform, "generation", 0)}, f)
+    # calibrated execution cost model, next to platform.json: a
+    # restarted platform plans by predicted cost immediately instead
+    # of re-running the calibration sweep (the host fingerprint rides
+    # along — a snapshot moved across hosts should recalibrate)
+    cm = getattr(platform, "cost_model", None)
+    if cm is not None:
+        with open(os.path.join(directory, "cost_model.json"), "w") as f:
+            json.dump(cm.to_dict(), f, indent=1)
     # mixed-precision tile planes: when an engine matching the persisted
     # default precision has quantized its BASE layouts, snapshot them so
     # a reloaded platform serves without re-quantizing (load feeds the
@@ -289,6 +297,11 @@ def load_platform(directory: str, shards: Optional[int] = None,
     qbs_path = os.path.join(directory, "qbs.json")
     if os.path.exists(qbs_path):
         p.qbs = QBSTable.load(qbs_path)
+    cm_path = os.path.join(directory, "cost_model.json")
+    if os.path.exists(cm_path):
+        from repro.core.cost import CostModel
+        with open(cm_path) as f:
+            p.cost_model = CostModel.from_dict(json.load(f))
     p._build_meta()
     delta_path = os.path.join(directory, "delta.npz")
     if os.path.exists(delta_path):
@@ -330,6 +343,12 @@ def rollback_platform(directory: str, into=None,
                  "transform", "layout", "report", "qbs", "delta",
                  "default_shards", "default_precision", "_quant_cache"):
         setattr(into, attr, getattr(p, attr))
+    # cost model: adopt the rolled-back snapshot's calibration when it
+    # has one, but never WIPE a live calibration rolling back to a
+    # pre-calibration snapshot — it is a host property (per-machine
+    # stage throughput), not an index property
+    if getattr(p, "cost_model", None) is not None:
+        into.cost_model = p.cost_model
     into.delta_epoch += 1
     into._view_cache = None
     into._oracle_cache.clear()

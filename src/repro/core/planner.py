@@ -49,9 +49,42 @@ its own compiled-shape universe and QBS archetype keys (``:sN``) —
 and ``explain()`` reports the topology. Results are identical at
 every shard count.
 
+Calibrated cost-model planning (``repro.core.cost``): when the
+platform carries a calibrated ``cost_model`` (fitted by
+``MQRLD.calibrate()`` / loaded from the snapshot's
+``cost_model.json``), ``Session.plan`` chooses the LOOP KIND and SHARD
+TOPOLOGY by predicted cost instead of the session defaults, and
+``_seeds`` keeps a QBS beam seed only when the model predicts it
+cheaper than the unseeded loop (the beam/round budget choice).
+Predictions come from ``cost.knn_plan_features`` over the engine's
+analytic layout quantities (tiles, cap, dim, beam, precision, shard
+count) — the SAME builder the engine records observed stage times
+against, so predicted and observed stay comparable. Contract:
+
+  * the model is ADVISORY — it only ever moves a batch between exact
+    paths; results never depend on it;
+  * an explicit ``plan(device_loop=...)`` argument always wins (the
+    oracle/bench paths stay pinned), and a session whose topology was
+    pinned explicitly (``auto_topology=False``) only chooses between
+    host and its configured device topology;
+  * a candidate whose stage kind is uncalibrated is skipped, and when
+    the session default's own kind is uncalibrated no choice is made
+    at all — a platform without ``cost_model.json`` (or with a partial
+    calibration) behaves byte-identically to the fixed-threshold code;
+  * every executed plan feeds observed (kind, features, seconds) stage
+    samples back through ``QBSTable.record_cost`` and
+    ``CostModel.maybe_refit`` — online recalibration, the same
+    feedback loop as beam seeding.
+
 EXPLAIN: ``ExecutablePlan.explain()`` returns a structured description —
 per query: chosen path, signature, cache hit/miss, per-V.K beam seed and
-archetype, per-V.R pruned-tile estimates from the triangle bound.
+archetype, per-V.R pruned-tile estimates from the triangle bound. With
+a cost model attached, each fragment's ``knn`` entries carry a
+``cost`` block {kind, predicted_s, observed_s} (observed = mean of the
+QBS cost ring for that kind), ``vr`` entries carry predicted dense/tile
+seconds plus the route the engine would take, and the top level carries
+``cost_model`` = {calibrated, kinds, choices} where ``choices`` records
+how (and whether) the loop/topology was cost-chosen for THIS plan.
 
 The v1 entry points (``MQRLD.execute_batch``, ``serve.RetrievalServer``)
 are thin wrappers over a ``Session`` and return identical results.
@@ -64,6 +97,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import cost as costm
 from repro.core import query as Q
 from repro.core.engine import (EnginePlan, EngineStats, KnnGroupSpec,
                                group_job_specs, plannable)
@@ -155,6 +189,29 @@ def build_logical_plan(norm: Sequence[Q.Query], device_loop: bool,
         shards=eff_shards)
 
 
+def _knn_group_features(eng, grp: KnnGroupSpec, device_loop: bool,
+                        shards: int, beam: int, precision: str,
+                        seed: Optional[int] = None) -> Tuple[float, ...]:
+    """Plan-time analytic cost features for one KNN group, read off the
+    engine's existing layouts (a sharded engine keeps the unsharded
+    layouts too, so ANY engine can price every candidate topology
+    without building candidate-topology device state). Per-shard tile
+    counts are ceil(T/shards) — the strided layout's padded t_local."""
+    dim = eng.vec_np[grp.attr].shape[1]
+    if device_loop:
+        tiles = eng.bucket_rows_dev_np.shape[0]
+        cap = eng.cap_dev
+        if shards:
+            tiles = -(-tiles // max(1, int(shards)))
+    else:
+        tiles = eng.n_tiles
+        cap = eng.cap
+    return costm.knn_plan_features(
+        device_loop=device_loop, shards=shards, g=len(grp.jobs),
+        k=grp.kmax, beam=beam, tiles=tiles, cap=cap, dim=dim,
+        precision=precision, seed=seed)
+
+
 # ---------------------------------------------------------------------------
 # Executable plan (skeleton bound to one batch's constants)
 # ---------------------------------------------------------------------------
@@ -170,12 +227,18 @@ class ExecutablePlan:
 
     def __init__(self, session: "Session", logical: LogicalPlan,
                  queries: Sequence[Q.Query], norm: Sequence[Q.Query],
-                 cache_hit: bool):
+                 cache_hit: bool, choices: Optional[dict] = None):
         self.session = session
         self.logical = logical
         self.queries = list(queries)
         self.norm = list(norm)
         self.cache_hit = cache_hit
+        # loop/topology provenance for explain(): how the (device_loop,
+        # shards) pair was decided — "explicit" (caller pinned the
+        # loop), "default" (session config), or "cost_model" with the
+        # per-candidate predictions. Recomputed on every plan() call
+        # (it is per-invocation state, never cached with the skeleton).
+        self.choices = choices or {"by": "default"}
 
     # ------------------------------------------------------------- execute
     def _seeds(self) -> Dict[str, int]:
@@ -185,7 +248,14 @@ class ExecutablePlan:
         un-folded delta rows exist the engine records (and we look up)
         the ``:delta`` variant of each archetype, so delta-widened
         convergence widths never leak into the base seed that post-fold
-        batches read (see ``engine.knn_archetype``)."""
+        batches read (see ``engine.knn_archetype``).
+
+        Beam/round budget by predicted cost: with a calibrated cost
+        model, each group's seed is kept only when the model predicts
+        the seeded widths cheaper than the defaults (a stale wide seed
+        inflates the first host round / straggler width long after the
+        workload tightened). Seeds shift work between beam rounds only
+        — dropping one never affects results."""
         p = self.session.platform
         suffix = ":delta" if p.n_delta else ""
         seeds: Dict[str, int] = {}
@@ -194,6 +264,25 @@ class ExecutablePlan:
             w = p.qbs.convergence_width(key)
             if w is not None:
                 seeds[key] = w
+        cm = getattr(p, "cost_model", None)
+        if cm is not None and seeds:
+            lp = self.logical
+            kind = costm.knn_kind(lp.device_loop, lp.shards)
+            if cm.reliable(kind):
+                eng = self.session.engine(lp.shards)
+                sess = self.session
+                for grp in lp.groups:
+                    key = grp.archetype + suffix
+                    if key not in seeds:
+                        continue
+                    ps = cm.predict(kind, _knn_group_features(
+                        eng, grp, lp.device_loop, lp.shards, sess.beam,
+                        sess.precision, seed=seeds[key]))
+                    pn = cm.predict(kind, _knn_group_features(
+                        eng, grp, lp.device_loop, lp.shards, sess.beam,
+                        sess.precision, seed=None))
+                    if ps is not None and pn is not None and pn < ps:
+                        seeds.pop(key)
         return seeds
 
     def execute(self) -> Tuple[List[np.ndarray], EngineStats]:
@@ -213,6 +302,14 @@ class ExecutablePlan:
                 results[i] = r
             for arch, width in stats.knn_group_widths:
                 p.qbs.record_convergence(arch, width)
+            # observed per-stage times into the QBS cost rings, then
+            # give the cost model its online-recalibration chance —
+            # the predicted-vs-observed feedback loop (module doc)
+            for kind, feats, secs in stats.stage_samples:
+                p.qbs.record_cost(kind, feats, secs)
+            cm = getattr(p, "cost_model", None)
+            if cm is not None and stats.stage_samples:
+                cm.maybe_refit(p.qbs)
             self.session.mp_scanned += stats.mp_scanned
             self.session.mp_rescued += stats.mp_rescued
         else:
@@ -243,9 +340,26 @@ class ExecutablePlan:
         seeds, so a cached plan reports fresh write state."""
         lp = self.logical
         seeds = self._seeds()
-        p_qbs = self.session.platform.qbs
-        suffix = ":delta" if self.session.platform.n_delta else ""
-        eng = self.session.engine(lp.shards) if lp.engine_idx else None
+        sess = self.session
+        p_qbs = sess.platform.qbs
+        suffix = ":delta" if sess.platform.n_delta else ""
+        eng = sess.engine(lp.shards) if lp.engine_idx else None
+        cm = getattr(sess.platform, "cost_model", None)
+        # predicted vs observed per KNN group (None entries when the
+        # model is absent / the kind is uncalibrated): predicted from
+        # the same analytic features the engine records against,
+        # observed = mean seconds of the kind's QBS cost ring
+        kind = costm.knn_kind(lp.device_loop, lp.shards)
+        grp_cost = {}
+        for gi, grp in enumerate(lp.groups):
+            pred = None
+            if cm is not None and eng is not None:
+                pred = cm.predict(kind, _knn_group_features(
+                    eng, grp, lp.device_loop, lp.shards, sess.beam,
+                    sess.precision,
+                    seed=seeds.get(grp.archetype + suffix)))
+            grp_cost[gi] = {"kind": kind, "predicted_s": pred,
+                            "observed_s": p_qbs.cost_observed(kind)}
         job_of_group = {}
         for gi, grp in enumerate(lp.groups):
             for j in grp.jobs:
@@ -262,16 +376,52 @@ class ExecutablePlan:
                     "group": gi,
                     "archetype": grp.archetype + suffix,
                     "beam_seed": seeds.get(grp.archetype + suffix),
+                    "cost": grp_cost[gi],
                 })
             vr = []
             if eng is not None and frag.path != "scalar":
                 for b in Q.basic_queries(q):
                     if isinstance(b, Q.VR):
                         survive, total = eng.vr_tile_estimate(b)
-                        vr.append({"attr": b.attr,
-                                   "tiles_surviving": survive,
-                                   "tiles_pruned": total - survive,
-                                   "tiles_total": total})
+                        ent = {"attr": b.attr,
+                               "tiles_surviving": survive,
+                               "tiles_pruned": total - survive,
+                               "tiles_total": total}
+                        # per-query route preview, mirroring the
+                        # _vr_masks decision (predicted cost when
+                        # calibrated for both kinds, else the static
+                        # row-fraction cutoff); the executed group
+                        # unions survivors across its queries, so this
+                        # is the single-query estimate
+                        dim = eng.vec_np[b.attr].shape[1]
+                        fd = costm.vr_features("vr:dense", 1, survive,
+                                               eng.cap, dim, eng.n)
+                        ft = costm.vr_features("vr:tile", 1, survive,
+                                               eng.cap, dim, eng.n)
+                        pd = pt = None
+                        if cm is not None and lp.device_loop:
+                            pd = cm.predict("vr:dense", fd)
+                            pt = cm.predict("vr:tile", ft)
+                        if not lp.device_loop:
+                            route = "dense"
+                        elif pd is not None and pt is not None \
+                                and cm.reliable("vr:dense", "vr:tile"):
+                            route = "dense" if pd <= pt else "tile"
+                        else:
+                            from repro.core.engine import \
+                                _VR_DENSE_CUTOFF
+                            route = "dense" if survive * eng.cap > \
+                                _VR_DENSE_CUTOFF * max(1, eng.n) \
+                                else "tile"
+                        ent["cost"] = {
+                            "predicted_dense_s": pd,
+                            "predicted_tile_s": pt,
+                            "route": route,
+                            "observed_dense_s":
+                            p_qbs.cost_observed("vr:dense"),
+                            "observed_tile_s":
+                            p_qbs.cost_observed("vr:tile")}
+                        vr.append(ent)
             frags.append({"query": frag.signature, "path": frag.path,
                           "knn": knn, "vr": vr,
                           # serving-tier feedback: {p50, p99, n} of
@@ -299,6 +449,14 @@ class ExecutablePlan:
             "cache": "hit" if self.cache_hit else "miss",
             "device_loop": lp.device_loop,
             "shards": lp.shards,
+            # calibration state + this plan's loop/topology provenance
+            # (choices["by"] == "cost_model" when the calibrated model
+            # picked the configuration; see Session.plan)
+            "cost_model": {
+                "calibrated": cm is not None and cm.calibrated(),
+                "kinds": sorted(cm.kinds) if cm is not None else [],
+                "choices": self.choices,
+            },
             "precision": sess.precision,
             # fp32-rescue pressure of the mixed-precision scan, summed
             # over every batch this session executed (all zero on fp32)
@@ -332,12 +490,20 @@ class Session:
     def __init__(self, platform, *, interpret: bool = True,
                  device_loop: bool = True, beam: int = 16,
                  tile: int = 128, shards: Optional[int] = None,
-                 precision: Optional[str] = None):
+                 precision: Optional[str] = None,
+                 auto_topology: bool = False):
         self.platform = platform
         self.interpret = interpret
         self.device_loop = device_loop
         self.beam = beam
         self.tile = tile
+        # True when the caller did NOT pin a shard topology (neither a
+        # ``shards`` argument nor a platform ``default_shards``): the
+        # calibrated cost model may then choose among every shard
+        # count it has a fitted kind for; False restricts the cost
+        # choice to host vs the configured topology (explicit pins
+        # always win — see ``plan``).
+        self.auto_topology = auto_topology
         # mixed-precision tile scan for the KNN loops (results stay
         # row-identical to fp32; see engine module doc). Resolved HERE
         # (explicit > MQRLD_PRECISION env > platform default) so plan
@@ -378,15 +544,97 @@ class Session:
                                     shards=shards,
                                     precision=self.precision)
 
+    # ----------------------------------------------------- cost choice
+    def _cost_choice(self, norm: Sequence[Q.Query]
+                     ) -> Optional[Tuple[bool, int, dict]]:
+        """Cost-model loop/topology choice for one batch: (device_loop,
+        shards, provenance) by minimum predicted KNN cost over the
+        reliably calibrated candidate configurations, or None when no
+        choice can be made (no model, no engine-plannable V.K work, or
+        the session default's own stage kind is uncalibrated /
+        unreliably fitted — the fixed-behavior fallback the module doc
+        promises)."""
+        cm = getattr(self.platform, "cost_model", None)
+        if cm is None or not cm.calibrated():
+            return None
+        specs: List[Tuple[str, int, bool]] = []
+        for q in norm:
+            if plannable(q):
+                _collect_job_specs(q, False, specs)
+        if not specs:
+            return None
+        default = (self.device_loop,
+                   (self.shards or 0) if self.device_loop else 0)
+        if not cm.reliable(costm.knn_kind(*default)):
+            return None
+        cands = [(False, 0)]
+        if self.auto_topology or not self.shards:
+            cands.append((True, 0))
+        if self.shards:
+            cands.append((True, self.shards))
+        if self.auto_topology:
+            import jax
+            ndev = jax.device_count()
+            for kind in cm.kinds:
+                s = costm.shards_of_kind(kind)
+                if s and 1 <= s <= ndev and (True, s) not in cands:
+                    cands.append((True, s))
+        eng = self.engine(0)   # unsharded layouts price every candidate
+        suffix = ":delta" if self.platform.n_delta else ""
+        scored = []
+        for dl, sh in cands:
+            kind = costm.knn_kind(dl, sh)
+            if not cm.reliable(kind):
+                continue
+            total = 0.0
+            for grp in group_job_specs(tuple(specs), dl, sh):
+                seed = self.platform.qbs.convergence_width(
+                    grp.archetype + suffix)
+                pred = cm.predict(kind, _knn_group_features(
+                    eng, grp, dl, sh, self.beam, self.precision,
+                    seed=seed))
+                if pred is None:
+                    total = None
+                    break
+                total += pred
+            if total is not None:
+                scored.append((total, dl, sh, kind))
+        if len(scored) < 2:
+            return None    # nothing to choose between
+        scored.sort(key=lambda t: t[0])
+        best = scored[0]
+        prov = {"by": "cost_model",
+                "candidates": [{"device_loop": dl, "shards": sh,
+                                "kind": kind, "predicted_s": tot}
+                               for tot, dl, sh, kind in scored],
+                "chosen": {"device_loop": best[1], "shards": best[2]}}
+        return best[1], best[2], prov
+
     # ---------------------------------------------------------------- plan
     def plan(self, queries: Sequence[Q.Query], *,
              device_loop: Optional[bool] = None) -> ExecutablePlan:
         """Normalize + sign the batch, then return an ``ExecutablePlan``
         — cached skeleton when this batch archetype was planned before
-        (same signatures, same loop kind, same index build)."""
+        (same signatures, same loop kind, same index build).
+
+        Loop kind and shard topology come from the calibrated cost
+        model when one is attached (``_cost_choice``; provenance in
+        ``explain()["cost_model"]["choices"]``); an explicit
+        ``device_loop`` argument always wins, and without a calibrated
+        model the session defaults apply unchanged."""
         norm = [Q.normalize(q) for q in queries]
-        dl = self.device_loop if device_loop is None else device_loop
-        shards = (self.shards or 0) if dl else 0
+        choices: Optional[dict] = None
+        if device_loop is None:
+            sel = self._cost_choice(norm)
+            if sel is not None:
+                dl, shards, choices = sel
+            else:
+                dl = self.device_loop
+                shards = (self.shards or 0) if dl else 0
+        else:
+            dl = device_loop
+            shards = (self.shards or 0) if dl else 0
+            choices = {"by": "explicit"}
         if self._cache_build != self.platform.build_id:
             # prepare()/fold()/swap() changed the index: dead-build
             # entries are stale and would grow without bound in a
@@ -409,7 +657,8 @@ class Session:
             self.cache_misses += 1
             logical = build_logical_plan(norm, dl, shards)
             self._cache[key] = logical
-        return ExecutablePlan(self, logical, queries, norm, hit)
+        return ExecutablePlan(self, logical, queries, norm, hit,
+                              choices=choices)
 
     def prewarm(self, queries: Sequence[Q.Query], *,
                 build_id: Optional[int] = None,

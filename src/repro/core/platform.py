@@ -269,6 +269,15 @@ class MQRLD:
         # reloaded int8 platform serves without re-quantizing.
         self.default_precision: str = "fp32"
         self._quant_cache: Optional[Dict] = None
+        # calibrated execution cost model (repro.core.cost.CostModel,
+        # or None = uncalibrated: every consumer falls back to the
+        # fixed thresholds). Fitted by ``calibrate()``, persisted as
+        # cost_model.json next to platform.json, refreshed online from
+        # observed stage times. A HOST property, not an index
+        # property: swap()/rollback() keep it (the model describes
+        # this machine's compiled-stage throughput, which an index
+        # generation change does not invalidate).
+        self.cost_model = None
         self._view_cache: Optional[Tuple[Tuple[int, int], MMOTable]] = None
         self._oracle_cache: Dict = {}
         self._engines: Dict = {}
@@ -947,6 +956,10 @@ class MQRLD:
             self._engines[key] = eng
             if device_loop is not None:
                 eng.device_loop = device_loop
+        # refresh on EVERY call (cache hits included): cached engines
+        # may predate a calibration — or a reloaded/refit model — and
+        # the V.R dense-vs-tile decision reads it per batch
+        eng.cost_model = self.cost_model
         # union any un-folded appends into the device state (no-op when
         # the write epoch is unchanged)
         eng.sync_delta(self.delta, self.delta_epoch)
@@ -973,13 +986,37 @@ class MQRLD:
         eff = self.default_shards if shards is None else shards
         eff = eff or None
         prec = self._resolve_precision(precision)
-        key = (interpret, device_loop, beam, tile, eff, prec)
+        # topology autonomy: only a session whose topology NOBODY
+        # pinned (no ``shards`` argument, no platform default) lets
+        # the calibrated cost model roam over shard counts; explicit
+        # pins (including shards=0) restrict it to host-vs-configured.
+        # Part of the cache key — shards=0 and shards=None resolve to
+        # the same ``eff`` but mean different things here.
+        auto = shards is None and self.default_shards is None
+        key = (interpret, device_loop, beam, tile, eff, prec, auto)
         if key not in self._sessions:
             self._sessions[key] = Session(
                 self, interpret=interpret, device_loop=device_loop,
                 beam=beam, tile=tile,
-                shards=0 if eff is None else eff, precision=prec)
+                shards=0 if eff is None else eff, precision=prec,
+                auto_topology=auto)
         return self._sessions[key]
+
+    def calibrate(self, *, shard_counts=None, batch: int = 16,
+                  repeats: int = 2, seed: int = 0):
+        """Fit (or refresh) this host's execution cost model from a
+        synthetic micro-run sweep (``repro.core.cost
+        .calibrate_platform``) and install it as ``self.cost_model``
+        — from then on ``Session.plan`` chooses loop kind / shard
+        topology / beam budget and the engine chooses the V.R
+        dense-vs-tile route by predicted cost, with observed stage
+        times recalibrating the model online. Persisted by
+        ``save_platform`` as ``cost_model.json``. Survives
+        swap()/rollback() (a host property, not an index property)."""
+        from repro.core.cost import calibrate_platform
+        return calibrate_platform(self, shard_counts=shard_counts,
+                                  batch=batch, repeats=repeats,
+                                  seed=seed)
 
     def execute_batch(self, queries: Sequence[Q.Query], *,
                       interpret: bool = True,

@@ -62,6 +62,16 @@ class QBSRow:
 _CONVERGENCE_KEEP = 64  # recent widths kept per archetype (ring buffer)
 _LATENCY_KEEP = 512     # recent service times kept per archetype
 _WORKLOAD_KEEP = 16     # recent executed query ASTs kept per signature
+_ROWS_KEEP = 4096       # recent QBS rows kept (ring buffer): the row log
+#                         previously grew without bound in a long-lived
+#                         serving process while extrinsic_score /
+#                         objectives did O(n) full scans per call — the
+#                         window is persisted like the other rings (save
+#                         writes at most this many rows; load re-bounds
+#                         legacy oversized files)
+_COST_KEEP = 256        # recent (features, seconds) cost samples kept
+#                         per stage kind — the calibrated planner cost
+#                         model's online recalibration feed
 
 
 @dataclass
@@ -101,6 +111,18 @@ class QBSTable:
         # transforms. In-memory only (see module doc).
         self.workload: Dict[str, List] = {}
         self.mix: Dict[str, int] = {}
+        # stage kind ("knn:device", "vr:tile", ...) -> recent
+        # ([features...], observed seconds) pairs from executed engine
+        # stages — the calibration/refit feed of the planner cost model
+        # (``repro.core.cost``). Bounded ring like the others; persisted
+        # (plain floats, unlike the workload ASTs) so a reloaded
+        # platform can refit without re-measuring.
+        self.cost: Dict[str, List] = {}
+        # monotone count of cost samples ever recorded (NOT ring sizes,
+        # which saturate at _COST_KEEP): the refit cursor for
+        # ``CostModel.maybe_refit`` — "refit every N new samples" needs
+        # a counter that keeps advancing after the rings fill
+        self.cost_total: int = 0
         self.sample_rate = sample_rate
         self._rng = np.random.default_rng(seed)
 
@@ -124,6 +146,8 @@ class QBSTable:
                      query_time_s=float(query_time_s),
                      accuracy=float(accuracy), task=task, ts=time.time())
         self.rows.append(row)
+        if len(self.rows) > _ROWS_KEEP:
+            del self.rows[:len(self.rows) - _ROWS_KEEP]
         return row
 
     # ------------------------------------------- plan-parameter feedback
@@ -219,6 +243,49 @@ class QBSTable:
         return {"p50": float(np.quantile(a, 0.5)),
                 "p99": float(np.quantile(a, 0.99)), "n": len(ls)}
 
+    # ------------------------------------------------ cost-model feedback
+    def record_cost(self, kind: str, features: Sequence[float],
+                    seconds: float):
+        """Record one executed engine stage's (feature vector, observed
+        wall seconds) under its stage kind — the same feedback loop as
+        beam seeding, applied to the planner cost model: every planned
+        execution appends its per-stage samples here, and
+        ``repro.core.cost.CostModel`` refits from the rings so the
+        model recalibrates online as the workload (or host load)
+        drifts."""
+        ring = self.cost.setdefault(kind, [])
+        ring.append([[float(x) for x in features], float(seconds)])
+        self.cost_total += 1
+        if len(ring) > _COST_KEEP:
+            del ring[:len(ring) - _COST_KEEP]
+
+    def cost_samples(self, kind: str):
+        """(X, y) arrays of recorded samples for one stage kind, or
+        None when the kind was never executed (or feature lengths
+        drifted — stale rings from an older feature version are
+        ignored, not mis-fit)."""
+        ring = self.cost.get(kind)
+        if not ring:
+            return None
+        f = len(ring[-1][0])
+        rows = [(x, s) for x, s in ring if len(x) == f]
+        if not rows:
+            return None
+        return (np.asarray([x for x, _ in rows], np.float64),
+                np.asarray([s for _, s in rows], np.float64))
+
+    def cost_observed(self, kind: str) -> Optional[float]:
+        """Median observed seconds over the kind's recorded ring — the
+        "observed" side of ``explain()``'s predicted-vs-observed cost
+        report. Median, not mean: first executions of a new stage shape
+        carry jit compile time, an order-of-magnitude outlier that
+        would make the mean unrepresentative of steady state. None
+        when never executed."""
+        ring = self.cost.get(kind)
+        if not ring:
+            return None
+        return float(np.median([s for _, s in ring]))
+
     # ------------------------------------------------------------ consumers
     def extrinsic_score(self, task: Optional[str] = None,
                         time_scale: float = 0.1) -> float:
@@ -249,10 +316,17 @@ class QBSTable:
 
     # ---------------------------------------------------------- persistence
     def save(self, path: str):
+        # the row window is part of the persisted contract: at most
+        # _ROWS_KEEP rows are ever written (record() bounds the live
+        # list, so this is a restatement, not a second policy)
         with open(path, "w") as f:
-            json.dump({"rows": [asdict(r) for r in self.rows],
+            json.dump({"rows": [asdict(r) for r in
+                                self.rows[-_ROWS_KEEP:]],
                        "convergence": self.convergence,
-                       "latency": self.latency}, f, indent=1)
+                       "latency": self.latency,
+                       "cost": self.cost,
+                       "cost_total": self.cost_total,
+                       "rows_keep": _ROWS_KEEP}, f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "QBSTable":
@@ -260,20 +334,35 @@ class QBSTable:
         with open(path) as f:
             data = json.load(f)
         if isinstance(data, list):  # legacy format: bare row list
-            rows, conv, lat = data, {}, {}
+            rows, conv, lat, cost = data, {}, {}, {}
         else:
             rows, conv = data["rows"], data.get("convergence", {})
             lat = data.get("latency", {})
-        for r in rows:
+            cost = data.get("cost", {})
+        # legacy unbounded files re-enter under the current window
+        for r in rows[-_ROWS_KEEP:]:
             t.rows.append(QBSRow(**r))
         t.convergence = {k: [int(w) for w in v] for k, v in conv.items()}
         t.latency = {k: [float(s) for s in v] for k, v in lat.items()}
+        t.cost = {k: [[[float(x) for x in f], float(s)] for f, s in v]
+                  for k, v in cost.items()}
+        # legacy files without the counter: seed it from the surviving
+        # ring sizes so the refit cursor starts consistent, not at 0
+        t.cost_total = int(data.get("cost_total",
+                                    sum(len(v) for v in t.cost.values())) if
+                           isinstance(data, dict) else 0)
         return t
 
 
 def recall_at_k(result_rows, truth_rows, k: Optional[int] = None) -> float:
-    """Recall@K: |result ∩ truth| / |truth| (truncated to K)."""
-    truth = list(truth_rows)[:k] if k else list(truth_rows)
+    """Recall@K: |result ∩ truth| / |truth| truncated to the first K
+    truth rows. ``k=None`` (the default) scores against the FULL truth
+    set; ``k=0`` is an explicit empty truncation — zero truth rows are
+    vacuously recalled, so it returns 1.0 (previously the falsy ``if
+    k`` test silently treated 0 as "no truncation", scoring against
+    the whole truth set instead of the contract the caller asked
+    for)."""
+    truth = list(truth_rows) if k is None else list(truth_rows)[:k]
     if not truth:
         return 1.0
     rset = set(int(r) for r in result_rows)

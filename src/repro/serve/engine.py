@@ -35,6 +35,13 @@ from repro.configs.base import ModelConfig
 from repro.core import query as Q
 from repro.models import build_model
 
+# Bound on the signature memo in RetrievalServer: keys are predicate
+# archetype strings (constants elided), so the live population is the
+# number of distinct query SHAPES served — small in practice; the cap
+# is a leak backstop, not a working-set tune. FIFO eviction suffices
+# because recompute-on-miss is cheap (one normalize + signature walk).
+_SIG_CACHE_MAX = 1024
+
 
 @dataclass
 class GenRequest:
@@ -427,14 +434,28 @@ class RetrievalServer:
         """The plan signature this request coalesces under — computed
         WITHOUT its embedding (signatures elide vector constants, so a
         placeholder vector signs identically; see
-        ``Session.signature``). Cached per (attr, k, predicate)."""
-        key = (request.attr, int(request.k), request.predicate)
+        ``Session.signature``).
+
+        Cached per (attr, k, predicate SIGNATURE) with a FIFO bound.
+        The key must be the predicate's archetype string, not the live
+        predicate object: per-request predicate trees differ in their
+        constants, so object keys never hit AND pin every predicate
+        ever served in memory — the unbounded-leak/zero-hit bug this
+        replaces. Signatures elide exactly those constants, so two
+        predicates with equal signatures produce the identical
+        combined-query signature — the string key loses nothing. The
+        bound only evicts memoized strings; a miss recomputes."""
+        pred_sig = None if request.predicate is None \
+            else Q.signature(Q.normalize(request.predicate))
+        key = (request.attr, int(request.k), pred_sig)
         sig = self._sig_cache.get(key)
         if sig is None:
             vk = Q.VK.of(request.attr, (), int(request.k))
             q = vk if request.predicate is None \
                 else Q.And.of(request.predicate, vk)
             sig = self.session.signature(q)
+            if len(self._sig_cache) >= _SIG_CACHE_MAX:
+                self._sig_cache.pop(next(iter(self._sig_cache)))
             self._sig_cache[key] = sig
         return sig
 

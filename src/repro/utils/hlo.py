@@ -195,6 +195,23 @@ class HloStats:
         return sum(self.collective_bytes.values())
 
 
+def stage_cost_features(stats: "HloStats", *, dtype: str = "bf16",
+                        n_devices: int = 1) -> Tuple[float, float, float]:
+    """Roofline-normalize an ``HloStats`` into per-device ceiling times
+    ``(t_compute, t_memory, t_collective)`` in seconds — the same units
+    the planner cost model (``repro.core.cost``) predicts, so an HLO
+    dump of a stage can be priced ANALYTICALLY (no execution) and
+    compared against the model's measured-sample prediction. ``dtype``
+    picks the MXU peak (fp32 halves it, int8 doubles it); counts are
+    divided evenly across ``n_devices`` — exact for the sharded engine
+    layouts here, which split tiles uniformly."""
+    from repro.utils.roofline import HBM_BW, LINK_BW, peak_flops
+    d = max(1, int(n_devices))
+    return (stats.flops / d / peak_flops(dtype),
+            stats.hbm_bytes / d / HBM_BW,
+            stats.total_collective_bytes() / d / LINK_BW)
+
+
 # ops that produce no HBM traffic of their own
 _FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
              "after-all", "partition-id", "replica-id", "iota",

@@ -19,6 +19,25 @@ PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip
 LINK_BW = 50e9                # bytes/s per ICI link
 
+# dtype-aware peak FLOP/s per chip (MXU-class ratios: fp32 runs at half
+# the bf16 rate, int8 at twice it — TPU v5e ships 394 TOPS int8). The
+# engine's mixed-precision tile scan means compute terms derived from a
+# single bf16 peak were wrong for the fp32 and int8 stages; every cost
+# consumer (``Roofline.finalize``, the calibrated planner cost model)
+# must divide by the peak of the dtype the program actually runs in.
+PEAK_FLOPS = {
+    "bf16": PEAK_FLOPS_BF16,
+    "fp32": PEAK_FLOPS_BF16 / 2.0,
+    "int8": PEAK_FLOPS_BF16 * 2.0,
+}
+
+
+def peak_flops(dtype: str) -> float:
+    """Per-chip peak FLOP/s for ``dtype`` ("fp32" | "bf16" | "int8").
+    Unknown dtypes fall back to the bf16 peak (the old behavior) rather
+    than raising — callers feed dtype strings from HLO programs."""
+    return PEAK_FLOPS.get(dtype, PEAK_FLOPS_BF16)
+
 
 @dataclass
 class Roofline:
@@ -43,9 +62,15 @@ class Roofline:
     useful_ratio: float = 0.0          # model_flops / global corrected flops
     memory_per_dev_bytes: float = 0.0  # from memory_analysis
     roofline_fraction: float = 0.0     # t_compute / max(all terms)
+    # dominant compute dtype of the program ("fp32" | "bf16" | "int8");
+    # finalize() divides FLOPs by THIS dtype's peak, not bf16's —
+    # precision-honest compute terms (the int8 scan path is 4x the
+    # fp32 peak, and charging it at bf16 rates skewed every cost
+    # derived from t_compute)
+    dtype: str = "bf16"
 
     def finalize(self):
-        self.t_compute = self.flops_per_dev / PEAK_FLOPS_BF16
+        self.t_compute = self.flops_per_dev / peak_flops(self.dtype)
         self.t_memory = self.bytes_per_dev / HBM_BW
         self.t_collective = self.collective_bytes_per_dev / LINK_BW
         terms = {"compute": self.t_compute, "memory": self.t_memory,

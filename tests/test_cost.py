@@ -1,0 +1,484 @@
+"""Calibrated cost-model planning + the satellite fixes that rode along.
+
+Covers: the cost feature builders and ridge fit, prediction fallbacks
+(uncalibrated kind / feature-shape drift -> None -> fixed thresholds),
+the online-refit cursor, cost_model.json persistence round-trip,
+predicted-vs-observed rank agreement on real calibration data,
+oracle-exactness of cost-driven plans across loop kind x precision x
+delta state, forced-choice steering (hand-built models flipping the
+loop-kind and V.R route decisions), and the satellite regressions:
+``recall_at_k`` k=None vs k=0 semantics, the serving signature cache
+keyed on predicate signatures and bounded, the QBS row-log window
+(live + persisted + legacy re-bound), and dtype-aware roofline peaks.
+"""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import cost as costm
+from repro.core import qbs as qbs_mod
+from repro.core import query as Q
+from repro.core.cost import CostModel
+from repro.core.lake import MMOTable
+from repro.core.persist import load_platform, save_platform
+from repro.core.planner import Session
+from repro.core.platform import MQRLD
+from repro.core.qbs import QBSTable, recall_at_k
+from repro.utils.roofline import PEAK_FLOPS_BF16, peak_flops
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def platform():
+    rng = np.random.default_rng(3)
+    n, d = 900, 8
+    centers = rng.normal(size=(5, d)).astype(np.float32) * 7
+    lab = rng.integers(0, 5, n)
+    vec = (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+    t = (MMOTable("cost_shop")
+         .add_vector("img", vec)
+         .add_numeric("price", rng.uniform(0, 100, n).astype(np.float32)))
+    p = MQRLD(t, seed=0)
+    p.prepare(min_leaf=8, max_leaf=64, dpc_max_clusters=5)
+    return p
+
+
+@pytest.fixture(scope="module")
+def calibrated(platform):
+    """The same platform AFTER a real (tiny) calibration sweep — shared
+    because the sweep is the expensive part of this suite."""
+    platform.calibrate(batch=4, repeats=1, seed=1)
+    assert platform.cost_model is not None
+    assert platform.cost_model.calibrated()
+    return platform
+
+
+def _queries(p, qn=6, seed=2):
+    tab = p.table
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, tab.n_rows, qn)
+    qs = []
+    for j, i in enumerate(rows):
+        v = tab.vector["img"][i]
+        kind = j % 3
+        if kind == 0:
+            qs.append(Q.VK.of("img", v, 8))
+        elif kind == 1:
+            qs.append(Q.And.of(Q.NR("price", 20, 80),
+                               Q.VK.of("img", v, 6)))
+        else:
+            qs.append(Q.And.of(Q.VR.of("img", v, 5.0),
+                               Q.NR("price", 10, 90)))
+    return qs
+
+
+def _exact(p, rows, qs):
+    return all(set(np.asarray(r).tolist())
+               == set(np.asarray(p.oracle(Q.normalize(q))).tolist())
+               for r, q in zip(rows, qs))
+
+
+# ---------------------------------------------------------------------------
+# feature builders / fit / predict fallbacks
+# ---------------------------------------------------------------------------
+def test_feature_shapes_and_precision_scaling():
+    f = costm.knn_plan_features(device_loop=True, shards=0, g=4, k=8,
+                                beam=16, tiles=12, cap=64, dim=8,
+                                precision="fp32")
+    assert len(f) == costm.KNN_FEATURE_DIM and f[0] == 1.0
+    # int8 scans at 4x the fp32 MXU rate -> the compute feature drops 4x
+    f8 = costm.knn_plan_features(device_loop=True, shards=0, g=4, k=8,
+                                 beam=16, tiles=12, cap=64, dim=8,
+                                 precision="int8")
+    assert f8[2] == pytest.approx(f[2] / 4.0)
+    fd = costm.vr_features("vr:dense", 2, 3, 64, 8, 1000)
+    ft = costm.vr_features("vr:tile", 2, 3, 64, 8, 1000)
+    assert len(fd) == len(ft) == costm.VR_FEATURE_DIM
+    # dense prices the full column, tile the pow2-padded union
+    assert fd[2] > ft[2]
+
+
+def test_predict_fallback_none():
+    m = CostModel()
+    assert m.predict("knn:host", [1.0] * costm.KNN_FEATURE_DIM) is None
+    m.kinds["knn:host"] = {"w": [1.0] * costm.KNN_FEATURE_DIM,
+                           "n": 8, "err": 0.0}
+    # feature-shape drift (an older/newer feature version) -> None, so
+    # every consumer falls back to the fixed thresholds, never mis-fits
+    assert m.predict("knn:host", [1.0] * (costm.KNN_FEATURE_DIM + 1)) \
+        is None
+    assert m.predict("knn:host",
+                     [1.0] * costm.KNN_FEATURE_DIM) == pytest.approx(7.0)
+
+
+def test_fit_recovers_linear_model_and_refit_cursor():
+    t = QBSTable()
+    rng = np.random.default_rng(0)
+    w_true = np.array([0.5, 0.1, 2.0, 0.0, 0.3, 0.05, 0.0])
+    for _ in range(12):
+        x = np.array([1.0, *rng.uniform(0.1, 5.0, 6)])
+        t.record_cost("knn:host", x, float(x @ w_true))
+    m = CostModel()
+    assert m.fit_from_qbs(t) == ["knn:host"]
+    assert m.kinds["knn:host"]["err"] < 0.05
+    x = np.array([1.0, *rng.uniform(0.1, 5.0, 6)])
+    assert m.predict("knn:host", x) == pytest.approx(float(x @ w_true),
+                                                     rel=0.05)
+    # cursor: no refit until _REFIT_EVERY new samples arrive
+    assert m.maybe_refit(t) is False
+    for _ in range(costm._REFIT_EVERY):
+        x = np.array([1.0, *rng.uniform(0.1, 5.0, 6)])
+        t.record_cost("knn:host", x, float(x @ w_true))
+    assert m.maybe_refit(t) is True
+    assert m.maybe_refit(t) is False       # cursor advanced by the fit
+    # extrapolation bound: a feature far beyond the training range
+    # (ridge weights can be negative — far extrapolation inverts)
+    # declines instead of predicting, so consumers keep the fixed
+    # thresholds for shapes much bigger than anything calibrated
+    hi = np.asarray(m.kinds["knn:host"]["hi"])
+    far = hi * (CostModel.EXTRAPOLATION_MAX * 10)
+    assert m.predict("knn:host", far) is None
+    near = hi * (CostModel.EXTRAPOLATION_MAX * 0.9)
+    assert m.predict("knn:host", near) is not None
+
+
+def test_steady_samples_drop_compile_outliers():
+    # first execution of a shape carries compile time; the steady-state
+    # collapse must keep the min per distinct feature row
+    X = np.array([[1.0, 2.0], [1.0, 2.0], [1.0, 3.0]])
+    y = np.array([9.0, 0.1, 0.2])
+    Xs, ys = costm.steady_samples(X, y)
+    assert len(ys) == 2 and set(ys) == {0.1, 0.2}
+
+
+# ---------------------------------------------------------------------------
+# calibration sweep: fit quality + persistence
+# ---------------------------------------------------------------------------
+def test_calibration_rank_agreement(calibrated):
+    """The planner needs ORDERING, not absolute seconds: predictions
+    over the calibration samples must rank-correlate positively with
+    the steady-state observations for every fitted kind."""
+    p = calibrated
+    cm = p.cost_model
+    corrs = []
+    for kind in cm.kinds:
+        s = p.qbs.cost_samples(kind)
+        assert s is not None
+        X, y = costm.steady_samples(*s)
+        pred = np.maximum(X @ np.asarray(cm.kinds[kind]["w"]), 1e-9)
+        ra = np.argsort(np.argsort(pred)).astype(float)
+        rb = np.argsort(np.argsort(y)).astype(float)
+        ra -= ra.mean()
+        rb -= rb.mean()
+        den = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+        corrs.append(float((ra * rb).sum() / den) if den else 0.0)
+    assert np.mean(corrs) > 0.0
+    # host fingerprint recorded (staleness marker for moved snapshots)
+    assert cm.host.get("cpu_count") and "backend" in cm.host
+
+
+def test_cost_model_persists_in_snapshot(calibrated):
+    p = calibrated
+    p.qbs.record_cost("knn:host", [1.0] * costm.KNN_FEATURE_DIM, 0.01)
+    with tempfile.TemporaryDirectory() as dd:
+        save_platform(p, dd)
+        from repro.core.persist import _resolve_snapshot
+        snap = _resolve_snapshot(dd)
+        assert os.path.exists(os.path.join(snap, "cost_model.json"))
+        with open(os.path.join(snap, "cost_model.json")) as f:
+            blob = json.load(f)
+        assert blob["version"] == costm.COST_MODEL_VERSION
+        p2 = load_platform(dd)
+        assert p2.cost_model is not None
+        assert p2.cost_model.kinds == p.cost_model.kinds
+        # the QBS cost rings + refit cursor survive too, so a reloaded
+        # platform keeps recalibrating online without re-measuring
+        assert p2.qbs.cost.keys() == p.qbs.cost.keys()
+        assert p2.qbs.cost_total == p.qbs.cost_total
+
+
+def test_cost_driven_plans_oracle_exact(calibrated):
+    """Exactness across the matrix the model steers: loop kind x
+    precision x delta state. Cost choices move work between exact
+    paths — results must never depend on them."""
+    p = calibrated
+    qs = _queries(p)
+    norm = [Q.normalize(q) for q in qs]
+    for prec in ("fp32", "int8"):
+        for dl in (None, False, True):     # None = cost/default choice
+            sess = p.session(precision=prec)
+            rows, _ = sess.plan(qs, device_loop=dl).execute()
+            assert _exact(p, rows, norm), (prec, dl)
+    # un-folded delta rows in the picture
+    rng = np.random.default_rng(9)
+    p.append(vector={"img": p.table.vector["img"][:50] + 0.01},
+             numeric={"price": rng.uniform(0, 100, 50).astype(np.float32)},
+             fold=False)
+    try:
+        sess = p.session()
+        rows, _ = sess.plan(qs).execute()
+        assert all(set(np.asarray(r).tolist())
+                   == set(np.asarray(Q.execute_bruteforce(
+                       p.view(), q)).tolist())
+                   for r, q in zip(rows, norm))
+    finally:
+        p.fold()
+
+
+@pytest.mark.skipif(
+    __import__("jax").device_count() < 2,
+    reason="sharded kinds need >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_cost_driven_sharded_plans_oracle_exact(calibrated):
+    import jax
+    p = calibrated
+    qs = _queries(p, seed=5)
+    norm = [Q.normalize(q) for q in qs]
+    s = min(2, jax.device_count())
+    rows, _ = p.session(shards=s).plan(qs).execute()
+    assert _exact(p, rows, norm)
+    # auto topology: the model may roam over calibrated sharded kinds;
+    # whatever it picks must stay exact
+    sess = Session(p, interpret=True, auto_topology=True)
+    rows, _ = sess.plan(qs).execute()
+    assert _exact(p, rows, norm)
+
+
+def test_explain_reports_predicted_vs_observed(calibrated):
+    p = calibrated
+    qs = _queries(p)
+    plan = p.session().plan(qs)
+    plan.execute()
+    ex = plan.explain()
+    top = ex["cost_model"]
+    assert top["calibrated"] is True
+    assert top["choices"]["by"] in ("cost_model", "default")
+    saw_knn = saw_vr = False
+    for frag in ex["fragments"]:
+        for e in frag["knn"]:
+            c = e["cost"]
+            assert set(c) >= {"kind", "predicted_s", "observed_s"}
+            if c["predicted_s"] is not None:
+                saw_knn = True
+                assert c["predicted_s"] > 0
+                assert c["observed_s"] > 0
+        for e in frag["vr"]:
+            c = e["cost"]
+            assert c["route"] in ("dense", "tile")
+            assert "predicted_dense_s" in c and "observed_dense_s" in c
+            saw_vr = True
+    assert saw_knn and saw_vr
+
+
+# ---------------------------------------------------------------------------
+# forced choices: hand-built models steer the plan, results stay exact
+# ---------------------------------------------------------------------------
+def _bias_model(**bias_by_kind):
+    """CostModel predicting a constant per kind (bias-only weights)."""
+    m = CostModel()
+    for kind, b in bias_by_kind.items():
+        dim = costm.VR_FEATURE_DIM if kind.startswith("vr:") \
+            else costm.KNN_FEATURE_DIM
+        m.kinds[kind] = {"w": [float(b)] + [0.0] * (dim - 1),
+                         "n": 8, "err": 0.0}
+    return m
+
+
+def test_forced_loop_kind_choice(platform):
+    p = platform
+    qs = _queries(p)
+    saved = p.cost_model
+    try:
+        p.cost_model = _bias_model(**{"knn:host": 1e-6, "knn:device": 10.0})
+        plan = Session(p, interpret=True).plan(qs)
+        assert plan.choices["by"] == "cost_model"
+        assert plan.choices["chosen"] == {"device_loop": False, "shards": 0}
+        rows, _ = plan.execute()
+        assert _exact(p, rows, [Q.normalize(q) for q in qs])
+
+        p.cost_model = _bias_model(**{"knn:host": 10.0, "knn:device": 1e-6})
+        plan = Session(p, interpret=True).plan(qs)
+        assert plan.choices["chosen"] == {"device_loop": True, "shards": 0}
+        # explicit pins ALWAYS beat the model
+        plan = Session(p, interpret=True).plan(qs, device_loop=False)
+        assert plan.choices == {"by": "explicit"}
+        assert plan.logical.device_loop is False
+    finally:
+        p.cost_model = saved
+
+
+def test_forced_vr_route(platform):
+    """The V.R dense-vs-tile decision follows the model when both kinds
+    are calibrated — and both routes return identical rows."""
+    p = platform
+    v = p.table.vector["img"][17]
+    qs = [Q.And.of(Q.VR.of("img", v, 4.0), Q.NR("price", 5, 95))]
+    norm = [Q.normalize(q) for q in qs]
+    saved = p.cost_model
+    try:
+        p.cost_model = _bias_model(**{"vr:dense": 1e-6, "vr:tile": 10.0})
+        rows_d, st_d = p.session().plan(qs, device_loop=True).execute()
+        assert st_d.vr_dense_fallbacks == 1
+        p.cost_model = _bias_model(**{"vr:dense": 10.0, "vr:tile": 1e-6})
+        rows_t, st_t = p.session().plan(qs, device_loop=True).execute()
+        assert st_t.vr_dense_fallbacks == 0
+        assert st_t.vr_tiles_scanned > 0
+        assert set(np.asarray(rows_d[0]).tolist()) \
+            == set(np.asarray(rows_t[0]).tolist())
+        assert _exact(p, rows_t, norm)
+    finally:
+        p.cost_model = saved
+
+
+def test_uncalibrated_model_keeps_defaults(platform):
+    """A model missing the session default's kind must NOT steer the
+    plan — the fallback contract (byte-identical to fixed thresholds)."""
+    p = platform
+    qs = _queries(p)
+    saved = p.cost_model
+    try:
+        p.cost_model = _bias_model(**{"knn:host": 1e-6})  # no knn:device
+        plan = Session(p, interpret=True).plan(qs)
+        assert plan.choices == {"by": "default"}
+        assert plan.logical.device_loop is True            # session default
+    finally:
+        p.cost_model = saved
+
+
+def test_unreliable_fit_keeps_defaults(platform):
+    """A fitted kind whose in-sample err exceeds RELIABLE_ERR must not
+    steer — same fallback as uncalibrated (a model typically off by
+    more than 1x would override measured defaults with noise)."""
+    p = platform
+    qs = _queries(p)
+    saved = p.cost_model
+    try:
+        cm = _bias_model(**{"knn:host": 1e-6, "knn:device": 10.0})
+        cm.kinds["knn:device"]["err"] = 5.0   # polluted fit
+        assert cm.calibrated("knn:device")
+        assert not cm.reliable("knn:device")
+        p.cost_model = cm
+        # the session default's own kind is unreliable -> no choice
+        plan = Session(p, interpret=True).plan(qs)
+        assert plan.choices == {"by": "default"}
+        assert plan.logical.device_loop is True
+        # unreliable NON-default kinds just drop out of the candidates
+        cm2 = _bias_model(**{"knn:host": 1e-6, "knn:device": 10.0})
+        cm2.kinds["knn:host"]["err"] = 5.0
+        p.cost_model = cm2
+        plan = Session(p, interpret=True).plan(qs)
+        assert plan.choices == {"by": "default"}   # <2 reliable cands
+        # V.R route: unreliable vr fits revert to the static cutoff
+        v = p.table.vector["img"][17]
+        vq = [Q.And.of(Q.VR.of("img", v, 4.0), Q.NR("price", 5, 95))]
+        cm3 = _bias_model(**{"vr:dense": 10.0, "vr:tile": 1e-6})
+        cm3.kinds["vr:tile"]["err"] = 5.0
+        p.cost_model = cm3
+        rows, st = p.session().plan(vq, device_loop=True).execute()
+        p.cost_model = None
+        rows0, st0 = p.session().plan(vq, device_loop=True).execute()
+        assert st.vr_dense_fallbacks == st0.vr_dense_fallbacks
+        assert np.array_equal(rows[0], rows0[0])
+    finally:
+        p.cost_model = saved
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+def test_recall_at_k_none_vs_zero():
+    res, truth = [1, 2, 3], [1, 2, 9]
+    # k=None: the whole truth set counts
+    assert recall_at_k(res, truth) == pytest.approx(2 / 3)
+    assert recall_at_k(res, truth, k=None) == pytest.approx(2 / 3)
+    # k=0 is an EMPTY truth prefix (vacuously perfect), not "no limit" —
+    # the old `if k` truthiness treated it like None
+    assert recall_at_k(res, truth, k=0) == 1.0
+    assert recall_at_k([], truth, k=0) == 1.0
+    assert recall_at_k(res, truth, k=2) == 1.0
+    assert recall_at_k([], truth, k=2) == 0.0
+
+
+def test_serve_signature_cache_keyed_and_bounded(platform, monkeypatch):
+    from repro.serve import engine as serve_eng
+    from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+    srv = RetrievalServer(platform, object())   # embedder never used here
+
+    def req(k, predicate=None):
+        return RetrievalRequest(tokens=np.asarray([1, 1], np.int32),
+                                attr="img", k=k, predicate=predicate)
+
+    # same predicate SHAPE, fresh objects + different constants: the
+    # signature elides constants, so these must share ONE cache entry
+    # (the old object-identity key never hit and pinned every predicate)
+    s1 = srv.signature(req(5, Q.NR("price", 10, 90)))
+    s2 = srv.signature(req(5, Q.NR("price", 20, 80)))
+    assert s1 == s2
+    assert len(srv._sig_cache) == 1
+    srv.signature(req(5))                       # no-predicate archetype
+    assert len(srv._sig_cache) == 2
+
+    monkeypatch.setattr(serve_eng, "_SIG_CACHE_MAX", 4)
+    for k in range(1, 20):                      # 19 distinct archetypes
+        srv.signature(req(k))
+    assert len(srv._sig_cache) <= 4
+    # evicted entries recompute correctly on the next miss
+    assert srv.signature(req(5)) == srv.signature(req(5))
+
+
+def test_qbs_rows_window_live_persisted_and_legacy(monkeypatch):
+    monkeypatch.setattr(qbs_mod, "_ROWS_KEEP", 10)
+    t = QBSTable()
+    for i in range(25):
+        t.record(statement=f"s{i}", object_set="o", attributes=["a"],
+                 types=["vector"], recall_at_k=1.0, cbr=0.5,
+                 query_time_s=0.001, accuracy=1.0)
+    assert len(t.rows) == 10
+    assert t.rows[0].statement == "s15"         # oldest dropped
+    with tempfile.TemporaryDirectory() as dd:
+        path = os.path.join(dd, "qbs.json")
+        t.save(path)
+        with open(path) as f:
+            blob = json.load(f)
+        assert len(blob["rows"]) == 10 and blob["rows_keep"] == 10
+        # legacy oversized file (pre-window): load re-bounds it
+        blob["rows"] = blob["rows"] * 5          # 50 rows
+        with open(path, "w") as f:
+            json.dump(blob, f)
+        t2 = QBSTable.load(path)
+        assert len(t2.rows) == 10
+
+
+def test_roofline_dtype_aware_peaks():
+    assert peak_flops("bf16") == PEAK_FLOPS_BF16
+    assert peak_flops("fp32") == PEAK_FLOPS_BF16 / 2
+    assert peak_flops("int8") == PEAK_FLOPS_BF16 * 2
+    assert peak_flops("weird") == PEAK_FLOPS_BF16     # safe fallback
+    from repro.utils.roofline import Roofline
+    base = dict(arch="x", shape="s", mesh="m", n_devices=1,
+                raw_flops_per_dev=1e12, raw_bytes_per_dev=1e9,
+                flops_per_dev=1e12, bytes_per_dev=1e9,
+                collective_bytes_per_dev=0.0, collective_breakdown={})
+    r_bf, r_f32, r_i8 = (Roofline(**base, dtype=d)
+                         for d in ("bf16", "fp32", "int8"))
+    for r in (r_bf, r_f32, r_i8):
+        r.finalize()
+    assert r_f32.t_compute == pytest.approx(2 * r_bf.t_compute)
+    assert r_i8.t_compute == pytest.approx(r_bf.t_compute / 2)
+
+
+def test_hlo_stage_cost_features_units():
+    from repro.utils.hlo import HloStats, stage_cost_features
+    st = HloStats(flops=2 * PEAK_FLOPS_BF16, hbm_bytes=819e9)
+    tc, tm, tcol = stage_cost_features(st)
+    assert tc == pytest.approx(2.0)
+    assert tm == pytest.approx(1.0)
+    assert tcol == 0.0
+    tc4, _, _ = stage_cost_features(st, dtype="int8", n_devices=2)
+    assert tc4 == pytest.approx(0.5)            # 2 devices x 2x peak

@@ -242,7 +242,10 @@ def test_persist_roundtrip_int8_default(tmp_path):
     ref, _ = p.session(precision="fp32").execute(cases)
     p.engine()                      # builds + quantizes under the default
     save_platform(p, str(tmp_path))
-    assert (tmp_path / "quant.npz").exists()
+    # the snapshot lands in the versioned gen-XXXX/ dir (PR 8 layout)
+    from repro.core.persist import _resolve_snapshot
+    assert os.path.exists(
+        os.path.join(_resolve_snapshot(str(tmp_path)), "quant.npz"))
     p2 = load_platform(str(tmp_path))
     assert p2.default_precision == "int8"
     assert p2._quant_cache is not None
