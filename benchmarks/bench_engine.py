@@ -135,7 +135,8 @@ def _scale_sweep(csv: Csv, bench: dict):
             sess.plan(queries).execute()     # warm + record QBS widths
             sess.plan(queries).execute()     # compile seeded shapes
             t_e2e, rows_p = timeit(
-                lambda: sess.plan(queries).execute()[0], repeat=3)
+                lambda: sess.plan(queries).execute()[0], repeat=3,
+                fence_result=True)
             rows_by_prec[prec] = rows_p
             eng = p.engine(precision=prec)
             pred = eng._predicate_masks(queries, EngineStats())
@@ -145,7 +146,8 @@ def _scale_sweep(csv: Csv, bench: dict):
             eng._run_jobs(jobs, EngineStats(), True)          # warm
             st = EngineStats()
             t_loop, _ = timeit(
-                lambda: eng._run_jobs(jobs, st, True), repeat=3)
+                lambda: eng._run_jobs(jobs, st, True), repeat=3,
+                fence_result=True)
             row[prec] = {
                 "qps": len(queries) / t_e2e,
                 "loop_qps": len(jobs) / max(t_loop, 1e-12),
@@ -228,9 +230,9 @@ def run(csv: Csv):
     p.execute_batch(queries, device_loop=True)
     _, host_stats = p.execute_batch(queries, device_loop=False)
     _, dev_stats = p.execute_batch(queries, device_loop=True)
-    t_scalar, r_scalar = timeit(scalar_all, repeat=2)
-    t_host, r_host = timeit(host_all, repeat=5)
-    t_dev, r_dev = timeit(device_all, repeat=5)
+    t_scalar, r_scalar = timeit(scalar_all, repeat=2, fence_result=True)
+    t_host, r_host = timeit(host_all, repeat=5, fence_result=True)
+    t_dev, r_dev = timeit(device_all, repeat=5, fence_result=True)
 
     # the beam loops head-to-head on the batch's V.K jobs: the stages
     # the device_loop flag does NOT touch (grouped predicate masks, the
@@ -243,9 +245,11 @@ def run(csv: Csv):
     for q in queries:
         eng._walk(q, None, pred, jobs, None, ctr)
     t_loop_host, _ = timeit(
-        lambda: eng._run_jobs(jobs, EngineStats(), False), repeat=5)
+        lambda: eng._run_jobs(jobs, EngineStats(), False), repeat=5,
+        fence_result=True)
     t_loop_dev, _ = timeit(
-        lambda: eng._run_jobs(jobs, EngineStats(), True), repeat=5)
+        lambda: eng._run_jobs(jobs, EngineStats(), True), repeat=5,
+        fence_result=True)
 
     def same(a_rows, b_rows):
         return all(set(np.asarray(a).tolist()) == set(np.asarray(b).tolist())
@@ -306,7 +310,8 @@ def run(csv: Csv):
     t_plan_cold, _ = timeit(plan_cold, repeat=3)
     t_plan_warm, _ = timeit(plan_warm, repeat=5)
     t_warm_exec, r_warm = timeit(
-        lambda: sess.plan(queries).execute()[0], repeat=5)
+        lambda: sess.plan(queries).execute()[0], repeat=5,
+        fence_result=True)
     warm_exact = same(r_warm, r_scalar)
     qps_warm = len(queries) / t_warm_exec
     csv.add("engine/plan_cold_per_query", us(t_plan_cold / len(queries)),
@@ -339,14 +344,16 @@ def run(csv: Csv):
         sess_s.plan(queries).execute()     # warm + record QBS widths
         sess_s.plan(queries).execute()     # compile seeded shapes
         t_s, rows_s = timeit(
-            lambda: sess_s.plan(queries).execute()[0], repeat=5)
+            lambda: sess_s.plan(queries).execute()[0], repeat=5,
+            fence_result=True)
         _, st_s = sess_s.plan(queries).execute()
         exact_s = same(rows_s, r_scalar)
         qps_s = len(queries) / t_s
         qps_sh[s_cnt] = qps_s
         eng_s = p.engine(shards=s_cnt)
         t_loop_s, _ = timeit(
-            lambda: eng_s._run_jobs(jobs, EngineStats(), True), repeat=5)
+            lambda: eng_s._run_jobs(jobs, EngineStats(), True), repeat=5,
+            fence_result=True)
         loop_qps_s = len(jobs) / max(t_loop_s, 1e-12)
         bench["sharded"][str(s_cnt)] = {
             "qps": qps_s, "loop_qps": loop_qps_s,
@@ -387,7 +394,7 @@ def run(csv: Csv):
     def _ingest_qps():
         sess.plan(queries).execute()          # warm the union shapes
         t, rows = timeit(lambda: sess.plan(queries).execute()[0],
-                         repeat=3)
+                         repeat=3, fence_result=True)
         view = p.view()
         ok = all(set(np.asarray(r).tolist())
                  == set(np.asarray(Q.execute_bruteforce(
@@ -510,12 +517,12 @@ def run(csv: Csv):
     t_cost = t_fix = float("inf")
     for _ in range(1 if common.SMOKE else 5):
         tc, _ = timeit(lambda: sess_cost.plan(queries).execute(),
-                       repeat=1)
+                       repeat=1, fence_result=True)
         t_cost = min(t_cost, tc)
         p.cost_model = None
         try:
             tf, _ = timeit(lambda: sess_fix.plan(queries).execute(),
-                           repeat=1)
+                           repeat=1, fence_result=True)
         finally:
             p.cost_model = cm_detached
         t_fix = min(t_fix, tf)

@@ -73,12 +73,33 @@ DATASETS = {"GaussMix": gaussmix, "Uniform": uniform, "Skewed": skewed}
 
 
 # ------------------------------------------------------------------ timing
-def timeit(fn: Callable, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
+def fence(x):
+    """Explicit device fence for timed regions: block until every jax
+    value in ``x`` (tree or scalar) has actually been computed, so a
+    timed call that ends in async-dispatched device work is charged its
+    full cost inside the timed region — not lazily on the next
+    materialize. Host-resident numpy results pass through untouched
+    (the call is then a no-op, kept for timing discipline)."""
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+    return x
+
+
+def timeit(fn: Callable, *args, repeat: int = 3,
+           fence_result: bool = False, **kw) -> Tuple[float, object]:
+    """Best-of-``repeat`` wall time. ``fence_result=True`` fences the
+    return value INSIDE the timed region (see ``fence``) — required for
+    any ``fn`` whose tail is async device dispatch."""
     out = None
     best = float("inf")
     for _ in range(1 if SMOKE else repeat):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
+        if fence_result:
+            fence(out)
         best = min(best, time.perf_counter() - t0)
     return best, out
 

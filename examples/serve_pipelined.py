@@ -1,0 +1,147 @@
+"""Pipelined serving: chunk-stage overlap in the RetrievalServer.
+
+``pipeline_depth=1`` (the default) is the serial loop: each micro-batch
+is embedded, executed, ranked, and resolved before the next one starts.
+``pipeline_depth>=2`` runs chunks through a bounded three-stage software
+pipeline (repro.serve.pipeline.ChunkPipeline):
+
+    host  embed/stage  | chunk i+2
+    device compute     | chunk i+1   (async-dispatched XLA programs)
+    host  rank/record  | chunk i
+
+The host's epilogue for an older chunk and the staging of a newer one
+run WHILE the device executes the chunk in between — jax's async
+dispatch provides the concurrency with no extra threads. Every serving
+contract is preserved (in-order per-request resolution, all-or-nothing
+chunk failure, deadline shedding, quiescent append/swap boundaries),
+and results stay byte-identical to the serial loop — the knob is pure
+sustained throughput under load.
+
+This script replays the SAME overloaded open-arrival trace at depth 1
+and depth 3 and prints the sustained QPS of each, then demonstrates the
+drain barrier around a live ``append``.
+
+    PYTHONPATH=src python examples/serve_pipelined.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.lake import MMOTable
+from repro.core.platform import MQRLD
+from repro.serve.engine import RetrievalRequest, RetrievalServer
+
+
+class _TableEmbedder:
+    """Deterministic stub (prompt token -> stored vector + eps): the
+    example measures the serving loop, not an embedding backbone."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def embed(self, tokens):
+        rows = np.asarray(tokens)[:, 0] % self.table.n_rows
+        return self.table.vector["v"][rows] + 0.01
+
+
+def _requests(n_req, n_rows, rng, ks=(10, 25, 5)):
+    return [RetrievalRequest(
+        tokens=np.asarray([int(rng.integers(0, n_rows)), 0], np.int32),
+        attr="v", k=ks[i % len(ks)]) for i in range(n_req)]
+
+
+def _replay(server, reqs, arrivals):
+    """Open-arrival replay (wall clock): submit on arrival, poll the
+    server, and drain at the end. Returns sustained QPS."""
+    t_start = time.monotonic()
+    offset = arrivals[0] - t_start - 1e-3
+    futs, i = [], 0
+    while i < len(reqs) or server.queue_depth:
+        now = time.monotonic() + offset
+        while i < len(reqs) and arrivals[i] <= now:
+            futs.append(server.submit(reqs[i], now=arrivals[i]))
+            i += 1
+        server.poll()
+    server.drain()
+    span = (time.monotonic() + offset) - arrivals[0]
+    assert all(f.done() for f in futs)
+    return len(reqs) / max(span, 1e-9), [f.result() for f in futs]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, d = 20000, 32
+    centers = rng.normal(size=(12, d)).astype(np.float32) * 6
+    vec = (centers[rng.integers(0, 12, n)]
+           + rng.normal(size=(n, d))).astype(np.float32)
+    price = rng.uniform(0, 100, n).astype(np.float32)
+    table = (MMOTable("catalog").add_vector("v", vec)
+             .add_numeric("price", price))
+    p = MQRLD(table, seed=0)
+    rep = p.prepare(min_leaf=64, max_leaf=1024)
+    print(f"platform ready: {n} MMOs, {rep.n_leaves} buckets")
+
+    n_req, batch = 256, 32
+    # one overloaded Poisson trace, replayed verbatim at BOTH depths:
+    # the queue never empties, so stage overlap — not arrival gaps —
+    # decides throughput
+    reqs = _requests(n_req, n, np.random.default_rng(2))
+    arr_rel = np.cumsum(np.random.default_rng(3)
+                        .exponential(1.0 / 2000.0, n_req))
+    servers = {depth: RetrievalServer(p, _TableEmbedder(p.table),
+                                      batch_size=batch,
+                                      pipeline_depth=depth)
+               for depth in (1, 3)}
+    # warm the full compiled-shape universe this trace can touch: the
+    # carver quantizes partial chunks to powers of two per signature,
+    # so |signatures| x log2(batch)+1 programs cover every chunk either
+    # depth will dispatch (the jit cache is process-wide — one sweep
+    # serves both servers)
+    wr = np.random.default_rng(4)
+    for k in (10, 25, 5):
+        s = 1
+        while s <= batch:
+            servers[1].serve(_requests(s, n, wr, ks=(k,)))
+            s *= 2
+    # interleaved replays, best-of per depth: process-wide state (jit
+    # caches, QBS beam widths) keeps warming across replays, so a
+    # back-to-back comparison would credit whichever depth ran last.
+    # Rep 0 is a throwaway that finishes that warmup.
+    qps, rows = {1: 0.0, 3: 0.0}, {}
+    for rep in range(3):
+        for depth, srv in servers.items():
+            q, res = _replay(srv, list(reqs),
+                             time.monotonic() + 0.01 + arr_rel)
+            if rep == 0:
+                continue
+            qps[depth] = max(qps[depth], q)
+            rows[depth] = [r.rows for r in res]
+    for depth in (1, 3):
+        print(f"depth {depth}: sustained {qps[depth]:.0f} QPS")
+    same = all(np.array_equal(a, b)
+               for a, b in zip(rows[1], rows[3]))
+    print(f"rows identical to serial: {same}  "
+          f"overlap gain {qps[3] / qps[1]:.2f}x "
+          f"(~1.0 expected here: on the CPU interpret backend the "
+          f"device fraction of a chunk is tiny, so there is little "
+          f"compute for the pipeline to hide — the contract is "
+          f"'never slower, byte-identical', and the gain grows with "
+          f"device-bound workloads)")
+
+    # drain barrier: append lands between micro-batches even with
+    # chunks in flight — dispatched work resolves against pre-append
+    # state, later requests see the new rows
+    srv = RetrievalServer(p, _TableEmbedder(p.table), batch_size=batch,
+                          pipeline_depth=3)
+    pre = [srv.submit(r)                 # one k => one full signature
+           for r in _requests(batch, n, rng, ks=(10,))]   # group forms
+    print(f"in flight before append: {srv.inflight_chunks} chunk(s)")
+    srv.append(vectors={"v": vec[:5] + 0.001},
+               numeric={"price": price[:5]}, fold=False)
+    print(f"after append: {srv.inflight_chunks} in flight, "
+          f"{sum(f.done() for f in pre)}/{len(pre)} pre-append futures "
+          f"resolved by the drain")
+
+
+if __name__ == "__main__":
+    main()

@@ -166,9 +166,38 @@ for lv in levels:
 cmp_ = bench.get("coalesce_vs_fifo") or {}
 if "ratio" not in cmp_ or not cmp_.get("identical_rows"):
     sys.exit("BENCH_serve.json: coalesce_vs_fifo missing or rows differ")
+# pipelined executor: the depth-1 vs depth>=2 replay of the SAME
+# arrival trace must be present, row-identical between depths,
+# oracle-exact on its sample, and never slower than serial (the 1.0
+# floor holds even at smoke scale — overlap can only add throughput;
+# the measured full-scale gain lives in the committed BENCH_serve.json)
+pipe = bench.get("pipeline") or {}
+for key in ("depth_pipelined", "sustained_serial_qps",
+            "sustained_pipelined_qps", "overlap_gain"):
+    if key not in pipe:
+        sys.exit(f"BENCH_serve.json: pipeline section lacks {key}")
+if pipe.get("depth_pipelined", 0) < 2:
+    sys.exit("BENCH_serve.json: pipeline ran at depth < 2 (no overlap)")
+if not pipe.get("identical_rows"):
+    sys.exit("BENCH_serve.json: pipelined rows differ from serial rows")
+if not pipe.get("exact_sample"):
+    sys.exit("BENCH_serve.json: pipelined results NOT oracle-exact")
+if pipe["overlap_gain"] < 1.0:
+    sys.exit(f"BENCH_serve.json: pipeline overlap_gain "
+             f"{pipe['overlap_gain']:.3f} < 1.0 (pipelining made the "
+             f"server slower than its own serial loop)")
 print(f"ok: {len(levels)} levels, coalesce/fifo ratio "
-      f"{cmp_['ratio']:.1f}x, commit {bench['git_commit']}")
+      f"{cmp_['ratio']:.1f}x, pipeline gain {pipe['overlap_gain']:.2f}x "
+      f"at depth {pipe['depth_pipelined']}, commit {bench['git_commit']}")
 EOF
+
+# pipelined serving executor suite: depth-1 parity, overlap exactness,
+# mid-pipeline failure isolation, drain-on-append/swap, prewarm
+# hygiene, QBS ring lock, seeded fuzz — runs inside tier-1 above, but
+# the explicit step keeps the subsystem greppable (mirrors reopt).
+echo "== pipelined serving executor suite =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q tests/test_pipeline.py
 
 # online re-optimization suite: swap-under-load exactness, rollback
 # round-trips, background-vs-inline fold equivalence, crash-mid-save

@@ -579,6 +579,120 @@ def _knn_start(qs, masks_tiles, centroid, radius, data_tiles,
             jnp.sum(resc))
 
 
+def _start_d2h(a) -> None:
+    """Kick off a non-blocking device->host copy for ``a`` so a later
+    ``np.asarray(a)`` is a completed-transfer fence rather than a
+    blocking round-trip. Best-effort: silently a no-op for backends or
+    array types without the API (numpy inputs, older jax)."""
+    try:
+        a.copy_to_host_async()
+    except (AttributeError, RuntimeError, TypeError):
+        pass
+
+
+class _PendingDeviceKnn:
+    """Deferred half of ``batched_knn_device_async``: the fused first
+    round is already ENQUEUED on the device (with its result transfers
+    started async); ``finish()`` takes the single stage-boundary fence —
+    the (G,) active-mask read — runs the compacted straggler loop for
+    queries the fused round left active, and materializes rows + stats.
+    ``finish()`` is idempotent."""
+
+    __slots__ = ("_fn", "_out")
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._out = None
+
+    def finish(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._out is None:
+            self._out = self._fn()
+        return self._out
+
+
+def batched_knn_device_async(geom: LeafGeometry, data_tiles, qs, k: int,
+                             *, masks: Optional[jax.Array] = None,
+                             beam: int = 8, interpret: bool = True,
+                             planes=None, precision: str = "fp32",
+                             w1: Optional[int] = None,
+                             ws: Optional[int] = None,
+                             stats: Optional[EngineStats] = None,
+                             conv_out: Optional[list] = None
+                             ) -> _PendingDeviceKnn:
+    """Dispatch half of ``batched_knn_device``: enqueues the fused
+    first round (one device program) and returns WITHOUT any host sync
+    — per-round state (heaps, bounds, active mask) stays device-
+    resident until ``finish()``. The transfers ``finish()`` will read
+    are started asynchronously here, so when another chunk's host work
+    runs in between (the serving pipeline's overlap window), the
+    eventual fence usually costs nothing. Results and stats are
+    identical to the synchronous wrapper."""
+    t0 = time.time()
+    qs = jnp.asarray(qs, jnp.float32)
+    masks_tiles = None
+    if masks is not None:
+        masks_tiles = _tile_masks(jnp.asarray(masks), geom.bucket_rows)
+    g = int(qs.shape[0])
+    l = geom.n_leaves
+    w1 = max(1, min(w1 if w1 else max(1, beam // 2), l))
+    order, lb_sorted, d2, rows, active, nvalid, resc = _knn_start(
+        qs, masks_tiles, geom.centroid, geom.radius, data_tiles,
+        geom.bucket_rows, planes, w1=w1, k=k, precision=precision,
+        interpret=interpret)
+    for a in (active, d2, rows, nvalid, resc):
+        _start_d2h(a)
+    t_disp = time.time() - t0
+
+    def _finish() -> Tuple[np.ndarray, np.ndarray]:
+        t1 = time.time()
+        d2f, rowsf = d2, rows
+        if stats is not None:
+            stats.knn_rounds += 1
+            stats.knn_buckets += g * w1
+            stats.rows_scanned += int(nvalid)
+            if precision != "fp32":
+                stats.mp_scanned += int(nvalid)
+                stats.mp_rescued += int(resc)
+        conv = np.full(g, w1, np.int64)
+        act = np.nonzero(np.asarray(active))[0]
+        if len(act) and w1 < l:
+            na = len(act)
+            gp = _next_pow2(na)
+            padded = np.zeros(gp, np.int64)
+            padded[:na] = act
+            idx = jnp.asarray(padded, jnp.int32)
+            active0 = jnp.asarray(np.arange(gp) < na)
+            w = max(1, ws if ws else beam)
+            budget = -(-(l - w1) // w)
+            bd, br, loop_stats, retire_round = _knn_device_loop(
+                idx, active0, qs, d2, rows, order, lb_sorted,
+                masks_tiles, data_tiles, geom.bucket_rows, planes,
+                w1=w1, w=w, budget=budget, k=k, precision=precision,
+                interpret=interpret)
+            d2f = np.asarray(d2, dtype=np.float32).copy()
+            rowsf = np.asarray(rows).copy()
+            d2f[act] = np.asarray(bd)[:na]
+            rowsf[act] = np.asarray(br)[:na]
+            conv[act] = np.minimum(
+                w1 + np.asarray(retire_round)[:na].astype(np.int64) * w,
+                l)
+            if stats is not None:
+                rounds, nbuck, nrows, nresc = np.asarray(loop_stats)
+                stats.knn_rounds += int(rounds)
+                stats.knn_buckets += int(nbuck)
+                stats.rows_scanned += int(nrows)
+                if precision != "fp32":
+                    stats.mp_scanned += int(nrows)
+                    stats.mp_rescued += int(nresc)
+        if stats is not None:
+            stats.time_s += t_disp + (time.time() - t1)
+        if conv_out is not None:
+            conv_out.append(conv)
+        return np.sqrt(np.asarray(d2f)), np.asarray(rowsf).astype(np.int64)
+
+    return _PendingDeviceKnn(_finish)
+
+
 def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
                        masks: Optional[jax.Array] = None, beam: int = 8,
                        interpret: bool = True, planes=None,
@@ -613,60 +727,77 @@ def batched_knn_device(geom: LeafGeometry, data_tiles, qs, k: int, *,
     straggler retired in loop round r (capped at the tile count).
     Versus the host loop's 2-4 full transfers + host merges per batch,
     this path transfers one bool per query mid-batch and never computes
-    a straggler round at full batch width."""
-    t0 = time.time()
-    qs = jnp.asarray(qs, jnp.float32)
-    masks_tiles = None
-    if masks is not None:
-        masks_tiles = _tile_masks(jnp.asarray(masks), geom.bucket_rows)
-    g = int(qs.shape[0])
-    l = geom.n_leaves
-    w1 = max(1, min(w1 if w1 else max(1, beam // 2), l))
-    order, lb_sorted, d2, rows, active, nvalid, resc = _knn_start(
-        qs, masks_tiles, geom.centroid, geom.radius, data_tiles,
-        geom.bucket_rows, planes, w1=w1, k=k, precision=precision,
-        interpret=interpret)
-    if stats is not None:
-        stats.knn_rounds += 1
-        stats.knn_buckets += g * w1
-        stats.rows_scanned += int(nvalid)
-        if precision != "fp32":
-            stats.mp_scanned += int(nvalid)
-            stats.mp_rescued += int(resc)
-    conv = np.full(g, w1, np.int64)
-    act = np.nonzero(np.asarray(active))[0]
-    if len(act) and w1 < l:
-        na = len(act)
-        gp = _next_pow2(na)
-        padded = np.zeros(gp, np.int64)
-        padded[:na] = act
-        idx = jnp.asarray(padded, jnp.int32)
-        active0 = jnp.asarray(np.arange(gp) < na)
-        w = max(1, ws if ws else beam)
-        budget = -(-(l - w1) // w)
-        bd, br, loop_stats, retire_round = _knn_device_loop(
-            idx, active0, qs, d2, rows, order, lb_sorted, masks_tiles,
-            data_tiles, geom.bucket_rows, planes, w1=w1, w=w,
-            budget=budget, k=k, precision=precision, interpret=interpret)
-        d2 = np.asarray(d2, dtype=np.float32).copy()
-        rows = np.asarray(rows).copy()
-        d2[act] = np.asarray(bd)[:na]
-        rows[act] = np.asarray(br)[:na]
-        conv[act] = np.minimum(
-            w1 + np.asarray(retire_round)[:na].astype(np.int64) * w, l)
-        if stats is not None:
-            rounds, nbuck, nrows, nresc = np.asarray(loop_stats)
-            stats.knn_rounds += int(rounds)
-            stats.knn_buckets += int(nbuck)
-            stats.rows_scanned += int(nrows)
-            if precision != "fp32":
-                stats.mp_scanned += int(nrows)
-                stats.mp_rescued += int(nresc)
-    if stats is not None:
-        stats.time_s += time.time() - t0
-    if conv_out is not None:
-        conv_out.append(conv)
-    return np.sqrt(np.asarray(d2)), np.asarray(rows).astype(np.int64)
+    a straggler round at full batch width.
+
+    Implementation: the synchronous wrapper over the dispatch half
+    (``batched_knn_device_async``) and its deferred ``finish()`` —
+    dispatch and fence back-to-back is exactly the pre-split loop."""
+    return batched_knn_device_async(
+        geom, data_tiles, qs, k, masks=masks, beam=beam,
+        interpret=interpret, planes=planes, precision=precision,
+        w1=w1, ws=ws, stats=stats, conv_out=conv_out).finish()
+
+
+class _ReadyKnn:
+    """Already-materialized stand-in for ``_PendingDeviceKnn`` — used by
+    job paths with no async implementation (host loop, sharded), which
+    execute eagerly at dispatch time and defer nothing."""
+
+    __slots__ = ("_rows",)
+
+    def __init__(self, rows):
+        self._rows = rows
+
+    def finish(self):
+        return None, self._rows
+
+
+class _PendingJobs:
+    """Deferred half of ``HybridEngine._dispatch_jobs``: per-group
+    finishers that fence, materialize rows, and record width/cost stats
+    in dispatch order. ``finish()`` is idempotent and returns the
+    per-job row arrays ``_run_jobs`` would have returned."""
+
+    __slots__ = ("_finishers", "_out", "_done")
+
+    def __init__(self, n_jobs: int):
+        self._finishers: list = []
+        self._out: List[Optional[np.ndarray]] = [None] * n_jobs
+        self._done = False
+
+    def add(self, fn) -> None:
+        self._finishers.append(fn)
+
+    def run_now(self, fn) -> None:
+        """Eager mode: run one group's finisher inline at dispatch."""
+        fn(self._out)
+
+    def finish(self) -> List[np.ndarray]:
+        if not self._done:
+            for fn in self._finishers:
+                fn(self._out)
+            self._done = True
+        return self._out  # type: ignore[return-value]
+
+
+class PendingBatch:
+    """Deferred epilogue of ``HybridEngine.execute_batch_async`` /
+    ``ExecutablePlan``'s engine fragment: device work is enqueued,
+    ``materialize()`` fences at the stage boundary and yields exactly
+    the (rows, stats) the synchronous call would have returned.
+    Idempotent — the serving pipeline may retire a chunk through any
+    code path without double-running its epilogue."""
+
+    __slots__ = ("_fn", "_res")
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._res = None
+
+    def materialize(self):
+        if self._res is None:
+            self._res = self._fn()
+        return self._res
 
 
 # ---------------------------------------------------------------------------
@@ -1781,7 +1912,14 @@ class HybridEngine:
         call per (type, attr) group. Masks come back to the host as one
         (g, n) transfer per group — the boolean combining in ``_walk`` is
         numpy (sub-microsecond per op vs ~100us device dispatch), and only
-        the final V.K candidate masks return to the device."""
+        the final V.K candidate masks return to the device.
+
+        Dispatch order: every NE/NR group's compare kernel is ENQUEUED
+        first (pure device work, transfer started async), then the V.R
+        groups run (their plan/union epilogues take host syncs anyway,
+        which now overlap the queued numeric compares), and the NE/NR
+        masks materialize last — one explicit fence per group at the
+        stage boundary instead of an eager sync per dispatch."""
         nodes: List[Q.Query] = []
         seen = set()
         for q in queries:
@@ -1795,6 +1933,7 @@ class HybridEngine:
             groups[(type(b).__name__, b.attr)].append(b)
 
         masks: Dict[Q.Query, np.ndarray] = {}
+        deferred = []   # numeric groups: (grp, device mask, device count)
         for (tname, attr), grp in groups.items():
             if tname == "NE":
                 m, touched = _ne_group_masks(
@@ -1802,16 +1941,23 @@ class HybridEngine:
                     self.row_leaf,
                     jnp.asarray([b.value for b in grp], jnp.float32),
                     jnp.asarray([b.tol for b in grp], jnp.float32))
-                m = np.asarray(m)
+                _start_d2h(m)
+                deferred.append((grp, m, touched))
             elif tname == "NR":
                 m, touched = _nr_group_masks(
                     self.num[attr], self.num_lo[attr], self.num_hi[attr],
                     self.row_leaf,
                     jnp.asarray([b.lo for b in grp], jnp.float32),
                     jnp.asarray([b.hi for b in grp], jnp.float32))
-                m = np.asarray(m)
+                _start_d2h(m)
+                deferred.append((grp, m, touched))
             else:  # VR
                 m, touched = self._vr_masks(attr, grp, stats, tile_route)
+                stats.predicate_buckets += int(touched)
+                for i, b in enumerate(grp):
+                    masks[b] = m[i]
+        for grp, m, touched in deferred:   # stage-boundary fence
+            m = np.asarray(m)
             stats.predicate_buckets += int(touched)
             for i, b in enumerate(grp):
                 masks[b] = m[i]
@@ -2080,9 +2226,29 @@ class HybridEngine:
         bound. Every group's recorded tail width is appended to
         ``stats.knn_group_widths`` so the caller can close the QBS
         feedback loop."""
+        return self._dispatch_jobs(jobs, stats, device_loop,
+                                   groups=groups, seeds=seeds,
+                                   eager=True).finish()
+
+    def _dispatch_jobs(self, jobs, stats: EngineStats, device_loop: bool,
+                       groups: Optional[Sequence[KnnGroupSpec]] = None,
+                       seeds: Optional[Dict[str, int]] = None,
+                       eager: bool = True, record_cost: bool = True
+                       ) -> _PendingJobs:
+        """Dispatch half of ``_run_jobs``. Per group, the device-loop
+        path enqueues the fused first round (``batched_knn_device_async``)
+        and defers the fence + straggler loop + stats recording into a
+        finisher the returned ``_PendingJobs.finish()`` runs in group
+        order; the sharded and host-loop paths have no async
+        implementation and execute eagerly at dispatch (zero overlap,
+        same results). With ``eager=True`` each group's finisher runs
+        inline right after its dispatch — exactly the pre-split
+        ``_run_jobs`` sequencing. ``record_cost=False`` skips the
+        wall-time ``stage_samples`` (overlapped timing would poison the
+        cost model's online refit); value-based convergence widths are
+        always recorded."""
         sharded = device_loop and self.mesh is not None
-        knn = batched_knn_device if device_loop else batched_knn
-        out: List[Optional[np.ndarray]] = [None] * len(jobs)
+        pend = _PendingJobs(len(jobs))
         if groups is None:
             groups = self._group_jobs(jobs, device_loop)
         # delta-aware QBS keying: while un-folded delta tiles are
@@ -2110,10 +2276,10 @@ class HybridEngine:
                     st, qs_np, kmax, masks_np=masks_np, beam=self.beam,
                     interpret=self.interpret, ws=ws, stats=stats,
                     conv_out=conv, precision=self.precision)
+                knn_pend = _ReadyKnn(rows)
                 s = st.shards
-                w1_eff = max(1, min(
+                w_base = max(1, min(
                     -(-max(1, self.beam // 2) // s), st.t_total))
-                signal = np.maximum(conv[0] - w1_eff, 0)
                 feat_shards, feat_tiles = s, st.t_total
                 feat_cap, feat_dim = st.cap, qs_np.shape[1]
             else:
@@ -2140,46 +2306,55 @@ class HybridEngine:
                 if device_loop:
                     ws = max(self.beam, _next_pow2(seed)) if seed \
                         else None
-                    _, rows = knn(geom, tiles, qs, kmax, masks=masks,
-                                  beam=self.beam,
-                                  interpret=self.interpret,
-                                  planes=planes,
-                                  precision=self.precision,
-                                  ws=ws, stats=stats, conv_out=conv)
-                    w1_eff = max(1, min(max(1, self.beam // 2), l))
-                    signal = np.maximum(conv[0] - w1_eff, 0)
+                    knn_pend = batched_knn_device_async(
+                        geom, tiles, qs, kmax, masks=masks,
+                        beam=self.beam, interpret=self.interpret,
+                        planes=planes, precision=self.precision,
+                        ws=ws, stats=stats, conv_out=conv)
+                    w_base = max(1, min(max(1, self.beam // 2), l))
                 else:
                     beam_eff = max(self.beam,
                                    _next_pow2(self.beam + seed)) \
                         if seed else self.beam
-                    _, rows = knn(geom, tiles, qs, kmax, masks=masks,
-                                  beam=beam_eff,
-                                  interpret=self.interpret,
-                                  planes=planes,
-                                  precision=self.precision,
-                                  stats=stats, conv_out=conv)
-                    w_start = max(1, min(beam_eff, l))
-                    signal = np.maximum(conv[0] - w_start, 0)
+                    _, rows = batched_knn(
+                        geom, tiles, qs, kmax, masks=masks,
+                        beam=beam_eff, interpret=self.interpret,
+                        planes=planes, precision=self.precision,
+                        stats=stats, conv_out=conv)
+                    knn_pend = _ReadyKnn(rows)
+                    w_base = max(1, min(beam_eff, l))
                 feat_shards, feat_tiles = 0, l
                 feat_cap, feat_dim = geom.cap, qs.shape[1]
-            width = int(np.ceil(np.quantile(signal, 0.9))) if len(signal) \
-                else 0
-            stats.knn_group_widths.append((arch, width))
             # calibrated-cost feedback: the group's observed seconds
             # against the same analytic features the planner predicts
             # from (ONE builder, ``cost.knn_plan_features`` — record
             # and predict can never drift)
-            stats.stage_samples.append((
-                costm.knn_kind(device_loop, feat_shards),
-                costm.knn_plan_features(
-                    device_loop=device_loop, shards=feat_shards,
-                    g=len(idxs), k=kmax, beam=self.beam,
-                    tiles=feat_tiles, cap=feat_cap, dim=feat_dim,
-                    precision=self.precision, seed=seed),
-                time.time() - t_g0))
-            for pos, i in enumerate(idxs):
-                out[i] = rows[pos, :jobs[i][0].k]
-        return out  # type: ignore[return-value]
+            kind = costm.knn_kind(device_loop, feat_shards)
+            feats = costm.knn_plan_features(
+                device_loop=device_loop, shards=feat_shards,
+                g=len(idxs), k=kmax, beam=self.beam,
+                tiles=feat_tiles, cap=feat_cap, dim=feat_dim,
+                precision=self.precision, seed=seed)
+
+            def _fin(out, knn_pend=knn_pend, conv=conv, w_base=w_base,
+                     idxs=idxs, arch=arch, kind=kind, feats=feats,
+                     t_g0=t_g0):
+                _, rows = knn_pend.finish()
+                signal = np.maximum(conv[0] - w_base, 0)
+                width = int(np.ceil(np.quantile(signal, 0.9))) \
+                    if len(signal) else 0
+                stats.knn_group_widths.append((arch, width))
+                if record_cost:
+                    stats.stage_samples.append(
+                        (kind, feats, time.time() - t_g0))
+                for pos, i in enumerate(idxs):
+                    out[i] = rows[pos, :jobs[i][0].k]
+
+            if eager:
+                pend.run_now(_fin)
+            else:
+                pend.add(_fin)
+        return pend
 
     # -------------------------------------------------------------- explain
     def vr_tile_estimate(self, vr: Q.VR) -> Tuple[int, int]:
@@ -2206,8 +2381,71 @@ class HybridEngine:
         archetype) supplies the pre-derived job layout, KNN grouping, and
         QBS beam seeds: plannability checks and grouping are skipped, and
         the job layout is cross-checked against this batch's walk."""
+        device_loop = self._resolve_loop(device_loop, plan)
+        t0 = time.time()
+        stats = EngineStats(queries=len(queries),
+                            shards=(self.shards or 0) if device_loop
+                            else 0)
+        pred_masks = self._stage_batch(queries, stats, device_loop, plan)
+        jobs, groups, seeds = self._plan_jobs(queries, pred_masks, plan)
+        job_rows = self._run_jobs(jobs, stats, device_loop,
+                                  groups=groups, seeds=seeds)
+        out = self._finish_walk(queries, pred_masks, jobs, job_rows)
+        stats.time_s = time.time() - t0
+        return out, stats
+
+    def execute_batch_async(self, queries: Sequence[Q.Query], *,
+                            device_loop: Optional[bool] = None,
+                            plan: Optional[EnginePlan] = None,
+                            record_cost: bool = False) -> PendingBatch:
+        """Dispatch half of ``execute_batch``: predicate masks and every
+        KNN group's fused first round are ENQUEUED on the device and
+        this returns without waiting for results — per-round state
+        (heaps, bounds, active masks) stays device-resident. The
+        returned ``PendingBatch.materialize()`` runs the deferred
+        epilogue — one explicit fence per KNN group (the (G,)
+        active-mask read whose D2H copy was started at dispatch), the
+        compacted straggler loop, the finishing walk — and yields
+        exactly ``execute_batch``'s (rows, stats).
+
+        Other batches may be dispatched between the two halves: the
+        serving pipeline overlaps chunk i's epilogue and chunk i+2's
+        staging with chunk i+1's device compute. ``record_cost=False``
+        (the default here, unlike the synchronous path) skips the
+        per-stage wall-time cost samples — under overlap a stage's
+        observed seconds include waiting on unrelated enqueued work,
+        which would poison the cost model's online refit. Value-based
+        feedback (convergence widths) is still recorded at
+        materialize time."""
+        device_loop = self._resolve_loop(device_loop, plan)
+        t0 = time.time()
+        stats = EngineStats(queries=len(queries),
+                            shards=(self.shards or 0) if device_loop
+                            else 0)
+        pred_masks = self._stage_batch(queries, stats, device_loop, plan)
+        jobs, groups, seeds = self._plan_jobs(queries, pred_masks, plan)
+        pending = self._dispatch_jobs(jobs, stats, device_loop,
+                                      groups=groups, seeds=seeds,
+                                      eager=False,
+                                      record_cost=record_cost)
+        t_disp = time.time() - t0
+
+        def _materialize():
+            t1 = time.time()
+            job_rows = pending.finish()
+            out = self._finish_walk(queries, pred_masks, jobs, job_rows)
+            # host-side work only: dispatch + epilogue (the overlap
+            # window between the halves is deliberately not counted)
+            stats.time_s = t_disp + (time.time() - t1)
+            return out, stats
+
+        return PendingBatch(_materialize)
+
+    def _resolve_loop(self, device_loop: Optional[bool],
+                      plan: Optional[EnginePlan]) -> bool:
+        """Effective loop flag + cached-plan validation (shared by the
+        sync and async batch entry points)."""
         if plan is not None:
-            device_loop = plan.device_loop
             # only the device loop executes sharded; host-loop (oracle)
             # plans always carry shards=0 and are valid on any engine
             want = (self.shards or 0) if plan.device_loop else 0
@@ -2222,12 +2460,16 @@ class HybridEngine:
                     f"{plan.precision!r} but this engine runs "
                     f"precision={self.precision!r} "
                     f"(stale or mis-keyed plan cache)")
-        elif device_loop is None:
-            device_loop = self.device_loop
-        t0 = time.time()
-        stats = EngineStats(queries=len(queries),
-                            shards=(self.shards or 0) if device_loop
-                            else 0)
+            return plan.device_loop
+        if device_loop is None:
+            return self.device_loop
+        return device_loop
+
+    def _stage_batch(self, queries: Sequence[Q.Query], stats: EngineStats,
+                     device_loop: bool, plan: Optional[EnginePlan]
+                     ) -> Dict[Q.Query, np.ndarray]:
+        """Plannability checks (planless batches only) + predicate-mask
+        stage — the shared front half of both batch entry points."""
         if plan is None:
             for q in queries:
                 if not plannable(q):
@@ -2235,8 +2477,14 @@ class HybridEngine:
                         f"query not plannable for the batched engine "
                         f"(use MQRLD.execute_batch for scalar fallback): "
                         f"{q!r}")
-        pred_masks = self._predicate_masks(queries, stats,
-                                           tile_route=device_loop)
+        return self._predicate_masks(queries, stats,
+                                     tile_route=device_loop)
+
+    def _plan_jobs(self, queries: Sequence[Q.Query],
+                   pred_masks: Dict[Q.Query, np.ndarray],
+                   plan: Optional[EnginePlan]):
+        """Walk the batch into V.K jobs and cross-check a cached plan's
+        job layout against them. Returns (jobs, groups, seeds)."""
         jobs: List[Tuple[Q.VK, Optional[jax.Array]]] = []
         ctr = [0]
         for q in queries:
@@ -2250,8 +2498,13 @@ class HybridEngine:
                     f"(stale or mis-keyed plan cache): plan expects "
                     f"{plan.job_specs}, walk produced {got}")
             groups, seeds = plan.groups, plan.seeds
-        job_rows = self._run_jobs(jobs, stats, device_loop,
-                                  groups=groups, seeds=seeds)
+        return jobs, groups, seeds
+
+    def _finish_walk(self, queries: Sequence[Q.Query],
+                     pred_masks: Dict[Q.Query, np.ndarray], jobs,
+                     job_rows: List[np.ndarray]) -> List[np.ndarray]:
+        """Finishing pass: substitute job rows into each query's mask
+        walk (host numpy) — the shared back half of both entry points."""
         out: List[np.ndarray] = []
         ctr = [0]
         for q in queries:
@@ -2262,5 +2515,4 @@ class HybridEngine:
                 continue
             m = self._walk(q, None, pred_masks, jobs, job_rows, ctr)
             out.append(np.nonzero(m)[0].astype(np.int64))
-        stats.time_s = time.time() - t0
-        return out, stats
+        return out

@@ -215,6 +215,30 @@ def _knn_group_features(eng, grp: KnnGroupSpec, device_loop: bool,
 # ---------------------------------------------------------------------------
 # Executable plan (skeleton bound to one batch's constants)
 # ---------------------------------------------------------------------------
+class PendingExecution:
+    """Deferred epilogue of ``ExecutablePlan.execute_async()``.
+
+    Holds the dispatched batch's device-resident state (via the
+    engine's ``PendingBatch``) plus the planner-level epilogue: scalar
+    fallbacks and the QBS feedback writes, all funneled into
+    ``materialize()``. Idempotent — repeated calls return the same
+    (results, stats) and record feedback exactly once. The ONLY device
+    fences the batch ever takes after dispatch happen inside
+    ``materialize()``, which is what lets a serving pipeline overlap
+    this batch's device compute with other chunks' host stages."""
+
+    __slots__ = ("_fn", "_res")
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._res = None
+
+    def materialize(self) -> Tuple[List[np.ndarray], "EngineStats"]:
+        if self._res is None:
+            self._res = self._fn()
+        return self._res
+
+
 class ExecutablePlan:
     """A ``LogicalPlan`` bound to one batch of queries, ready to run.
 
@@ -329,6 +353,75 @@ class ExecutablePlan:
         for sig, (q, cnt) in reps.items():
             p.qbs.record_workload(sig, q, cnt)
         return results, stats  # type: ignore[return-value]
+
+    # ------------------------------------------------------- execute_async
+    def execute_async(self, *, record: bool = True) -> "PendingExecution":
+        """Dispatch half of ``execute()`` for the serving pipeline.
+
+        Stage/fence contract: this call ENQUEUES the engine fragments'
+        device work (predicate masks + each KNN group's fused first
+        round) and returns immediately — no host sync is taken, and the
+        per-round state stays device-resident. The returned
+        ``PendingExecution.materialize()`` runs the deferred epilogue:
+        one explicit fence per KNN group (the (G,) active-mask read,
+        whose D2H copy was started at dispatch), straggler rounds, the
+        finishing walk, scalar fallbacks, and ALL QBS feedback writes
+        (convergence widths + workload ring) — funneled into the
+        epilogue so ring mutation happens on the stage that retires the
+        chunk, never mid-overlap. Results are identical to
+        ``execute()``.
+
+        What this path deliberately does NOT record: per-stage
+        wall-time cost samples (``record_cost=False`` on the engine) —
+        with other chunks enqueued between dispatch and materialize, a
+        stage's observed seconds include unrelated waiting and would
+        poison the calibrated cost model's online refit. The serial
+        ``execute()`` remains the cost model's sample source.
+        ``record=False`` additionally skips convergence/workload/mp
+        recording entirely — used by pipeline shape prewarming so dummy
+        executions never pollute the query-aware feedback loops."""
+        lp = self.logical
+        p = self.session.platform
+        t0 = time.time()
+        pending = None
+        if lp.engine_idx:
+            eng_plan = EnginePlan(
+                device_loop=lp.device_loop, job_specs=lp.job_specs,
+                groups=lp.groups, seeds=self._seeds(),
+                shards=lp.shards, precision=self.session.precision)
+            eng = self.session.engine(lp.shards)
+            pending = eng.execute_batch_async(
+                [self.norm[i] for i in lp.engine_idx], plan=eng_plan)
+        t_disp = time.time() - t0
+
+        def _materialize() -> Tuple[List[np.ndarray], EngineStats]:
+            t1 = time.time()
+            results: List[Optional[np.ndarray]] = [None] * len(self.norm)
+            if pending is not None:
+                rows, stats = pending.materialize()
+                for i, r in zip(lp.engine_idx, rows):
+                    results[i] = r
+                if record:
+                    for arch, width in stats.knn_group_widths:
+                        p.qbs.record_convergence(arch, width)
+                    self.session.mp_scanned += stats.mp_scanned
+                    self.session.mp_rescued += stats.mp_rescued
+            else:
+                stats = EngineStats()
+            stats.queries = len(self.norm)
+            for i in lp.scalar_idx:
+                results[i] = p.execute(self.norm[i], record=False)[0]
+            stats.time_s = t_disp + (time.time() - t1)
+            if record:
+                reps: Dict[str, list] = {}
+                for q, frag in zip(self.norm, lp.fragments):
+                    slot = reps.setdefault(frag.signature, [q, 0])
+                    slot[1] += 1
+                for sig, (q, cnt) in reps.items():
+                    p.qbs.record_workload(sig, q, cnt)
+            return results, stats  # type: ignore[return-value]
+
+        return PendingExecution(_materialize)
 
     # ------------------------------------------------------------- explain
     def explain(self) -> dict:

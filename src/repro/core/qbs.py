@@ -38,6 +38,7 @@ The table feeds five consumers:
 from __future__ import annotations
 
 import json
+import threading
 import time
 from dataclasses import dataclass, field, asdict
 from typing import Dict, List, Optional, Sequence
@@ -125,6 +126,15 @@ class QBSTable:
         self.cost_total: int = 0
         self.sample_rate = sample_rate
         self._rng = np.random.default_rng(seed)
+        # ring-mutation lock: every record_* append/trim and every
+        # multi-ring reader (snapshot, quantiles, cost samples) runs
+        # under it, so recording from a pipelined epilogue — or any
+        # stage moved off the poll thread later — can never interleave
+        # a trim with an append, lose a ``cost_total`` increment (the
+        # refit cursor must stay monotone and exact), or snapshot a
+        # half-mutated ring. Reentrant: ``snapshot`` reads
+        # ``latency_quantiles`` under its own hold.
+        self._lock = threading.RLock()
 
     def __len__(self):
         return len(self.rows)
@@ -145,9 +155,10 @@ class QBSTable:
                      recall_at_k=float(recall_at_k), cbr=float(cbr),
                      query_time_s=float(query_time_s),
                      accuracy=float(accuracy), task=task, ts=time.time())
-        self.rows.append(row)
-        if len(self.rows) > _ROWS_KEEP:
-            del self.rows[:len(self.rows) - _ROWS_KEEP]
+        with self._lock:
+            self.rows.append(row)
+            if len(self.rows) > _ROWS_KEEP:
+                del self.rows[:len(self.rows) - _ROWS_KEEP]
         return row
 
     # ------------------------------------------- plan-parameter feedback
@@ -157,10 +168,11 @@ class QBSTable:
         "no tail beyond the first round" — and must be stored as such:
         clamping it up would put a floor under the p90 and the seed
         could never decay (see ``HybridEngine._run_jobs``)."""
-        ws = self.convergence.setdefault(archetype, [])
-        ws.append(int(max(0, width)))
-        if len(ws) > _CONVERGENCE_KEEP:
-            del ws[:len(ws) - _CONVERGENCE_KEEP]
+        with self._lock:
+            ws = self.convergence.setdefault(archetype, [])
+            ws.append(int(max(0, width)))
+            if len(ws) > _CONVERGENCE_KEEP:
+                del ws[:len(ws) - _CONVERGENCE_KEEP]
 
     def convergence_width(self, archetype: str,
                           default: Optional[int] = None) -> Optional[int]:
@@ -172,10 +184,12 @@ class QBSTable:
         no-tail runs means the engine's unseeded widths already
         suffice, so the engine should run unseeded rather than keep a
         stale widened beam."""
-        ws = self.convergence.get(archetype)
-        if not ws:
-            return default
-        w = int(np.ceil(np.quantile(np.asarray(ws, np.float64), 0.9)))
+        with self._lock:
+            ws = self.convergence.get(archetype)
+            if not ws:
+                return default
+            w = int(np.ceil(np.quantile(np.asarray(ws, np.float64),
+                                        0.9)))
         return w if w > 0 else default
 
     # ------------------------------------------------ tuner feedback
@@ -185,11 +199,13 @@ class QBSTable:
         batch's count). The ring keeps the most recent
         ``_WORKLOAD_KEEP`` ASTs; ``mix`` accumulates execution counts
         so ``snapshot()`` can weight signatures by actual traffic."""
-        ring = self.workload.setdefault(signature, [])
-        ring.append(query)
-        if len(ring) > _WORKLOAD_KEEP:
-            del ring[:len(ring) - _WORKLOAD_KEEP]
-        self.mix[signature] = self.mix.get(signature, 0) + max(1, int(n))
+        with self._lock:
+            ring = self.workload.setdefault(signature, [])
+            ring.append(query)
+            if len(ring) > _WORKLOAD_KEEP:
+                del ring[:len(ring) - _WORKLOAD_KEEP]
+            self.mix[signature] = self.mix.get(signature, 0) \
+                + max(1, int(n))
 
     def snapshot(self, max_queries: int = 32) -> QBSSnapshot:
         """Export the query-aware state for the background tuner.
@@ -200,24 +216,27 @@ class QBSTable:
         replays the sample in order measures the dominant traffic even
         under a tight evaluation budget. All containers are copies; the
         snapshot stays consistent while serving continues to record."""
-        sigs = sorted(self.mix, key=lambda s: -self.mix[s])
-        rings = {s: list(reversed(self.workload.get(s, []))) for s in sigs}
-        sample: List = []
-        i = 0
-        while len(sample) < max_queries and any(rings.values()):
-            sig = sigs[i % len(sigs)]
-            if rings[sig]:
-                sample.append(rings[sig].pop(0))
-            i += 1
-            if i > max_queries * max(1, len(sigs)):
-                break
-        return QBSSnapshot(
-            ts=time.time(),
-            mix=dict(self.mix),
-            convergence={k: list(v) for k, v in self.convergence.items()},
-            latency={k: q for k in self.latency
-                     if (q := self.latency_quantiles(k)) is not None},
-            workload=sample, n_rows=len(self.rows))
+        with self._lock:
+            sigs = sorted(self.mix, key=lambda s: -self.mix[s])
+            rings = {s: list(reversed(self.workload.get(s, [])))
+                     for s in sigs}
+            sample: List = []
+            i = 0
+            while len(sample) < max_queries and any(rings.values()):
+                sig = sigs[i % len(sigs)]
+                if rings[sig]:
+                    sample.append(rings[sig].pop(0))
+                i += 1
+                if i > max_queries * max(1, len(sigs)):
+                    break
+            return QBSSnapshot(
+                ts=time.time(),
+                mix=dict(self.mix),
+                convergence={k: list(v)
+                             for k, v in self.convergence.items()},
+                latency={k: q for k in self.latency
+                         if (q := self.latency_quantiles(k)) is not None},
+                workload=sample, n_rows=len(self.rows))
 
     # --------------------------------------------- serving-tier feedback
     def record_latency(self, archetype: str, seconds: float, n: int = 1):
@@ -228,20 +247,22 @@ class QBSTable:
         server's "can this request still make its deadline if compute
         started now?" check, and queue-inclusive samples would make
         that estimate feed back on itself under load."""
-        ls = self.latency.setdefault(archetype, [])
-        ls.extend([float(seconds)] * max(1, int(n)))
-        if len(ls) > _LATENCY_KEEP:
-            del ls[:len(ls) - _LATENCY_KEEP]
+        with self._lock:
+            ls = self.latency.setdefault(archetype, [])
+            ls.extend([float(seconds)] * max(1, int(n)))
+            if len(ls) > _LATENCY_KEEP:
+                del ls[:len(ls) - _LATENCY_KEEP]
 
     def latency_quantiles(self, archetype: str) -> Optional[Dict[str, float]]:
         """{p50, p99, n} of recorded per-request service seconds for an
         archetype, or None when it was never served."""
-        ls = self.latency.get(archetype)
-        if not ls:
-            return None
-        a = np.asarray(ls, np.float64)
-        return {"p50": float(np.quantile(a, 0.5)),
-                "p99": float(np.quantile(a, 0.99)), "n": len(ls)}
+        with self._lock:
+            ls = self.latency.get(archetype)
+            if not ls:
+                return None
+            a = np.asarray(ls, np.float64)
+            return {"p50": float(np.quantile(a, 0.5)),
+                    "p99": float(np.quantile(a, 0.99)), "n": len(ls)}
 
     # ------------------------------------------------ cost-model feedback
     def record_cost(self, kind: str, features: Sequence[float],
@@ -253,26 +274,28 @@ class QBSTable:
         ``repro.core.cost.CostModel`` refits from the rings so the
         model recalibrates online as the workload (or host load)
         drifts."""
-        ring = self.cost.setdefault(kind, [])
-        ring.append([[float(x) for x in features], float(seconds)])
-        self.cost_total += 1
-        if len(ring) > _COST_KEEP:
-            del ring[:len(ring) - _COST_KEEP]
+        with self._lock:
+            ring = self.cost.setdefault(kind, [])
+            ring.append([[float(x) for x in features], float(seconds)])
+            self.cost_total += 1
+            if len(ring) > _COST_KEEP:
+                del ring[:len(ring) - _COST_KEEP]
 
     def cost_samples(self, kind: str):
         """(X, y) arrays of recorded samples for one stage kind, or
         None when the kind was never executed (or feature lengths
         drifted — stale rings from an older feature version are
         ignored, not mis-fit)."""
-        ring = self.cost.get(kind)
-        if not ring:
-            return None
-        f = len(ring[-1][0])
-        rows = [(x, s) for x, s in ring if len(x) == f]
-        if not rows:
-            return None
-        return (np.asarray([x for x, _ in rows], np.float64),
-                np.asarray([s for _, s in rows], np.float64))
+        with self._lock:
+            ring = self.cost.get(kind)
+            if not ring:
+                return None
+            f = len(ring[-1][0])
+            rows = [(x, s) for x, s in ring if len(x) == f]
+            if not rows:
+                return None
+            return (np.asarray([x for x, _ in rows], np.float64),
+                    np.asarray([s for _, s in rows], np.float64))
 
     def cost_observed(self, kind: str) -> Optional[float]:
         """Median observed seconds over the kind's recorded ring — the
@@ -281,10 +304,11 @@ class QBSTable:
         carry jit compile time, an order-of-magnitude outlier that
         would make the mean unrepresentative of steady state. None
         when never executed."""
-        ring = self.cost.get(kind)
-        if not ring:
-            return None
-        return float(np.median([s for _, s in ring]))
+        with self._lock:
+            ring = self.cost.get(kind)
+            if not ring:
+                return None
+            return float(np.median([s for _, s in ring]))
 
     # ------------------------------------------------------------ consumers
     def extrinsic_score(self, task: Optional[str] = None,
@@ -319,14 +343,19 @@ class QBSTable:
         # the row window is part of the persisted contract: at most
         # _ROWS_KEEP rows are ever written (record() bounds the live
         # list, so this is a restatement, not a second policy)
-        with open(path, "w") as f:
-            json.dump({"rows": [asdict(r) for r in
+        with self._lock:
+            payload = {"rows": [asdict(r) for r in
                                 self.rows[-_ROWS_KEEP:]],
-                       "convergence": self.convergence,
-                       "latency": self.latency,
-                       "cost": self.cost,
+                       "convergence": {k: list(v) for k, v in
+                                       self.convergence.items()},
+                       "latency": {k: list(v) for k, v in
+                                   self.latency.items()},
+                       "cost": {k: [list(s) for s in v] for k, v in
+                                self.cost.items()},
                        "cost_total": self.cost_total,
-                       "rows_keep": _ROWS_KEEP}, f, indent=1)
+                       "rows_keep": _ROWS_KEEP}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "QBSTable":

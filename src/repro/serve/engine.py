@@ -34,6 +34,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import query as Q
 from repro.models import build_model
+from repro.serve.pipeline import ChunkPipeline
 
 # Bound on the signature memo in RetrievalServer: keys are predicate
 # archetype strings (constants elided), so the live population is the
@@ -323,6 +324,23 @@ class RetrievalServer:
     (freshness-exact; see its docstring for the ordering and
     exception-safety contract).
 
+    Pipelined execution (``pipeline_depth``): depth 1 (the default) is
+    the serial loop above, byte-identical to the pre-pipeline server.
+    Depth >= 2 runs chunks through ``repro.serve.pipeline
+    .ChunkPipeline`` — embed/stage, async device dispatch, and the
+    rank/record epilogue become overlapping stages with up to ``depth``
+    chunks in flight, for a sustained-QPS gain at identical per-request
+    rows (each chunk's results are exactly the serial loop's; only WHEN
+    futures resolve shifts — a full-group auto-flush dispatches without
+    retiring, and ``poll``/``flush``/``result()`` retire in FIFO
+    order). Every serial contract carries over: in-order resolution per
+    request, all-or-nothing chunk failure with retryable futures,
+    bounded admission (backpressure retires in-flight work), and
+    deadline shedding (in-flight chunks are no longer sheddable — they
+    are already computing). ``drain()`` is the explicit quiescent
+    barrier; ``append`` drains first, and reopt steps run only when the
+    pipe is empty, so generation swaps still land between micro-batches.
+
     Online re-optimization: ``attach_reopt(controller)`` hands the
     server a ``repro.core.reopt.ReoptController``; ``poll()`` then
     drives one ``controller.step()`` at every idle point and after
@@ -348,6 +366,7 @@ class RetrievalServer:
                  max_queue: Optional[int] = None,
                  max_delay_ms: float = 0.0,
                  adaptive_window: bool = False,
+                 pipeline_depth: int = 1,
                  clock: Callable[[], float] = time.monotonic):
         self.platform = platform
         self.embedder = embedder
@@ -382,6 +401,15 @@ class RetrievalServer:
         self._pending: List[_Pending] = []   # admission FIFO
         self._sig_cache: Dict[Tuple, str] = {}
         self.reopt = None                    # see attach_reopt()
+        # pipelined executor (class doc): depth 1 = the serial loop
+        # (no pipeline object at all — the pre-pipeline code path,
+        # byte-identical); depth >= 2 overlaps chunk stages
+        self.pipeline_depth = int(pipeline_depth)
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self._pipe = ChunkPipeline(self, self.pipeline_depth) \
+            if self.pipeline_depth > 1 else None
+        self._inflight_ids: set = set()      # id(_Pending) of dispatched
         # serving counters + per-signature end-to-end latencies
         self.n_submitted = 0
         self.n_served = 0
@@ -487,7 +515,15 @@ class RetrievalServer:
         Exception safety: embedding or validation failures propagate
         WITHOUT touching the platform, the pending queue, or any
         future — the next ``flush()`` serves exactly what it would
-        have served before the failed call."""
+        have served before the failed call.
+
+        Pipelined mode first ``drain()``s every in-flight chunk, so
+        the append still lands at a quiescent boundary: chunks
+        dispatched before this call resolve against the pre-append
+        state they were planned on, requests still queued observe the
+        appended rows at their flush epoch — the serial contract,
+        unchanged."""
+        self.drain()
         vectors = dict(vectors or {})
         if tokens is not None:
             if attr is None:
@@ -499,7 +535,53 @@ class RetrievalServer:
     # ------------------------------------------------------------- async
     @property
     def queue_depth(self) -> int:
-        return len(self._pending)
+        return len(self._pending) + len(self._inflight_ids)
+
+    @property
+    def inflight_chunks(self) -> int:
+        """Chunks currently dispatched in the pipeline (0 in serial
+        mode). Their requests still count in ``queue_depth`` until
+        their epilogue retires them."""
+        return 0 if self._pipe is None else self._pipe.inflight
+
+    def _pickable(self) -> List[_Pending]:
+        """Pending entries NOT currently in a dispatched chunk — what
+        shedding, chunk picking, and due/window checks operate on.
+        Dispatched entries are REMOVED from ``_pending`` by
+        ``_mark_inflight`` (and re-queued on chunk failure), so this is
+        always the whole queue with no per-call filtering — the
+        pipelined scheduler's scans cost exactly what the serial
+        loop's do."""
+        return self._pending
+
+    def _mark_inflight(self, chunk: Sequence[_Pending]) -> None:
+        """Move a dispatched chunk's entries out of the pending queue
+        (one O(queue) rebuild per chunk — the same cost the serial
+        epilogue's dequeue pays) into the in-flight id set."""
+        ids = set(map(id, chunk))
+        self._inflight_ids |= ids
+        self._pending = [p for p in self._pending if id(p) not in ids]
+
+    def _unmark_inflight(self, chunk: Sequence[_Pending], *,
+                         requeue: bool = False) -> None:
+        """Drop a chunk from the in-flight set. ``requeue=True``
+        (chunk FAILED before its mutation point) re-inserts its entries
+        at the FRONT of the pending queue — they are the oldest work,
+        so FIFO order is preserved and the next flush retries them."""
+        self._inflight_ids.difference_update(map(id, chunk))
+        if requeue:
+            self._pending[:0] = chunk
+
+    def drain(self) -> int:
+        """Pipeline barrier: materialize every in-flight chunk
+        (resolving its futures) WITHOUT dispatching new work. No-op in
+        serial mode. After ``drain()`` no chunk state remains on the
+        device, so ``append()`` and a reopt ``swap()`` happen at the
+        same quiescent between-micro-batches boundary the serial loop
+        guarantees. Returns requests served by the drain."""
+        if self._pipe is None:
+            return 0
+        return self._pipe.drain()
 
     def submit(self, request: RetrievalRequest, *,
                now: Optional[float] = None) -> RetrievalFuture:
@@ -515,7 +597,7 @@ class RetrievalServer:
         dropped) until the new request fits."""
         t = self._clock() if now is None else now
         self._shed_expired(t)
-        while len(self._pending) >= self.max_queue:
+        while self.queue_depth >= self.max_queue:
             self.flush_one()          # backpressure: execute, never drop
         fut = RetrievalFuture(self)
         dl = None if request.deadline_ms is None \
@@ -526,13 +608,28 @@ class RetrievalServer:
         self.n_submitted += 1
         if self.coalesce:
             counts: Dict[str, int] = {}
-            for p in self._pending:
+            for p in self._pickable():
                 counts[p.sig] = counts.get(p.sig, 0) + 1
             if any(c >= self.batch_size for c in counts.values()):
-                self.flush_one()
-        elif len(self._pending) >= self.batch_size:
-            self.flush_one()
+                self._autoflush()
+        elif len(self._pickable()) >= self.batch_size:
+            self._autoflush()
         return fut
+
+    def _autoflush(self) -> None:
+        """A full micro-batch exists at submit time. Serial mode runs
+        it to completion (``flush_one``). Pipelined mode only
+        DISPATCHES it (retiring first when the pipe is full): the
+        submit path pays embed+enqueue, the device computes in the
+        background, and the epilogue lands on a later
+        ``poll``/``flush`` — this is where the overlap engages under
+        sustained load."""
+        if self._pipe is None:
+            self.flush_one()
+            return
+        if self._pipe.inflight >= self._pipe.depth:
+            self._pipe.retire()
+        self._pipe.dispatch(self._next_chunk())
 
     def result(self, future: RetrievalFuture) -> RetrievalResult:
         """Resolve a future (flushing pending work if needed)."""
@@ -542,7 +639,20 @@ class RetrievalServer:
         """Run every pending request, one micro-batch at a time. A
         chunk is dequeued only after it executed (see the class retry
         contract): on a raise, the failed chunk's requests stay pending
-        and the next flush retries them."""
+        and the next flush retries them. Pipelined mode keeps filling
+        free stage slots and retiring FIFO until both the queue and the
+        pipe are empty."""
+        if self._pipe is not None:
+            while True:
+                self._shed_expired(self._clock())
+                if self._pipe.inflight >= self._pipe.depth:
+                    self._pipe.retire()
+                elif self._pickable():
+                    self._pipe.dispatch(self._next_chunk())
+                elif self._pipe.inflight:
+                    self._pipe.retire()
+                else:
+                    return
         while self._pending:
             self.flush_one()
 
@@ -550,8 +660,16 @@ class RetrievalServer:
         """Shed expired work, then execute ONE micro-batch (the chunk
         ``_next_chunk`` picks), regardless of the batching window.
         Returns the number of requests served (0 when shedding emptied
-        the queue)."""
+        the queue). Pipelined mode dispatches one chunk when a stage
+        slot is free, then retires the oldest in-flight chunk — one
+        call still makes one chunk's worth of progress, so the
+        backpressure loop in ``submit`` shrinks the queue each call."""
         self._shed_expired(self._clock())
+        if self._pipe is not None:
+            if self._pickable() and \
+                    self._pipe.inflight < self._pipe.depth:
+                self._pipe.dispatch(self._next_chunk())
+            return self._pipe.retire()
         if not self._pending:
             return 0
         chunk = self._next_chunk()
@@ -571,9 +689,19 @@ class RetrievalServer:
         also drives one ``controller.step()`` — after the micro-batch
         when one ran (the swap-safe boundary), otherwise at the idle
         point — so background tuning, beside-builds, and generation
-        swaps make progress exactly when the serving loop has slack."""
+        swaps make progress exactly when the serving loop has slack.
+
+        Pipelined mode: fill free stage slots with due chunks, then
+        retire the oldest in-flight chunk — the host's dispatch work
+        (embed/stage) for new chunks runs while the device computes the
+        chunks already enqueued. Reopt steps (and shape prewarming)
+        only run when the pipe is EMPTY: a generation swap must land at
+        a quiescent boundary, and an in-flight chunk's epilogue would
+        otherwise rank against post-swap state."""
         now = self._clock()
         self._shed_expired(now)
+        if self._pipe is not None:
+            return self._poll_pipelined(now)
         if not self._pending or not self._due(now):
             self._reopt_step()
             return 0
@@ -581,6 +709,24 @@ class RetrievalServer:
         self._run_chunk(chunk)
         self._reopt_step()
         return len(chunk)
+
+    def _poll_pipelined(self, now: float) -> int:
+        """One pipelined scheduling step (see ``poll``): dispatch every
+        due chunk a free stage slot can take, retire the FIFO head, and
+        use genuinely idle ticks for shape prewarming / reopt."""
+        pipe = self._pipe
+        while (pipe.inflight < pipe.depth and self._pickable()
+               and self._due(now)):
+            pipe.dispatch(self._next_chunk())
+        if pipe.inflight:
+            served = pipe.retire()
+            if pipe.inflight == 0:
+                self._reopt_step()
+            return served
+        # idle: burn the free stage slot on prewarming, else reopt
+        if not pipe.prewarm_step():
+            self._reopt_step()
+        return 0
 
     def _window_s(self, sig: str) -> float:
         """Batching window (seconds) for one signature. Static mode:
@@ -602,12 +748,15 @@ class RetrievalServer:
         """Earliest clock time at which some pending entry exhausts its
         signature's batching window (or its deadline, whichever is
         sooner) — the wake-up time for a drive loop whose ``poll``
-        returned 0. None when nothing is pending."""
-        if not self._pending:
+        returned 0. None when nothing is pending (entries already in
+        flight through the pipeline don't count — they are served by
+        the retire half of the next ``poll``, not by a window)."""
+        avail = self._pickable()
+        if not avail:
             return None
         win: Dict[str, float] = {}
         due = []
-        for p in self._pending:
+        for p in avail:
             if p.sig not in win:
                 win[p.sig] = self._window_s(p.sig)
             t = p.t_submit + win[p.sig]
@@ -618,17 +767,19 @@ class RetrievalServer:
         """Is a micro-batch worth running right now? (queue non-empty
         is the caller's precondition) Per-signature windows: an entry
         whose signature's window is exhausted (or zero) makes the
-        queue due, as does a deadline inside that window."""
-        if len(self._pending) >= self.batch_size:
+        queue due, as does a deadline inside that window. Only entries
+        NOT already in flight count (serial mode: all of them)."""
+        avail = self._pickable()
+        if len(avail) >= self.batch_size:
             return True
         if self.coalesce:
             counts: Dict[str, int] = {}
-            for p in self._pending:
+            for p in avail:
                 counts[p.sig] = counts.get(p.sig, 0) + 1
                 if counts[p.sig] >= self.batch_size:
                     return True
         win: Dict[str, float] = {}   # one QBS lookup per sig per pass
-        for p in self._pending:
+        for p in avail:
             if p.sig not in win:
                 win[p.sig] = self._window_s(p.sig)
             w = win[p.sig]
@@ -673,10 +824,15 @@ class RetrievalServer:
         passed — or whose archetype's QBS p50 service time says it
         cannot finish in the remaining budget even starting now.
         Shedding is an explicit resolution (``shed=True``), never a
-        drop: counters and the future both record it."""
+        drop: counters and the future both record it. Entries already
+        in flight through the pipeline are never shed — their compute
+        is already enqueued on device, so serving the result costs
+        less than wasting it."""
         keep: List[_Pending] = []
         est: Dict[str, float] = {}   # one QBS lookup per sig per pass
         for p in self._pending:
+            # in-flight entries are not in _pending, so they are never
+            # shed — their compute is already enqueued on device
             if p.deadline is None:
                 keep.append(p)
                 continue
@@ -698,18 +854,20 @@ class RetrievalServer:
         quantized to powers of two (<= ``batch_size``) so the compiled
         shape universe stays |signatures| x log2(batch_size). Legacy
         FIFO: the first ``batch_size`` entries regardless of signature.
-        Entries are SELECTED here, not removed — ``_run_chunk`` dequeues
-        only after the batch succeeded."""
+        Entries are SELECTED here, not removed — ``_finish_chunk``
+        dequeues only after the batch succeeded. Pipelined mode picks
+        only entries not already in flight (``_pickable``)."""
+        avail = self._pickable()
         if not self.coalesce:
-            return self._pending[:self.batch_size]
+            return avail[:self.batch_size]
         groups: Dict[str, List[_Pending]] = {}
-        for p in self._pending:           # FIFO order within each group
+        for p in avail:                   # FIFO order within each group
             groups.setdefault(p.sig, []).append(p)
         full = [g for g in groups.values() if len(g) >= self.batch_size]
         if full:
             grp = min(full, key=lambda g: g[0].t_submit)
         else:
-            grp = groups[self._pending[0].sig]
+            grp = groups[avail[0].sig]
         # full groups always run at batch_size itself; partial groups
         # round DOWN to a power of two (the leftovers stay queued for
         # the next micro-batch), so per signature the engine only ever
@@ -734,8 +892,18 @@ class RetrievalServer:
             queries, device_loop=self.device_loop).execute()
         ranked = [self._ranked(req, e, r)
                   for req, e, r in zip(reqs, emb, rows)]
+        self._finish_chunk(chunk, queries, ranked, t0)
+
+    def _finish_chunk(self, chunk: Sequence[_Pending], queries,
+                      ranked, t0: float) -> None:
+        """The shared mutation point for a fully-computed chunk:
+        resolve futures, dequeue entries, record serving stats. Both
+        the serial loop (``_run_chunk``) and the pipeline's retire
+        stage (``ChunkPipeline.retire``) end here, so QBS latency /
+        e2e-ring writes are funneled through one code path regardless
+        of execution mode. Nothing here can raise (plain list/dict
+        bookkeeping), preserving the all-or-nothing contract."""
         t1 = self._clock()
-        # ------------------------------------------------ mutation point
         per_req_s = (t1 - t0) / max(1, len(chunk))
         sig_counts: Dict[str, int] = {}
         for p, rk, q in zip(chunk, ranked, queries):
@@ -776,7 +944,9 @@ class RetrievalServer:
                            "n": len(ls)}
         return {"submitted": self.n_submitted, "served": self.n_served,
                 "shed": self.n_shed, "batches": self.n_batches,
-                "queue_depth": len(self._pending),
+                "queue_depth": self.queue_depth,
+                "pipeline_depth": self.pipeline_depth,
+                "inflight_chunks": self.inflight_chunks,
                 "generation": self.platform.generation,
                 "build_id": self.platform.build_id,
                 "reopt": None if self.reopt is None
